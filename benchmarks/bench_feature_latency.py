@@ -1,0 +1,120 @@
+"""Paper §3.3 (fraud detection): feature-computation latency & QPS.
+
+The paper's table: naive Spark ≈ 200 ms, tuned in-house Spark ≈ 50 ms,
+FeatInsight < 20 ms at QPS > 1000.  The reproducible claim is the
+*relative ordering and magnitude gap* between
+
+  1. ``naive``    — per-request recompute over the full history table
+                    (what a batch engine does when asked point queries),
+  2. ``tuned``    — vectorized masked scan over the per-key ring buffer
+                    (online store, ``mode='naive'``: right data layout,
+                    no pre-aggregation),
+  3. ``featinsight`` — pre-aggregated bucket merge (``mode='preagg'``,
+                    the paper's long-window pre-aggregation).
+
+All three compute the identical 8-feature fraud view; equality is
+asserted before timing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import (
+    Col, FeatureView, OfflineEngine, OnlineFeatureStore,
+    range_window, rows_window, w_count, w_max, w_mean, w_std, w_sum,
+)
+from repro.data.synthetic import FRAUD_SCHEMA, fraud_stream
+
+HIST_ROWS = 20_000
+NUM_CARDS = 256
+Q = 64  # request batch
+
+
+def fraud_view() -> FeatureView:
+    amt = Col("amount")
+    w1h, w6h = range_window(3600, bucket=64), range_window(21600, bucket=64)
+    return FeatureView(
+        name="fraud_features",
+        schema=FRAUD_SCHEMA,
+        features={
+            "amt_sum_1h": w_sum(amt, w1h),
+            "amt_mean_1h": w_mean(amt, w1h),
+            "amt_std_1h": w_std(amt, w1h),
+            "tx_count_1h": w_count(amt, w1h),
+            "amt_sum_6h": w_sum(amt, w6h),
+            "amt_max_6h": w_max(amt, w6h),
+            "tx_count_50": w_count(amt, rows_window(50)),
+            "big_ratio_1h": w_count(amt > 100.0, w1h)
+            / (1.0 + w_count(amt, w1h)),
+        },
+    )
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    hist, _ = fraud_stream(rng, HIST_ROWS, num_cards=NUM_CARDS, t_max=200_000)
+    view = fraud_view()
+
+    # online stores, pre-loaded with history (sorted by key,ts as required)
+    order = np.lexsort((hist["ts"], hist["card"]))
+    hist_sorted = {c: v[order] for c, v in hist.items()}
+    store = OnlineFeatureStore(
+        view, num_keys=NUM_CARDS, capacity=256, num_buckets=512, bucket_size=64
+    )
+    store.ingest(hist_sorted)
+
+    # request batch: late timestamps, distinct cards (rows of the same key
+    # at the same instant would see each other offline but not online —
+    # verify_view's unique-key-round semantics, kept here for the equality
+    # gate)
+    req = {
+        "card": rng.permutation(NUM_CARDS)[:Q].astype(np.int32),
+        "ts": np.full(Q, 200_001, np.int32),
+        "amount": rng.gamma(1.5, 60.0, Q).astype(np.float32),
+        "mcc": rng.integers(0, 32, Q).astype(np.int32),
+        "device": rng.integers(0, 8, Q).astype(np.int32),
+        "geo": rng.integers(0, 16, Q).astype(np.int32),
+    }
+
+    # naive engine baseline: append request rows to history, recompute all
+    engine = OfflineEngine()
+
+    def naive():
+        cols = {
+            c: np.concatenate([hist[c], req[c]]) for c in hist
+        }
+        out = engine.compute(view, cols)
+        return {k: v[-Q:] for k, v in out.items()}
+
+    tuned = lambda: store.query(req, mode="naive")
+    fast = lambda: store.query(req, mode="preagg")
+
+    # correctness gate: all three agree on the request rows.  std uses the
+    # composable sum-of-squares form whose f32 cancellation noise floor is
+    # ~sqrt(E[x^2]*eps) ~ 0.05 here, hence the wider atol for that feature.
+    a, b, c = naive(), tuned(), fast()
+    for f in view.features:
+        atol = 0.5 if "std" in f else 1e-2
+        np.testing.assert_allclose(
+            np.asarray(a[f]), np.asarray(b[f]), rtol=2e-4, atol=atol
+        )
+        np.testing.assert_allclose(
+            np.asarray(a[f]), np.asarray(c[f]), rtol=2e-4, atol=atol
+        )
+
+    for name, fn in [("naive", naive), ("tuned", tuned), ("featinsight", fast)]:
+        t = timeit(fn, warmup=2, iters=7)
+        ms = t["median_s"] * 1e3
+        qps = Q / t["median_s"]
+        emit("feature_latency", f"{name}_ms_per_batch{Q}", ms, "ms")
+        emit("feature_latency", f"{name}_qps", qps, "req/s")
+    emit(
+        "feature_latency", "history_rows", HIST_ROWS, "rows",
+        "paper: naive 200ms / tuned 50ms / featinsight <20ms",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Paper §3.2: millisecond-level feature updates / 720M daily orders.
+
+Measures online-store ingest throughput (rows/s) two ways:
+
+* ``fused``      — one jit'd scatter applying a whole micro-batch
+                   (the TPU-native replacement for lock-free CAS),
+* ``row_at_a_time`` — one jit call per row (what naive row-locking
+                   emulation would cost).
+
+720M orders/day = 8333 rows/s sustained; the fused path exceeds that by
+orders of magnitude even on 1 CPU core.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import Col, FeatureView, OnlineFeatureStore, range_window, w_sum
+from repro.data.synthetic import RECO_SCHEMA, reco_stream
+
+N = 4096
+NUM_USERS = 256
+
+
+def run() -> None:
+    rng = np.random.default_rng(1)
+    view = FeatureView(
+        name="reco_min",
+        schema=RECO_SCHEMA,
+        features={"spend_1h": w_sum(Col("price") * Col("qty"), range_window(3600, bucket=64))},
+    )
+    rows = reco_stream(rng, N, num_users=NUM_USERS)
+    order = np.lexsort((rows["ts"], rows["user"]))
+    rows = {c: v[order] for c, v in rows.items()}
+
+    def fresh_store():
+        return OnlineFeatureStore(
+            view, num_keys=NUM_USERS, capacity=256, num_buckets=64, bucket_size=64
+        )
+
+    store = fresh_store()
+
+    def fused():
+        store.ingest(rows)
+        return store.state.ring.cursor
+
+    t = timeit(fused, warmup=1, iters=5)
+    emit("ingest", "fused_rows_per_s", N / t["median_s"], "rows/s")
+    emit("ingest", "fused_batch_ms", t["median_s"] * 1e3, "ms", f"batch={N}")
+
+    store2 = fresh_store()
+    one = {c: v[:1] for c, v in rows.items()}
+
+    def row_at_a_time():
+        for i in range(64):
+            store2.ingest({c: v[i:i + 1] for c, v in rows.items()})
+        return store2.state.ring.cursor
+
+    t2 = timeit(row_at_a_time, warmup=1, iters=3)
+    emit("ingest", "row_at_a_time_rows_per_s", 64 / t2["median_s"], "rows/s")
+    emit(
+        "ingest", "vipshop_required_rows_per_s", 720e6 / 86400, "rows/s",
+        "720M orders/day sustained",
+    )
+
+
+if __name__ == "__main__":
+    run()

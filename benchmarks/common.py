@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: timing, CSV row emission, result registry."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+RESULTS: List[Dict] = []
+
+
+def block(x):
+    return jax.tree.map(
+        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready") else a,
+        x,
+    )
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> Dict[str, float]:
+    """Median wall time of ``fn()`` (which must block on its own result)."""
+    for _ in range(warmup):
+        block(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block(fn())
+        ts.append(time.perf_counter() - t0)
+    ts = sorted(ts)
+    return {
+        "median_s": ts[len(ts) // 2],
+        "best_s": ts[0],
+        "mean_s": float(np.mean(ts)),
+    }
+
+
+def emit(bench: str, name: str, value: float, unit: str, note: str = "") -> None:
+    RESULTS.append(
+        {"bench": bench, "name": name, "value": value, "unit": unit, "note": note}
+    )
+    print(f"{bench},{name},{value:.6g},{unit},{note}", flush=True)
+
+
+def header() -> None:
+    print("bench,name,value,unit,note", flush=True)

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by ``repro.launch.dryrun``) and
+prints the per-cell three-term roofline: compute / memory / collective
+seconds per step, the dominant term, and the useful-FLOPs ratio.
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI — constants live in repro.launch.roofline.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(tag: str = "") -> List[Dict]:
+    out = []
+    suffix = f"-{tag}" if tag else ""
+    for p in sorted(DRYRUN.glob(f"*__*{suffix}.json")):
+        stem = p.stem
+        if tag and not stem.endswith(suffix):
+            continue
+        if not tag and "-" in stem.split("__")[-1]:
+            # skip tagged perf-iteration variants in the baseline table
+            if stem.split("__")[-1] not in ("single", "multi"):
+                continue
+        try:
+            out.append(json.loads(p.read_text()))
+        except json.JSONDecodeError:
+            continue
+    return out
+
+
+def fmt_row(r: Dict) -> Optional[str]:
+    cell = f"{r['arch']} x {r['shape']} [{r.get('mesh','?')}]"
+    if r.get("skipped"):
+        return f"{cell:58s} SKIP ({r['reason'].split(':')[0]})"
+    if "roofline" not in r:
+        return None
+    t = r["roofline"]
+    return (
+        f"{cell:58s} c={t['compute_s']:.4f}s m={t['memory_s']:.4f}s "
+        f"coll={t['collective_s']:.4f}s dom={t['dominant']:<10s} "
+        f"useful={r.get('useful_flops_ratio', 0):.2f}"
+    )
+
+
+def run() -> None:
+    cells = load_cells()
+    n_ok = n_skip = 0
+    print("== roofline table (from dry-run compile artifacts) ==")
+    for r in cells:
+        line = fmt_row(r)
+        if line is None:
+            continue
+        print(line)
+        n_skip += int(bool(r.get("skipped")))
+        n_ok += int(not r.get("skipped"))
+    print(f"cells: {n_ok} compiled, {n_skip} skipped "
+          f"(see EXPERIMENTS.md for analysis)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Render EXPERIMENTS.md §Roofline markdown tables from dry-run JSONs.
+
+  PYTHONPATH=src:. python -m benchmarks.roofline_md [--mesh 16x16|2x16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from collections import defaultdict
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+ARCH_ORDER = [
+    "nemotron-4-15b", "qwen3-32b", "yi-34b", "phi3-mini-3.8b",
+    "mixtral-8x7b", "moonshot-v1-16b-a3b", "rwkv6-3b",
+    "seamless-m4t-medium", "phi3-vision-4.2b", "recurrentgemma-9b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    cells = defaultdict(dict)
+    for p in sorted(DRYRUN.glob("*.json")):
+        parts = p.stem.split("__")
+        if len(parts) != 3:
+            continue
+        arch, shape, tag = parts
+        try:
+            d = json.loads(p.read_text())
+        except json.JSONDecodeError:
+            continue
+        cells[(arch, shape)][tag] = d
+    return cells
+
+
+def fmt(v, digits=3):
+    if v == 0:
+        return "0"
+    if v < 0.01:
+        return f"{v:.1e}"
+    return f"{v:.{digits}g}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16"])
+    args = ap.parse_args()
+    tag = "single" if args.mesh == "16x16" else "multi"
+
+    cells = load()
+    print(f"| arch | shape | compute s | memory s | collective s | dominant "
+          f"| MODEL_FLOPs/HLO_FLOPs | bytes/device | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = cells.get((arch, shape), {}).get(tag)
+            if rec is None:
+                continue
+            if rec.get("skipped"):
+                print(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                      f"SKIP: {rec['reason'].split(':')[0]} |")
+                continue
+            t = rec["roofline"]
+            mem = rec.get("memory", {})
+            peak = mem.get("peak_estimate_bytes", 0) / 1e9
+            note = ""
+            print(
+                f"| {arch} | {shape} | {fmt(t['compute_s'])} "
+                f"| {fmt(t['memory_s'])} | {fmt(t['collective_s'])} "
+                f"| {t['dominant']} "
+                f"| {rec.get('useful_flops_ratio', 0):.2f} "
+                f"| {peak:.1f} GB | {note} |"
+            )
+
+
+if __name__ == "__main__":
+    main()

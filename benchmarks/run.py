@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/claim (DESIGN.md §6).
+
+  python -m benchmarks.run            # all feature/system benches + roofline
+  python -m benchmarks.run --only feature_latency
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks.common import emit, header
+
+BENCHES = [
+    "feature_latency",   # §3.3 fraud: naive vs tuned vs featinsight
+    "window_agg",        # §2 pre-aggregation vs window size + kernel check
+    "ingest",            # §3.2 millisecond updates / 720M orders/day
+    "wide_view",         # Fig. 4: 784-feature banking view
+    "deploy",            # §3.2 one-click deployment pipeline
+    "consistency",       # §2 offline/online verification
+    "signature",         # §1 trillion-dim signatures
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    header()
+    failures = []
+    for name in BENCHES:
+        if args.only and name != args.only:
+            continue
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            mod.run()
+            emit(name, "bench_wall_s", time.perf_counter() - t0, "s")
+        except Exception as e:  # keep the harness running
+            failures.append(name)
+            emit(name, "FAILED", 0, "", str(e)[:120].replace(",", ";"))
+            traceback.print_exc()
+
+    if not args.skip_roofline and not args.only:
+        from benchmarks import roofline
+        roofline.run()
+
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

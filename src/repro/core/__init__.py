@@ -1,0 +1,30 @@
+"""FeatInsight core: feature views, unified offline/online computation,
+compact time-series storage, signatures, and consistency verification."""
+
+from repro.core.expr import (  # noqa: F401
+    Agg,
+    Col,
+    Expr,
+    Hash,
+    Lit,
+    Signature,
+    WindowAgg,
+    WindowSpec,
+    range_window,
+    rows_window,
+    w_count,
+    w_distinct_approx,
+    w_first,
+    w_last,
+    w_max,
+    w_mean,
+    w_min,
+    w_std,
+    w_sum,
+    w_topn_freq,
+)
+from repro.core.storage import RowCodec, TableSchema  # noqa: F401
+from repro.core.view import FeatureRegistry, FeatureView, render_sql  # noqa: F401
+from repro.core.engine import OfflineEngine  # noqa: F401
+from repro.core.online import OnlineFeatureStore  # noqa: F401
+from repro.core.consistency import ConsistencyReport, verify_view  # noqa: F401

@@ -1,0 +1,441 @@
+"""Feature expression DAG — FeatInsight's declarative feature language.
+
+The paper builds features from a visual DAG that compiles to SQL executed by
+OpenMLDB.  Here the DAG *is* the IR: a small expression tree of row-level
+operations and window aggregations that compiles (via :mod:`repro.core.engine`)
+to a single fused, jit-compiled XLA executable per feature view.
+
+Two strata:
+
+* **row-level** expressions (``Col``, ``Lit``, arithmetic, comparisons,
+  ``Hash``, ``Signature``) — evaluated pointwise over a batch of rows;
+* **window aggregations** (``WindowAgg``) — evaluated per key over a ROWS
+  or RANGE window ending at (and including) the current row, exactly the
+  OpenMLDB ``window ... rows_range between ... and current row`` semantics.
+
+Window aggregations may themselves feed further row-level expressions
+(e.g. ``w_sum(amount, 1h) / w_count(amount, 1h)``), mirroring how FeatInsight
+users chain SQL blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "Agg",
+    "WindowSpec",
+    "Expr",
+    "Col",
+    "Lit",
+    "BinOp",
+    "UnOp",
+    "Hash",
+    "Signature",
+    "WindowAgg",
+    "rows_window",
+    "range_window",
+    "w_sum",
+    "w_count",
+    "w_mean",
+    "w_min",
+    "w_max",
+    "w_std",
+    "w_first",
+    "w_last",
+    "w_distinct_approx",
+    "w_topn_freq",
+    "collect_window_aggs",
+    "collect_columns",
+]
+
+
+class Agg(enum.Enum):
+    """Window aggregation kinds (the paper's 'specialized ML functions')."""
+
+    SUM = "sum"
+    COUNT = "count"
+    MEAN = "mean"
+    MIN = "min"
+    MAX = "max"
+    STD = "std"
+    FIRST = "first"
+    LAST = "last"
+    DISTINCT_APPROX = "distinct_approx"  # 32-bit linear counting
+    TOPN_FREQ = "topn_freq"              # exact over the window tail
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    """A per-key window ending at the current row (inclusive).
+
+    mode="rows":  the last ``size`` rows of the same key.
+    mode="range": rows of the same key with ``ts in (t_now - size, t_now]``.
+
+    ``bucket`` is the pre-aggregation granularity used by the online store
+    (and the Pallas window kernel) for RANGE windows; it does not change the
+    result, only how it is computed.
+    """
+
+    mode: str
+    size: int
+    bucket: int = 0
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("rows", "range"):
+            raise ValueError(f"bad window mode {self.mode!r}")
+        if self.size <= 0:
+            raise ValueError("window size must be positive")
+
+
+def rows_window(size: int) -> WindowSpec:
+    return WindowSpec("rows", size)
+
+
+def range_window(size: int, bucket: int = 0) -> WindowSpec:
+    return WindowSpec("range", size, bucket)
+
+
+# ---------------------------------------------------------------------------
+# Expression nodes
+# ---------------------------------------------------------------------------
+
+
+class Expr:
+    """Base class; supports operator overloading for row-level math."""
+
+    # -- arithmetic ---------------------------------------------------------
+    def __add__(self, o: Any) -> "Expr":
+        return BinOp("add", self, _wrap(o))
+
+    def __radd__(self, o: Any) -> "Expr":
+        return BinOp("add", _wrap(o), self)
+
+    def __sub__(self, o: Any) -> "Expr":
+        return BinOp("sub", self, _wrap(o))
+
+    def __rsub__(self, o: Any) -> "Expr":
+        return BinOp("sub", _wrap(o), self)
+
+    def __mul__(self, o: Any) -> "Expr":
+        return BinOp("mul", self, _wrap(o))
+
+    def __rmul__(self, o: Any) -> "Expr":
+        return BinOp("mul", _wrap(o), self)
+
+    def __truediv__(self, o: Any) -> "Expr":
+        return BinOp("div", self, _wrap(o))
+
+    def __rtruediv__(self, o: Any) -> "Expr":
+        return BinOp("div", _wrap(o), self)
+
+    def __neg__(self) -> "Expr":
+        return UnOp("neg", self)
+
+    # -- comparisons (produce 0/1 f32 features) ------------------------------
+    def __gt__(self, o: Any) -> "Expr":
+        return BinOp("gt", self, _wrap(o))
+
+    def __lt__(self, o: Any) -> "Expr":
+        return BinOp("lt", self, _wrap(o))
+
+    def __ge__(self, o: Any) -> "Expr":
+        return BinOp("ge", self, _wrap(o))
+
+    def __le__(self, o: Any) -> "Expr":
+        return BinOp("le", self, _wrap(o))
+
+    def eq(self, o: Any) -> "Expr":
+        return BinOp("eq", self, _wrap(o))
+
+    def log1p(self) -> "Expr":
+        return UnOp("log1p", self)
+
+    def abs(self) -> "Expr":
+        return UnOp("abs", self)
+
+    def clip(self, lo: float, hi: float) -> "Expr":
+        return UnOp("clip", self, params=(float(lo), float(hi)))
+
+    # -- structural ----------------------------------------------------------
+    def children(self) -> Tuple["Expr", ...]:
+        return ()
+
+    @property
+    def key(self) -> Tuple:
+        """Hashable structural identity used for CSE / lineage."""
+        raise NotImplementedError
+
+
+def _wrap(v: Any) -> "Expr":
+    if isinstance(v, Expr):
+        return v
+    return Lit(float(v))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Col(Expr):
+    """Reference to a source-table column (lineage leaf)."""
+
+    name: str
+
+    @property
+    def key(self) -> Tuple:
+        return ("col", self.name)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Lit(Expr):
+    value: float
+
+    @property
+    def key(self) -> Tuple:
+        return ("lit", self.value)
+
+
+_BINOPS: Dict[str, Callable] = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": lambda a, b: a / jnp.where(b == 0, 1.0, b),
+    "gt": lambda a, b: (a > b).astype(jnp.float32),
+    "lt": lambda a, b: (a < b).astype(jnp.float32),
+    "ge": lambda a, b: (a >= b).astype(jnp.float32),
+    "le": lambda a, b: (a <= b).astype(jnp.float32),
+    "eq": lambda a, b: (a == b).astype(jnp.float32),
+}
+
+_UNOPS: Dict[str, Callable] = {
+    "neg": jnp.negative,
+    "log1p": lambda x: jnp.log1p(jnp.maximum(x, 0.0)),
+    "abs": jnp.abs,
+}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BinOp(Expr):
+    op: str
+    lhs: Expr
+    rhs: Expr
+
+    def children(self) -> Tuple[Expr, ...]:
+        return (self.lhs, self.rhs)
+
+    @property
+    def key(self) -> Tuple:
+        return ("bin", self.op, self.lhs.key, self.rhs.key)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class UnOp(Expr):
+    op: str
+    arg: Expr
+    params: Tuple = ()
+
+    def children(self) -> Tuple[Expr, ...]:
+        return (self.arg,)
+
+    @property
+    def key(self) -> Tuple:
+        return ("un", self.op, self.params, self.arg.key)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Hash(Expr):
+    """64-bit mix hash of a column (the signature primitive).
+
+    Result is a non-negative int32 in [0, 2**bits).
+    """
+
+    arg: Expr
+    bits: int = 20
+    salt: int = 0
+
+    def children(self) -> Tuple[Expr, ...]:
+        return (self.arg,)
+
+    @property
+    def key(self) -> Tuple:
+        return ("hash", self.bits, self.salt, self.arg.key)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Signature(Expr):
+    """FeatInsight feature signature: fold several columns into one hashed id.
+
+    The paper uses signatures to label features in trillion-dimensional
+    spaces (product × item crosses etc.); we fold the column values through
+    k rounds of a 64-bit mixer so the cross never materializes.
+    """
+
+    args: Tuple[Expr, ...]
+    bits: int = 20
+    salt: int = 0
+
+    def children(self) -> Tuple[Expr, ...]:
+        return tuple(self.args)
+
+    @property
+    def key(self) -> Tuple:
+        return ("sig", self.bits, self.salt, tuple(a.key for a in self.args))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WindowAgg(Expr):
+    """Per-key window aggregation of a row-level expression."""
+
+    agg: Agg
+    arg: Expr
+    window: WindowSpec
+    n: int = 1  # for TOPN_FREQ: which rank (0-based) to return
+
+    def children(self) -> Tuple[Expr, ...]:
+        return (self.arg,)
+
+    @property
+    def key(self) -> Tuple:
+        return (
+            "wagg",
+            self.agg.value,
+            self.window.mode,
+            self.window.size,
+            self.n,
+            self.arg.key,
+        )
+
+
+# -- convenience constructors (the user-facing feature DSL) -------------------
+
+
+def w_sum(arg: Expr, window: WindowSpec) -> WindowAgg:
+    return WindowAgg(Agg.SUM, arg, window)
+
+
+def w_count(arg: Expr, window: WindowSpec) -> WindowAgg:
+    return WindowAgg(Agg.COUNT, arg, window)
+
+
+def w_mean(arg: Expr, window: WindowSpec) -> WindowAgg:
+    return WindowAgg(Agg.MEAN, arg, window)
+
+
+def w_min(arg: Expr, window: WindowSpec) -> WindowAgg:
+    return WindowAgg(Agg.MIN, arg, window)
+
+
+def w_max(arg: Expr, window: WindowSpec) -> WindowAgg:
+    return WindowAgg(Agg.MAX, arg, window)
+
+
+def w_std(arg: Expr, window: WindowSpec) -> WindowAgg:
+    return WindowAgg(Agg.STD, arg, window)
+
+
+def w_first(arg: Expr, window: WindowSpec) -> WindowAgg:
+    return WindowAgg(Agg.FIRST, arg, window)
+
+
+def w_last(arg: Expr, window: WindowSpec) -> WindowAgg:
+    return WindowAgg(Agg.LAST, arg, window)
+
+
+def w_distinct_approx(arg: Expr, window: WindowSpec) -> WindowAgg:
+    return WindowAgg(Agg.DISTINCT_APPROX, arg, window)
+
+
+def w_topn_freq(arg: Expr, window: WindowSpec, n: int = 0) -> WindowAgg:
+    """Approximate top-N frequency: value of the n-th most frequent item in
+    the window tail (ties broken by value)."""
+    return WindowAgg(Agg.TOPN_FREQ, arg, window, n=n)
+
+
+# ---------------------------------------------------------------------------
+# Tree walks
+# ---------------------------------------------------------------------------
+
+
+def collect_window_aggs(exprs: Sequence[Expr]) -> Dict[Tuple, WindowAgg]:
+    """All distinct WindowAgg nodes, CSE'd by structural key."""
+    out: Dict[Tuple, WindowAgg] = {}
+
+    def walk(e: Expr) -> None:
+        if isinstance(e, WindowAgg):
+            out.setdefault(e.key, e)
+            walk(e.arg)
+            return
+        for c in e.children():
+            walk(c)
+
+    for e in exprs:
+        walk(e)
+    return out
+
+
+def collect_columns(exprs: Sequence[Expr]) -> Tuple[str, ...]:
+    """All source columns referenced (lineage: feature -> raw columns)."""
+    cols = []
+
+    def walk(e: Expr) -> None:
+        if isinstance(e, Col) and e.name not in cols:
+            cols.append(e.name)
+        for c in e.children():
+            walk(c)
+
+    for e in exprs:
+        walk(e)
+    return tuple(cols)
+
+
+# ---------------------------------------------------------------------------
+# Row-level evaluation
+# ---------------------------------------------------------------------------
+
+
+def eval_rowlevel(
+    expr: Expr,
+    columns: Dict[str, jnp.ndarray],
+    wagg_values: Dict[Tuple, jnp.ndarray],
+) -> jnp.ndarray:
+    """Evaluate ``expr`` pointwise.
+
+    ``columns`` maps column name -> (N,) array; ``wagg_values`` maps a
+    WindowAgg structural key -> already-computed (N,) result (phase 2 of the
+    engine).  WindowAgg nodes MUST appear in ``wagg_values``.
+    """
+    from repro.core.hashing import mix64  # local import to avoid cycle
+
+    def ev(e: Expr) -> jnp.ndarray:
+        if isinstance(e, WindowAgg):
+            return wagg_values[e.key]
+        if isinstance(e, Col):
+            if e.name not in columns:
+                raise KeyError(f"unknown column {e.name!r}")
+            return columns[e.name]
+        if isinstance(e, Lit):
+            return jnp.asarray(e.value, jnp.float32)
+        if isinstance(e, BinOp):
+            return _BINOPS[e.op](ev(e.lhs), ev(e.rhs))
+        if isinstance(e, UnOp):
+            if e.op == "clip":
+                lo, hi = e.params
+                return jnp.clip(ev(e.arg), lo, hi)
+            return _UNOPS[e.op](ev(e.arg))
+        if isinstance(e, Hash):
+            v = ev(e.arg)
+            return mix64(v, salt=e.salt, bits=e.bits).astype(jnp.float32)
+        if isinstance(e, Signature):
+            acc = None
+            for i, a in enumerate(e.args):
+                h = mix64(ev(a), salt=e.salt + 0x9E37 * (i + 1), bits=32)
+                acc = h if acc is None else mix64(
+                    acc * 31 + h, salt=e.salt, bits=32
+                )
+            assert acc is not None
+            return jnp.mod(acc, 2 ** e.bits).astype(jnp.float32)
+        raise TypeError(f"unknown expr node {type(e)}")
+
+    return ev(expr)

@@ -1,0 +1,64 @@
+"""Integer mix hashing in pure JAX (int32 lane pairs — no x64 requirement).
+
+TPUs have no 64-bit integer lanes worth using; we emulate a splitmix-style
+64-bit mixer on (hi, lo) int32 pairs so feature signatures hash identically
+on CPU (tests), TPU (target), and inside Pallas kernels.  All functions are
+deterministic pure functions of their inputs — a requirement for the paper's
+offline↔online consistency guarantee (the same raw value must produce the
+same signature in both pipelines).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["mix32", "mix64", "fold_hash"]
+
+_M1 = jnp.int32(-2048144789)   # 0x85ebca6b
+_M2 = jnp.int32(-1028477387)   # 0xc2b2ae35
+
+
+def _as_i32(x: jnp.ndarray) -> jnp.ndarray:
+    """Reinterpret/convert arbitrary numeric input to int32 deterministically."""
+    if x.dtype == jnp.float32:
+        # bitcast so 1.0 and 1 hash differently from 1.5 etc.; NaN-safe.
+        return jnp.asarray(x).view(jnp.int32)
+    if x.dtype in (jnp.int32, jnp.uint32):
+        return x.astype(jnp.int32)
+    return x.astype(jnp.int32)
+
+
+def mix32(x: jnp.ndarray, salt: int = 0) -> jnp.ndarray:
+    """murmur3-finalizer style avalanche mix over int32 lanes."""
+    h = _as_i32(x) ^ jnp.int32(salt & 0x7FFFFFFF)
+    h = h ^ (h >> 16)
+    h = (h * _M1).astype(jnp.int32)
+    h = h ^ ((h >> 13) & jnp.int32(0x0007FFFF))
+    h = (h * _M2).astype(jnp.int32)
+    h = h ^ ((h >> 16) & jnp.int32(0x0000FFFF))
+    return h
+
+
+def mix64(x: jnp.ndarray, salt: int = 0, bits: int = 32) -> jnp.ndarray:
+    """Two-round 32-bit mix folded to ``bits`` bits, result in [0, 2**bits).
+
+    (Named for its role — emulating a 64-bit-quality mixer with two
+    dependent 32-bit rounds — not its output width.)
+    """
+    x = jnp.asarray(x)
+    h1 = mix32(x, salt=salt)
+    h2 = mix32(h1 ^ jnp.int32(0x5BD1E995), salt=salt ^ 0x27D4EB2F)
+    h = h1 ^ (h2 * jnp.int32(5) + jnp.int32(0x38495AB5))
+    if bits >= 31:  # int32 non-negative range is 31 usable bits
+        return jnp.abs(h) & jnp.int32(0x7FFFFFFF)
+    return jnp.abs(h) % jnp.int32(2 ** bits)
+
+
+def fold_hash(parts, salt: int = 0, bits: int = 20) -> jnp.ndarray:
+    """Order-sensitive fold of several arrays into one hashed id per row."""
+    acc = None
+    for i, p in enumerate(parts):
+        h = mix64(jnp.asarray(p), salt=salt + 0x9E37 * (i + 1), bits=32)
+        acc = h if acc is None else mix64(acc * 31 + h, salt=salt, bits=32)
+    assert acc is not None
+    return jnp.mod(acc, 2 ** bits).astype(jnp.int32)

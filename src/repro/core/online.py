@@ -1,0 +1,436 @@
+"""Online feature store — FeatInsight's request-mode serving path.
+
+OpenMLDB request mode: a request row (key, ts, values) arrives; the service
+computes every feature of the view *as if that row were appended* to its
+key's history, and returns the feature vector in milliseconds.  The row may
+then be ingested (deployment-configurable).  Offline↔online consistency
+means: the online answer for row i after ingesting rows 0..i-1 equals the
+offline batch answer at row i.
+
+Two query paths (both pure functions, jit-compiled once per view version —
+the paper's "compilation caching"):
+
+* ``naive``  — masked reduction over the raw ring (O(C) per query); the
+  reproduction of the paper's un-preaggregated baseline.
+* ``preagg`` — two-level composition: raw boundary rows + per-bucket partial
+  aggregates (O(C_boundary + NB)); the paper's long-window optimization.
+  The Pallas kernel in ``repro.kernels.window_agg`` implements this same
+  path with explicit VMEM tiling.
+
+Window-aggregation *arguments* may be derived expressions; the store
+materializes one lane per distinct argument at ingest (computed columns),
+so pre-aggregation composes for derived args too — mirroring OpenMLDB
+defining pre-aggregates per aggregation spec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import preagg as pg
+from repro.core import storage as st
+from repro.core.expr import (
+    Agg,
+    Expr,
+    WindowAgg,
+    collect_window_aggs,
+    eval_rowlevel,
+)
+from repro.core.windows import TOPN_TAIL
+
+__all__ = ["OnlineState", "OnlineFeatureStore"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OnlineState:
+    """All device state of one view's online store (a pytree)."""
+
+    ring: st.RingStore
+    bagg: pg.BucketAgg
+
+    def tree_flatten(self):
+        return (self.ring, self.bagg), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _or_reduce(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    return jax.lax.reduce(x, jnp.int32(0), jax.lax.bitwise_or, (axis,))
+
+
+def _finalize(agg: Agg, s: jnp.ndarray) -> jnp.ndarray:
+    """stat vector (..., NUM_STATS) -> scalar feature value."""
+    if agg == Agg.SUM:
+        return s[..., 0]
+    if agg == Agg.COUNT:
+        return s[..., 1]
+    if agg == Agg.MEAN:
+        return s[..., 0] / jnp.maximum(s[..., 1], 1.0)
+    if agg == Agg.MIN:
+        return s[..., 2]
+    if agg == Agg.MAX:
+        return s[..., 3]
+    if agg == Agg.STD:
+        cnt = jnp.maximum(s[..., 1], 1.0)
+        m = s[..., 0] / cnt
+        return jnp.sqrt(jnp.maximum(s[..., 4] / cnt - m * m, 0.0))
+    raise ValueError(agg)
+
+
+def _bitmap_estimate(bits: jnp.ndarray) -> jnp.ndarray:
+    ones = jax.lax.population_count(bits).astype(jnp.float32)
+    frac = jnp.clip(ones / 32.0, 0.0, 1.0 - 1e-6)
+    return -32.0 * jnp.log1p(-frac)
+
+
+def _topn_masked(g: jnp.ndarray, valid: jnp.ndarray, nth: int) -> jnp.ndarray:
+    """n-th most frequent value over masked tail rows.
+
+    g, valid: (Q, T) with slot 0 = most recent.  Identical ranking rule to
+    ``windows._topn_tail`` (freq desc, value asc, first-occurrence dedupe)
+    so offline and online agree on the selected value.
+    """
+    tail = g.shape[1]
+    eq = (g[:, :, None] == g[:, None, :]) & valid[:, :, None] & valid[:, None, :]
+    freq = eq.sum(-1).astype(jnp.float32)
+    freq = jnp.where(valid, freq, -1.0)
+    earlier = jnp.tril(jnp.ones((tail, tail), bool), -1)
+    same_as_earlier = (eq & earlier[None, :, :]).any(-1)
+    is_first = valid & ~same_as_earlier
+    score = jnp.where(is_first, freq, -1.0)
+    vmax = jnp.max(jnp.abs(g), initial=1.0)
+    composite = score * (2.0 * vmax + 1.0) - g
+    order = jnp.argsort(-composite, axis=-1)
+    pick = order[:, nth]
+    picked_score = jnp.take_along_axis(score, pick[:, None], axis=1)[:, 0]
+    val = jnp.take_along_axis(g, pick[:, None], axis=1)[:, 0]
+    return jnp.where(picked_score >= 0.0, val, 0.0)
+
+
+class OnlineFeatureStore:
+    """Stateful wrapper: owns an OnlineState + jit-compiled pure kernels.
+
+    One instance per deployed feature-view version (the registry caches
+    instances across versions — the paper's service-version cache).
+    """
+
+    def __init__(
+        self,
+        view,  # repro.core.view.FeatureView
+        num_keys: int,
+        capacity: int = 256,
+        num_buckets: int = 64,
+        bucket_size: int = 64,
+    ):
+        self.view = view
+        self.schema = view.schema
+        self.num_keys = num_keys
+        self.capacity = capacity
+        self.num_buckets = num_buckets
+        self.bucket_size = bucket_size
+
+        # lane plan: one materialized lane per distinct wagg argument
+        self.waggs: Dict[Tuple, WindowAgg] = collect_window_aggs(
+            list(view.features.values())
+        )
+        self._wagg_order: List[Tuple] = list(self.waggs.keys())
+        self._lane_exprs: List[Expr] = []
+        self._lane_of: Dict[Tuple, int] = {}
+        for wa in self.waggs.values():
+            ak = wa.arg.key
+            if ak not in self._lane_of:
+                self._lane_of[ak] = len(self._lane_exprs)
+                self._lane_exprs.append(wa.arg)
+            if wa.window.mode == "range":
+                need = wa.window.size // bucket_size + 2
+                if need > num_buckets:
+                    raise ValueError(
+                        f"window {wa.window.size} needs {need} buckets of "
+                        f"{bucket_size}, store has {num_buckets}"
+                    )
+        self.num_lanes = max(len(self._lane_exprs), 1)
+
+        self.state = OnlineState(
+            ring=st.ring_init(num_keys, capacity, self.num_lanes),
+            bagg=pg.bucket_init(num_keys, num_buckets, self.num_lanes, bucket_size),
+        )
+        # jit caches (compiled once per view version)
+        self._ingest_fn = jax.jit(self._ingest_pure, donate_argnums=(0,))
+        self._query_naive_fn = jax.jit(self._query_pure_naive)
+        self._query_preagg_fn = jax.jit(self._query_pure_preagg)
+
+    # -- lane evaluation ------------------------------------------------------
+
+    def _lanes(self, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """(N, L) materialized window-arg lanes from raw columns."""
+        if not self._lane_exprs:
+            n = jnp.asarray(columns[self.schema.key]).shape[0]
+            return jnp.zeros((n, 1), jnp.float32)
+        vals = [
+            eval_rowlevel(e, columns, {}).astype(jnp.float32)
+            for e in self._lane_exprs
+        ]
+        return jnp.stack(vals, axis=-1)
+
+    # -- ingest -----------------------------------------------------------------
+
+    def _ingest_pure(self, state: OnlineState, key, ts, lanes) -> OnlineState:
+        ring = st.ring_ingest(state.ring, key, ts, lanes)
+        bagg = pg.bucket_ingest(state.bagg, key, ts, lanes)
+        return OnlineState(ring=ring, bagg=bagg)
+
+    def ingest(self, columns: Dict[str, jnp.ndarray]) -> None:
+        """Ingest a batch of raw rows (must be (key, ts)-sorted).
+
+        ``bucket_ingest`` requires each fused batch to span fewer than
+        ``num_buckets`` pre-agg buckets (a slot must receive at most one
+        new bucket id per scatter).  Historical backfills can span the
+        whole table's time range, so oversized batches are split here on
+        bucket boundaries — each chunk stays one fused scatter.
+        """
+        key = jnp.asarray(columns[self.schema.key], jnp.int32)
+        ts = jnp.asarray(columns[self.schema.ts], jnp.int32)
+        lanes = self._lanes(columns)
+
+        import numpy as _np
+
+        ts_h = _np.asarray(ts)
+        if ts_h.size == 0:
+            return
+        b = ts_h // self.bucket_size
+        span_ok = (b.max() - b.min()) < self.num_buckets - 1
+        if span_ok:
+            self._ingest_padded(key, ts, lanes)
+            return
+        # split into chunks each spanning < num_buckets buckets; rows are
+        # (key, ts)-sorted, so chunk by absolute-bucket epoch and re-sort
+        # each chunk by (key, ts).
+        epoch = b // (self.num_buckets - 1)
+        for e in _np.unique(epoch):
+            idx = _np.nonzero(epoch == e)[0]
+            order = idx[_np.lexsort((ts_h[idx], _np.asarray(key)[idx]))]
+            self._ingest_padded(key[order], ts[order], lanes[order])
+
+    def _ingest_padded(self, key, ts, lanes) -> None:
+        """Pad the fused batch to a power-of-two shape bucket so one compiled
+        executable serves every batch size (the paper's compilation caching).
+        Padding rows carry the sentinel key == num_keys: gathers clip
+        (harmless) and every state scatter drops out-of-bounds rows."""
+        n = int(key.shape[0])
+        m = max(64, 1 << (n - 1).bit_length())
+        if m != n:
+            pad = m - n
+            key = jnp.concatenate(
+                [key, jnp.full((pad,), self.num_keys, jnp.int32)]
+            )
+            ts = jnp.concatenate([ts, jnp.broadcast_to(ts[-1], (pad,))])
+            lanes = jnp.concatenate(
+                [lanes, jnp.zeros((pad, lanes.shape[1]), lanes.dtype)]
+            )
+        self.state = self._ingest_fn(self.state, key, ts, lanes)
+
+    # -- window masks -------------------------------------------------------------
+
+    def _window_mask(self, wa: WindowAgg, ts_buf, valid, ts_q) -> jnp.ndarray:
+        not_future = ts_buf <= ts_q[:, None]
+        if wa.window.mode == "range":
+            lo = ts_q - jnp.int32(wa.window.size) + 1
+            return valid & not_future & (ts_buf >= lo[:, None])
+        # rows mode: last (size-1) eligible rows; the request row is the
+        # size-th.  Rank from the newest backwards.
+        eligible = valid & not_future
+        newer = jnp.cumsum(eligible[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1]
+        rank_from_new = newer - eligible.astype(jnp.int32)  # 0 == newest
+        return eligible & (rank_from_new < wa.window.size - 1)
+
+    # -- naive path ------------------------------------------------------------------
+
+    def _query_pure_naive(self, state, key, ts_q, req_lanes):
+        ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
+        out = []
+        for wk in self._wagg_order:
+            wa = self.waggs[wk]
+            lane = self._lane_of[wa.arg.key]
+            g = lanes_buf[..., lane]
+            r = req_lanes[:, lane]
+            m = self._window_mask(wa, ts_buf, valid, ts_q)
+            out.append(self._agg_masked(wa, g, m, r))
+        return tuple(out)
+
+    def _agg_masked(self, wa: WindowAgg, g, m, r) -> jnp.ndarray:
+        mf = m.astype(jnp.float32)
+        if wa.agg == Agg.SUM:
+            return jnp.sum(g * mf, axis=1) + r
+        if wa.agg == Agg.COUNT:
+            return jnp.sum(mf, axis=1) + 1.0
+        if wa.agg == Agg.MEAN:
+            c = jnp.sum(mf, axis=1) + 1.0
+            return (jnp.sum(g * mf, axis=1) + r) / c
+        if wa.agg == Agg.STD:
+            c = jnp.sum(mf, axis=1) + 1.0
+            s = jnp.sum(g * mf, axis=1) + r
+            s2 = jnp.sum(g * g * mf, axis=1) + r * r
+            mean = s / c
+            return jnp.sqrt(jnp.maximum(s2 / c - mean * mean, 0.0))
+        if wa.agg == Agg.MIN:
+            return jnp.minimum(jnp.min(jnp.where(m, g, pg.POS_INF), axis=1), r)
+        if wa.agg == Agg.MAX:
+            return jnp.maximum(jnp.max(jnp.where(m, g, pg.NEG_INF), axis=1), r)
+        if wa.agg == Agg.LAST:
+            return r  # request row is the newest in-window row
+        if wa.agg == Agg.FIRST:
+            any_m = m.any(axis=1)
+            first_idx = jnp.argmax(m, axis=1)  # oldest (buf is oldest->newest)
+            fv = jnp.take_along_axis(g, first_idx[:, None], axis=1)[:, 0]
+            return jnp.where(any_m, fv, r)
+        if wa.agg == Agg.DISTINCT_APPROX:
+            bits = jnp.where(m, pg.row_bitmap(g), jnp.int32(0))
+            allbits = _or_reduce(bits, 1) | pg.row_bitmap(r)
+            return _bitmap_estimate(allbits)
+        if wa.agg == Agg.TOPN_FREQ:
+            C = g.shape[1]
+            t = min(TOPN_TAIL - 1, C)
+            g_tail = jnp.concatenate([r[:, None], g[:, ::-1][:, :t]], axis=1)
+            m_tail = jnp.concatenate(
+                [jnp.ones((r.shape[0], 1), bool), m[:, ::-1][:, :t]], axis=1
+            )
+            return _topn_masked(g_tail, m_tail, wa.n)
+        raise ValueError(wa.agg)
+
+    # -- pre-aggregated path ------------------------------------------------------------
+
+    _COMPOSABLE = (Agg.SUM, Agg.COUNT, Agg.MEAN, Agg.MIN, Agg.MAX, Agg.STD)
+
+    def _query_pure_preagg(self, state, key, ts_q, req_lanes):
+        """Two-level composition for RANGE windows with composable aggs;
+        everything else falls back to the naive path inline."""
+        ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
+        B = jnp.int32(self.bucket_size)
+        nb = self.num_buckets
+        bucket_buf = ts_buf // B
+        out = []
+
+        for wk in self._wagg_order:
+            wa = self.waggs[wk]
+            lane = self._lane_of[wa.arg.key]
+            g = lanes_buf[..., lane]
+            r = req_lanes[:, lane]
+            composable = wa.agg in self._COMPOSABLE or (
+                wa.agg == Agg.DISTINCT_APPROX
+            )
+            if wa.window.mode != "range" or not composable:
+                m = self._window_mask(wa, ts_buf, valid, ts_q)
+                out.append(self._agg_masked(wa, g, m, r))
+                continue
+
+            T = jnp.int32(wa.window.size)
+            lo = ts_q - T + 1
+            b_q = ts_q // B
+            b_lo = (ts_q - T) // B
+            not_future = ts_buf <= ts_q[:, None]
+            in_lo = ts_buf >= lo[:, None]
+            head_m = (
+                valid & not_future & in_lo
+                & (bucket_buf == b_lo[:, None]) & (b_lo != b_q)[:, None]
+            )
+            tail_m = valid & not_future & in_lo & (bucket_buf == b_q[:, None])
+            raw = head_m | tail_m
+            rawf = raw.astype(jnp.float32)
+
+            # middle full buckets b_lo+1 .. b_q-1
+            M = self._max_mid(wa)
+            mids = b_lo[:, None] + 1 + jnp.arange(M, dtype=jnp.int32)[None, :]
+            mvalid = mids < b_q[:, None]
+            slots = mids % nb
+            stored = state.bagg.bucket[key[:, None], slots]
+            ok = mvalid & (stored == mids)
+
+            if wa.agg == Agg.DISTINCT_APPROX:
+                bits = jnp.where(raw, pg.row_bitmap(g), jnp.int32(0))
+                acc = _or_reduce(bits, 1) | pg.row_bitmap(r)
+                mb = state.bagg.bitmap[key[:, None], slots, lane]
+                mb = jnp.where(ok, mb, jnp.int32(0))
+                out.append(_bitmap_estimate(acc | _or_reduce(mb, 1)))
+                continue
+
+            s_raw = jnp.stack(
+                [
+                    jnp.sum(g * rawf, axis=1) + r,
+                    jnp.sum(rawf, axis=1) + 1.0,
+                    jnp.minimum(
+                        jnp.min(jnp.where(raw, g, pg.POS_INF), axis=1), r
+                    ),
+                    jnp.maximum(
+                        jnp.max(jnp.where(raw, g, pg.NEG_INF), axis=1), r
+                    ),
+                    jnp.sum(g * g * rawf, axis=1) + r * r,
+                ],
+                axis=-1,
+            )
+            ms = state.bagg.stats[key[:, None], slots, lane]  # (Q, M, S)
+            ident = pg.stats_identity(ms.shape[:-1])
+            ms = jnp.where(ok[..., None], ms, ident)
+            s_all = pg.combine_stats(s_raw, _fold_stats(ms))
+            out.append(_finalize(wa.agg, s_all))
+        return tuple(out)
+
+    def _max_mid(self, wa: WindowAgg) -> int:
+        """Static bound on middle-bucket count for a window."""
+        return max(1, min(self.num_buckets, wa.window.size // self.bucket_size + 1))
+
+    # -- public query ---------------------------------------------------------------------
+
+    def query(
+        self, columns: Dict[str, jnp.ndarray], mode: str = "preagg"
+    ) -> Dict[str, jnp.ndarray]:
+        """Compute all view features for a batch of request rows.
+
+        columns: raw request columns incl. key and ts; (Q,) each.
+        Returns {feature_name: (Q,) f32}.
+        """
+        key = jnp.asarray(columns[self.schema.key], jnp.int32)
+        ts_q = jnp.asarray(columns[self.schema.ts], jnp.int32)
+        req_lanes = self._lanes(columns)
+        fn = self._query_naive_fn if mode == "naive" else self._query_preagg_fn
+        # pad the request to a power-of-two shape bucket (compilation
+        # caching: one executable per bucket, not per request size)
+        q = int(key.shape[0])
+        m = max(16, 1 << (q - 1).bit_length())
+        if m != q:
+            pad = m - q
+            key_p = jnp.concatenate([key, jnp.broadcast_to(key[-1], (pad,))])
+            ts_p = jnp.concatenate([ts_q, jnp.broadcast_to(ts_q[-1], (pad,))])
+            lanes_p = jnp.concatenate(
+                [req_lanes,
+                 jnp.broadcast_to(req_lanes[-1:], (pad, req_lanes.shape[1]))]
+            )
+            vals = fn(self.state, key_p, ts_p, lanes_p)
+            vals = tuple(v[:q] for v in vals)
+        else:
+            vals = fn(self.state, key, ts_q, req_lanes)
+        wagg_values = dict(zip(self._wagg_order, vals))
+        out: Dict[str, jnp.ndarray] = {}
+        for fname, fexpr in self.view.features.items():
+            out[fname] = eval_rowlevel(fexpr, columns, wagg_values)
+        return out
+
+
+def _fold_stats(ms: jnp.ndarray) -> jnp.ndarray:
+    """Reduce (Q, M, NUM_STATS) middle-bucket stats over M."""
+    return jnp.stack(
+        [
+            ms[..., 0].sum(axis=1),
+            ms[..., 1].sum(axis=1),
+            ms[..., 2].min(axis=1),
+            ms[..., 3].max(axis=1),
+            ms[..., 4].sum(axis=1),
+        ],
+        axis=-1,
+    )

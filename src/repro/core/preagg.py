@@ -1,0 +1,219 @@
+"""Two-level window pre-aggregation — FeatInsight's long-window optimization.
+
+The paper: "we apply pre-aggregation to handle long time intervals (e.g.,
+for years) or hotspot data".  OpenMLDB materializes per-bucket partial
+aggregates so a long RANGE window composes O(window/bucket) bucket aggs plus
+two raw boundary scans, instead of scanning every raw row.
+
+TPU adaptation: bucket aggregates live in a dense per-key ring
+(`BucketAgg`), maintained by the same fused-scatter ingest as the row store.
+A query composes:
+
+    [raw tail rows in the newest partial bucket]      (scan, <= bucket rows)
+  + [full buckets strictly inside the window]         (compose, <= NB aggs)
+  + [raw head rows in the oldest partial bucket]      (scan, <= bucket rows)
+
+For exact offline↔online consistency the raw ring must retain the boundary
+buckets' rows; the middle composes losslessly for SUM/COUNT/MIN/MAX/SUMSQ
+and the 32-bit distinct bitmap (all associative, bitmap idempotent).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import mix64
+
+__all__ = [
+    "BucketAgg",
+    "bucket_init",
+    "bucket_ingest",
+    "row_bitmap",
+    "combine_stats",
+    "NUM_STATS",
+    "POS_INF",
+    "NEG_INF",
+]
+
+# stat lanes per (key, bucket, field): sum, count, min, max, sumsq
+NUM_STATS = 5
+NEG_INF = jnp.float32(-3.0e38)
+POS_INF = jnp.float32(3.0e38)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BucketAgg:
+    """Per-key ring of per-bucket partial aggregates.
+
+    stats  : (K, NB, F, NUM_STATS) f32
+    bitmap : (K, NB, F) int32   32-bit linear-counting bitmap per field
+    bucket : (K, NB) int32      absolute bucket id held in each slot (-1 empty)
+    """
+
+    stats: jnp.ndarray
+    bitmap: jnp.ndarray
+    bucket: jnp.ndarray
+    size: int  # bucket width in time units (static)
+
+    def tree_flatten(self):
+        return (self.stats, self.bitmap, self.bucket), (self.size,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, size=aux[0])
+
+    @property
+    def num_buckets(self) -> int:
+        return self.bucket.shape[1]
+
+
+def bucket_init(num_keys: int, num_buckets: int, width: int, size: int) -> BucketAgg:
+    stats = jnp.zeros((num_keys, num_buckets, width, NUM_STATS), jnp.float32)
+    stats = stats.at[..., 2].set(POS_INF)  # min identity
+    stats = stats.at[..., 3].set(NEG_INF)  # max identity
+    return BucketAgg(
+        stats=stats,
+        bitmap=jnp.zeros((num_keys, num_buckets, width), jnp.int32),
+        bucket=jnp.full((num_keys, num_buckets), jnp.int32(-1)),
+        size=size,
+    )
+
+
+def row_stats(vals: jnp.ndarray) -> jnp.ndarray:
+    """(..., F) values -> (..., F, NUM_STATS) single-row stats."""
+    ones = jnp.ones_like(vals)
+    return jnp.stack([vals, ones, vals, vals, vals * vals], axis=-1)
+
+
+def combine_stats(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Associative combine of stat vectors (..., NUM_STATS)."""
+    return jnp.stack(
+        [
+            a[..., 0] + b[..., 0],
+            a[..., 1] + b[..., 1],
+            jnp.minimum(a[..., 2], b[..., 2]),
+            jnp.maximum(a[..., 3], b[..., 3]),
+            a[..., 4] + b[..., 4],
+        ],
+        axis=-1,
+    )
+
+
+def stats_identity(shape: Tuple[int, ...]) -> jnp.ndarray:
+    z = jnp.zeros(shape + (NUM_STATS,), jnp.float32)
+    z = z.at[..., 2].set(POS_INF)
+    z = z.at[..., 3].set(NEG_INF)
+    return z
+
+
+def row_bitmap(vals: jnp.ndarray) -> jnp.ndarray:
+    """Per-value 32-bit linear-counting bitmap contribution."""
+    return (jnp.int32(1) << mix64(vals, salt=77, bits=5)).astype(jnp.int32)
+
+
+def _segment_or_scan(bm: jnp.ndarray, new_seg: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive segmented bitwise-OR scan along axis 0."""
+
+    def comb(a, b):
+        flag_a, val_a = a
+        flag_b, val_b = b
+        val = jnp.where(flag_b, val_b, val_a | val_b)
+        return flag_a | flag_b, val
+
+    flags = new_seg
+    if bm.ndim > 1:
+        flags = jnp.broadcast_to(new_seg[:, None], bm.shape)
+    _, out = jax.lax.associative_scan(comb, (flags, bm))
+    return out
+
+
+def bucket_ingest(
+    agg: BucketAgg,
+    key: jnp.ndarray,   # (N,) int32 sorted by (key, ts)
+    ts: jnp.ndarray,    # (N,) int32
+    vals: jnp.ndarray,  # (N, F) f32
+) -> BucketAgg:
+    """Merge an ingest batch into bucket aggregates (one fused pass).
+
+    Constraint (callers assert): a single batch spans fewer than NB buckets,
+    so each (key, slot) receives at most one new bucket id.  Slots whose
+    stored bucket id differs from the incoming id are reset first (ring
+    reuse) — the scatter analogue of OpenMLDB finalizing an old bucket.
+
+    All scatters route padding/no-op rows to out-of-bounds indices with
+    mode="drop", so duplicate-index .set hazards cannot occur.
+    """
+    nb = agg.num_buckets
+    K = agg.bucket.shape[0]
+    bucket_id = ts // jnp.int32(agg.size)
+    slot = bucket_id % nb
+
+    n = key.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    new_seg = jnp.concatenate(
+        [
+            jnp.array([True]),
+            (key[1:] != key[:-1]) | (bucket_id[1:] != bucket_id[:-1]),
+        ]
+    )
+    seg_id = jnp.cumsum(new_seg.astype(jnp.int32)) - 1  # (N,), 0..S-1
+
+    rs = row_stats(vals)   # (N, F, S)
+    bm = row_bitmap(vals)  # (N, F)
+
+    # --- per-(key,bucket) segment reduction into scratch rows -------------
+    width = vals.shape[1]
+    seg_stats = stats_identity((n, width))
+    seg_stats = seg_stats.at[seg_id, :, 0].add(rs[..., 0])
+    seg_stats = seg_stats.at[seg_id, :, 1].add(rs[..., 1])
+    seg_stats = seg_stats.at[seg_id, :, 2].min(rs[..., 2])
+    seg_stats = seg_stats.at[seg_id, :, 3].max(rs[..., 3])
+    seg_stats = seg_stats.at[seg_id, :, 4].add(rs[..., 4])
+    or_scan = _segment_or_scan(bm, new_seg)  # (N, F) inclusive per segment
+
+    # one representative (= last) row per segment
+    seg_end = jnp.concatenate([new_seg[1:], jnp.array([True])])
+    end_rows = jnp.nonzero(seg_end, size=n, fill_value=0)[0]
+    num_segs = seg_id[-1] + 1
+    seg_valid = jnp.arange(n, dtype=jnp.int32) < num_segs
+
+    rep_key = key[end_rows]
+    rep_slot = slot[end_rows]
+    rep_bucket = bucket_id[end_rows]
+    rep_stats = seg_stats[jnp.arange(n)]          # row s = segment s's totals
+    rep_bm = or_scan[end_rows]
+
+    # out-of-bounds key (=K) for padding rows => dropped by every scatter
+    k_v = jnp.where(seg_valid, rep_key, jnp.int32(K))
+    s_v = rep_slot
+
+    # --- reset slots holding a stale bucket --------------------------------
+    stored = agg.bucket.at[k_v, s_v].get(mode="fill", fill_value=-1)
+    stale = seg_valid & (stored != rep_bucket) & (stored != -1)
+    k_st = jnp.where(stale, rep_key, jnp.int32(K))
+    stats = agg.stats.at[k_st, rep_slot].set(
+        stats_identity((n, width)), mode="drop"
+    )
+    bitmap = agg.bitmap.at[k_st, rep_slot].set(
+        jnp.zeros((n, width), jnp.int32), mode="drop"
+    )
+
+    # --- combine the new segment aggregates --------------------------------
+    stats = stats.at[k_v, s_v, :, 0].add(rep_stats[..., 0], mode="drop")
+    stats = stats.at[k_v, s_v, :, 1].add(rep_stats[..., 1], mode="drop")
+    stats = stats.at[k_v, s_v, :, 2].min(rep_stats[..., 2], mode="drop")
+    stats = stats.at[k_v, s_v, :, 3].max(rep_stats[..., 3], mode="drop")
+    stats = stats.at[k_v, s_v, :, 4].add(rep_stats[..., 4], mode="drop")
+
+    # bitmap OR: (key, slot) pairs are unique among valid segments within a
+    # batch (batch spans < NB buckets), so gather-OR-set is race-free.
+    gathered = bitmap.at[k_v, s_v].get(mode="fill", fill_value=0)
+    bitmap = bitmap.at[k_v, s_v].set(gathered | rep_bm, mode="drop")
+
+    bucket_ids = agg.bucket.at[k_v, s_v].set(rep_bucket, mode="drop")
+    return BucketAgg(stats=stats, bitmap=bitmap, bucket=bucket_ids, size=agg.size)

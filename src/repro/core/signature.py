@@ -1,0 +1,139 @@
+"""Feature signatures & sketches — FeatInsight's high-dimensional toolkit.
+
+Paper: "feature signatures for high-dimensional scenarios (e.g., labeling
+product-item features)", "handling up to a trillion-dimensional feature
+space", and "specialized ML functions, such as top-N frequency counts".
+
+A signature maps a (possibly crossed) categorical value into a bounded
+hashed id space; the trillion-dimensional cross never materializes.  For
+model consumption the signature indexes a vocab-sharded embedding table via
+k independent hashes combined by learned weights ("multi-hash" / hash
+embeddings) — the gather is the perf-critical op implemented in
+``repro.kernels.signature``.
+
+Also here: a count-min sketch (the streaming top-N support structure) in
+pure JAX, used by the fraud-detection example for global heavy hitters —
+complementary to the exact per-key window TOPN_FREQ in the engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import mix64
+
+__all__ = [
+    "signature_ids",
+    "multi_hash_ids",
+    "hash_embedding_lookup_ref",
+    "CountMinSketch",
+    "cms_init",
+    "cms_update",
+    "cms_query",
+]
+
+
+def signature_ids(
+    cols: Sequence[jnp.ndarray], bits: int = 20, salt: int = 0
+) -> jnp.ndarray:
+    """Fold feature columns into one signature id per row, in [0, 2**bits)."""
+    acc = None
+    for i, c in enumerate(cols):
+        h = mix64(jnp.asarray(c), salt=salt + 0x9E37 * (i + 1), bits=32)
+        acc = h if acc is None else mix64(acc * 31 + h, salt=salt, bits=32)
+    assert acc is not None
+    return jnp.mod(acc, 2 ** bits).astype(jnp.int32)
+
+
+def multi_hash_ids(
+    sig: jnp.ndarray, num_hashes: int, table_size: int
+) -> jnp.ndarray:
+    """k independent re-hashes of a signature into a smaller table.
+
+    (..., ) int32 -> (..., k) int32 in [0, table_size).  Hash-embedding
+    trick: the trillion-dim signature space shares a 2**m-row table through
+    k probes, collision noise averaging out across probes.
+    """
+    hs = [
+        mix64(sig, salt=0x85EB * (j + 1) + 17, bits=31) % jnp.int32(table_size)
+        for j in range(num_hashes)
+    ]
+    return jnp.stack(hs, axis=-1).astype(jnp.int32)
+
+
+def hash_embedding_lookup_ref(
+    table: jnp.ndarray,      # (V, D)
+    sig: jnp.ndarray,        # (...,) int32 signatures
+    weights: jnp.ndarray,    # (num_hashes,) or (..., num_hashes) combine weights
+    num_hashes: int = 2,
+) -> jnp.ndarray:
+    """Pure-jnp oracle for the signature-embedding kernel: (..., D)."""
+    ids = multi_hash_ids(sig, num_hashes, table.shape[0])  # (..., k)
+    vecs = table[ids]                                       # (..., k, D)
+    w = jnp.broadcast_to(weights, ids.shape).astype(vecs.dtype)
+    return jnp.einsum("...k,...kd->...d", w, vecs)
+
+
+# ---------------------------------------------------------------------------
+# Count-min sketch (streaming heavy hitters)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CountMinSketch:
+    counts: jnp.ndarray  # (depth, width) f32
+
+    def tree_flatten(self):
+        return (self.counts,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def cms_init(depth: int = 4, width: int = 1024) -> CountMinSketch:
+    return CountMinSketch(jnp.zeros((depth, width), jnp.float32))
+
+
+def _cms_slots(items: jnp.ndarray, depth: int, width: int) -> jnp.ndarray:
+    return jnp.stack(
+        [
+            mix64(items, salt=0x1234 + 31 * d, bits=31) % jnp.int32(width)
+            for d in range(depth)
+        ],
+        axis=0,
+    )  # (depth, N)
+
+
+def cms_update(
+    sk: CountMinSketch, items: jnp.ndarray, weights: jnp.ndarray | None = None
+) -> CountMinSketch:
+    depth, width = sk.counts.shape
+    slots = _cms_slots(items, depth, width)
+    w = (
+        jnp.ones(items.shape, jnp.float32)
+        if weights is None
+        else weights.astype(jnp.float32)
+    )
+    rows = jnp.broadcast_to(
+        jnp.arange(depth, dtype=jnp.int32)[:, None], slots.shape
+    )
+    counts = sk.counts.at[rows.reshape(-1), slots.reshape(-1)].add(
+        jnp.broadcast_to(w, slots.shape).reshape(-1)
+    )
+    return CountMinSketch(counts)
+
+
+def cms_query(sk: CountMinSketch, items: jnp.ndarray) -> jnp.ndarray:
+    depth, width = sk.counts.shape
+    slots = _cms_slots(items, depth, width)
+    rows = jnp.broadcast_to(
+        jnp.arange(depth, dtype=jnp.int32)[:, None], slots.shape
+    )
+    est = sk.counts[rows, slots]  # (depth, N)
+    return est.min(axis=0)

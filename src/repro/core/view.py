@@ -1,0 +1,212 @@
+"""Feature views, lineage, versioning — FeatInsight's management layer.
+
+Paper §2 "Feature View Management": a *feature view* groups features defined
+by a single computation statement; lineage links each feature to its view,
+database (here: table schema), and defining expression; earlier versions of
+deployed services are cached so users can reuse prior definitions and
+"incrementally add new raw data attributes".
+
+The visual DAG of the paper is literally the :mod:`repro.core.expr` tree; a
+view's "SQL" rendering is produced by :func:`render_sql` for lineage display
+(and to honor the demo's SQL-centric UX in a headless way).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.expr import (
+    Agg,
+    BinOp,
+    Col,
+    Expr,
+    Hash,
+    Lit,
+    Signature,
+    UnOp,
+    WindowAgg,
+    collect_columns,
+    collect_window_aggs,
+)
+from repro.core.storage import TableSchema
+
+__all__ = ["FeatureView", "FeatureRegistry", "render_sql"]
+
+
+def render_sql(name: str, expr: Expr, schema: TableSchema) -> str:
+    """Render one feature's defining expression as OpenMLDB-flavoured SQL."""
+
+    def r(e: Expr) -> str:
+        if isinstance(e, Col):
+            return e.name
+        if isinstance(e, Lit):
+            return repr(e.value)
+        if isinstance(e, BinOp):
+            sym = {
+                "add": "+", "sub": "-", "mul": "*", "div": "/",
+                "gt": ">", "lt": "<", "ge": ">=", "le": "<=", "eq": "=",
+            }[e.op]
+            return f"({r(e.lhs)} {sym} {r(e.rhs)})"
+        if isinstance(e, UnOp):
+            if e.op == "clip":
+                lo, hi = e.params
+                return f"clip({r(e.arg)}, {lo}, {hi})"
+            return f"{e.op}({r(e.arg)})"
+        if isinstance(e, Hash):
+            return f"hash{e.bits}({r(e.arg)})"
+        if isinstance(e, Signature):
+            args = ", ".join(r(a) for a in e.args)
+            return f"signature{e.bits}({args})"
+        if isinstance(e, WindowAgg):
+            w = e.window
+            bound = (
+                f"{w.size} PRECEDING"
+                if w.mode == "range"
+                else f"{w.size - 1} ROWS PRECEDING"
+            )
+            fn = e.agg.value
+            if e.agg == Agg.TOPN_FREQ:
+                fn = f"top{e.n + 1}_freq"
+            return (
+                f"{fn}({r(e.arg)}) OVER (PARTITION BY {schema.key} "
+                f"ORDER BY {schema.ts} RANGE BETWEEN {bound} AND CURRENT ROW)"
+            )
+        raise TypeError(type(e))
+
+    return f"SELECT {r(expr)} AS {name}"
+
+
+@dataclasses.dataclass
+class FeatureView:
+    """A named, versioned set of features over one table schema."""
+
+    name: str
+    schema: TableSchema
+    features: Dict[str, Expr]
+    version: int = 1
+    description: str = ""
+
+    def lineage(self) -> Dict[str, Dict]:
+        """feature -> {view, version, source columns, window specs, sql}."""
+        out = {}
+        for fname, expr in self.features.items():
+            waggs = collect_window_aggs([expr])
+            out[fname] = {
+                "view": self.name,
+                "version": self.version,
+                "table": self.schema.name,
+                "columns": list(collect_columns([expr])),
+                "windows": [
+                    {
+                        "agg": w.agg.value,
+                        "mode": w.window.mode,
+                        "size": w.window.size,
+                    }
+                    for w in waggs.values()
+                ],
+                "sql": render_sql(fname, expr, self.schema),
+            }
+        return out
+
+    def evolve(self, new_features: Dict[str, Expr], description: str = "") -> "FeatureView":
+        """Incremental redefinition: prior features are kept, new/overridden
+        ones merged, version bumped (the paper's cached-version reuse)."""
+        merged = dict(self.features)
+        merged.update(new_features)
+        return FeatureView(
+            name=self.name,
+            schema=self.schema,
+            features=merged,
+            version=self.version + 1,
+            description=description or self.description,
+        )
+
+
+class FeatureRegistry:
+    """All views + version history + deployed services (the metadata plane).
+
+    The paper persists this in the Sage-Studio control plane; here it is an
+    in-process registry with JSON export so the launcher/checkpointer can
+    persist it alongside model state.
+    """
+
+    def __init__(self) -> None:
+        self._views: Dict[Tuple[str, int], FeatureView] = {}
+        self._latest: Dict[str, int] = {}
+        self._services: Dict[str, Dict] = {}
+        self._events: List[Dict] = []
+
+    # -- views ---------------------------------------------------------------
+
+    def register(self, view: FeatureView) -> FeatureView:
+        key = (view.name, view.version)
+        if key in self._views:
+            raise ValueError(f"view {key} already registered")
+        self._views[key] = view
+        self._latest[view.name] = max(
+            self._latest.get(view.name, 0), view.version
+        )
+        self._log("register_view", view=view.name, version=view.version)
+        return view
+
+    def get(self, name: str, version: Optional[int] = None) -> FeatureView:
+        v = version if version is not None else self._latest[name]
+        return self._views[(name, v)]
+
+    def versions(self, name: str) -> List[int]:
+        return sorted(v for (n, v) in self._views if n == name)
+
+    def lineage(self, name: str, feature: str, version: Optional[int] = None) -> Dict:
+        return self.get(name, version).lineage()[feature]
+
+    # -- services (deployments) ------------------------------------------------
+
+    def deploy(
+        self, service: str, view_name: str, version: Optional[int] = None,
+        description: str = "",
+    ) -> Dict:
+        view = self.get(view_name, version)
+        rec = {
+            "service": service,
+            "view": view.name,
+            "version": view.version,
+            "features": list(view.features),
+            "tables": [view.schema.name],
+            "description": description,
+            "deployed_at": time.time(),
+        }
+        self._services[service] = rec
+        self._log("deploy", **{k: rec[k] for k in ("service", "view", "version")})
+        return rec
+
+    def service(self, name: str) -> Dict:
+        return self._services[name]
+
+    # -- bookkeeping --------------------------------------------------------------
+
+    def _log(self, kind: str, **kw) -> None:
+        self._events.append({"kind": kind, "t": time.time(), **kw})
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "views": [
+                    {
+                        "name": v.name,
+                        "version": v.version,
+                        "table": v.schema.name,
+                        "features": {
+                            f: render_sql(f, e, v.schema)
+                            for f, e in v.features.items()
+                        },
+                    }
+                    for v in self._views.values()
+                ],
+                "services": self._services,
+            },
+            indent=2,
+            default=str,
+        )

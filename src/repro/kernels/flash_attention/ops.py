@@ -1,0 +1,68 @@
+"""jit'd public wrapper for flash attention with automatic fallback.
+
+``attention(...)`` dispatches:
+* ``impl="pallas"``     — the Pallas TPU kernel (interpret=True on CPU);
+* ``impl="xla"``        — the pure-jnp reference (used by the dry-run path,
+                          where XLA's fused attention is the object of
+                          roofline study);
+* ``impl="auto"``       — pallas on TPU backends, xla elsewhere.
+
+Head-dim padding: the kernel wants lane-aligned D; if D % 128 != 0 we pad
+q/k/v with zeros (attention output is unaffected: padded q·k lanes add 0).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["attention"]
+
+
+def _pad_d(x: jnp.ndarray, mult: int = 128) -> jnp.ndarray:
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "impl", "block_q", "block_k", "interpret"
+    ),
+)
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    d0 = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d0 ** 0.5)
+    qp, kp, vp = _pad_d(q), _pad_d(k), _pad_d(v)
+    out = flash_attention_pallas(
+        qp, kp, vp,
+        causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out[..., :d0]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for flash attention (causal / sliding window / GQA)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32),
+        kk.astype(jnp.float32),
+    ) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,33 @@
+"""jit'd wrapper for signature embedding lookup."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.signature import multi_hash_ids
+from repro.kernels.signature.ref import signature_embed_ref
+from repro.kernels.signature.signature import signature_embed_pallas
+
+__all__ = ["signature_embed"]
+
+
+@functools.partial(jax.jit, static_argnames=("num_hashes", "impl", "interpret"))
+def signature_embed(
+    table: jnp.ndarray,    # (V, D)
+    sig: jnp.ndarray,      # (N,) int32 signatures
+    weights: jnp.ndarray,  # (num_hashes,)
+    *,
+    num_hashes: int = 2,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return signature_embed_ref(table, sig, weights, num_hashes)
+    ids = multi_hash_ids(sig, num_hashes, table.shape[0])  # (N, k)
+    out = signature_embed_pallas(table, ids, weights, interpret=interpret)
+    return out.astype(table.dtype)

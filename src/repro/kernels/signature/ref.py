@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the multi-hash signature embedding lookup."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.signature import hash_embedding_lookup_ref, multi_hash_ids
+
+__all__ = ["signature_embed_ref", "multi_hash_ids"]
+
+
+def signature_embed_ref(
+    table: jnp.ndarray,    # (V, D)
+    sig: jnp.ndarray,      # (N,) int32 signature ids
+    weights: jnp.ndarray,  # (num_hashes,)
+    num_hashes: int,
+) -> jnp.ndarray:
+    """(N, D) combined embedding."""
+    return hash_embedding_lookup_ref(table, sig, weights, num_hashes)

@@ -1,0 +1,64 @@
+"""Multi-hash signature embedding gather (Pallas TPU).
+
+FeatInsight represents trillion-dimensional feature spaces by hashed
+signatures; the model-side realization is a hash embedding: each signature
+probes a shared (V, D) table at k hashed rows, combined with learned
+weights.  The bottleneck is the sparse gather — on TPU the idiomatic form
+is a **scalar-prefetch-driven DMA**: row ids are computed ahead of the
+grid (XLA-side, cheap int ops), prefetched into SMEM, and each grid step's
+BlockSpec index_map selects the (1, D) table row to DMA into VMEM.  The
+MXU never sees an indexed load; the DMA engine does the pointer chase.
+
+Grid: (N, k) — k sequential probes accumulate into the same output row
+(the output block index is constant across the k axis, so the row stays
+VMEM-resident until its last probe).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["signature_embed_pallas"]
+
+
+def _sig_embed_kernel(ids_ref, table_row_ref, w_ref, out_ref):
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[0, j]
+    out_ref[0, :] += w * table_row_ref[0, :].astype(jnp.float32)
+
+
+def signature_embed_pallas(
+    table: jnp.ndarray,    # (V, D)
+    ids: jnp.ndarray,      # (N, k) int32 precomputed hash rows
+    weights: jnp.ndarray,  # (k,) f32
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    N, k = ids.shape
+    V, D = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N, k),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, j, ids: (ids[i, j], 0)),
+            pl.BlockSpec((1, k), lambda i, j, ids: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda i, j, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _sig_embed_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
+        interpret=interpret,
+    )(ids, table, weights.reshape(1, k).astype(jnp.float32))

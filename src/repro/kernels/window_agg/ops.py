@@ -1,0 +1,54 @@
+"""jit'd wrapper for the pre-aggregated window-stats kernel.
+
+``window_stats(...)`` computes (Q, NW, L, 5) stat vectors for a batch of
+request rows against an online store's state, dispatching between the
+Pallas kernel and the jnp reference.  Finalization (mean/std/...) is done
+by the caller (``OnlineFeatureStore`` / benchmarks) — the kernel's contract
+is the composable stat vector, which is what pre-aggregation preserves.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.window_agg.ref import window_stats_ref
+from repro.kernels.window_agg.window_agg import window_stats_pallas
+
+__all__ = ["window_stats"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("windows", "bucket_size", "impl", "interpret")
+)
+def window_stats(
+    ring_ts: jnp.ndarray,
+    ring_lanes: jnp.ndarray,
+    bagg_stats: jnp.ndarray,
+    bagg_bucket: jnp.ndarray,
+    q_key: jnp.ndarray,
+    q_ts: jnp.ndarray,
+    q_lanes: jnp.ndarray,
+    *,
+    windows: Sequence[int],
+    bucket_size: int,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return window_stats_ref(
+            ring_ts, ring_lanes, bagg_stats, bagg_bucket,
+            q_key, q_ts, q_lanes,
+            windows=tuple(windows), bucket_size=bucket_size,
+        )
+    return window_stats_pallas(
+        ring_ts, ring_lanes, bagg_stats, bagg_bucket,
+        q_key, q_ts, q_lanes,
+        windows=tuple(windows), bucket_size=bucket_size,
+        interpret=interpret,
+    )

@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the pre-aggregated window query kernel.
+
+Given the online store's ring buffers + bucket pre-aggregates and a batch
+of request rows, compute for every (query, window, lane) the five-stat
+vector (sum, count, min, max, sumsq) over the RANGE window ending at the
+request (inclusive of the request row) — the exact semantics of
+``OnlineFeatureStore._query_pure_preagg``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+POS_INF = jnp.float32(3.0e38)
+NEG_INF = jnp.float32(-3.0e38)
+
+__all__ = ["window_stats_ref", "POS_INF", "NEG_INF"]
+
+
+def window_stats_ref(
+    ring_ts: jnp.ndarray,      # (K, C) int32 (slot order arbitrary)
+    ring_lanes: jnp.ndarray,   # (K, C, L) f32
+    bagg_stats: jnp.ndarray,   # (K, NB, L, 5) f32
+    bagg_bucket: jnp.ndarray,  # (K, NB) int32 (-1 empty)
+    q_key: jnp.ndarray,        # (Q,) int32
+    q_ts: jnp.ndarray,         # (Q,) int32
+    q_lanes: jnp.ndarray,      # (Q, L) f32 request-row lane values
+    windows: Sequence[int],
+    bucket_size: int,
+) -> jnp.ndarray:
+    """Returns (Q, NW, L, 5) composed stats."""
+    B = jnp.int32(bucket_size)
+    ts = ring_ts[q_key]          # (Q, C)
+    lanes = ring_lanes[q_key]    # (Q, C, L)
+    bstats = bagg_stats[q_key]   # (Q, NB, L, 5)
+    bids = bagg_bucket[q_key]    # (Q, NB)
+    valid = ts != jnp.int32(-2147483648)
+    bucket_row = ts // B
+
+    outs = []
+    for T in windows:
+        T = jnp.int32(T)
+        lo = q_ts - T + 1
+        b_q = q_ts // B
+        b_lo = (q_ts - T) // B
+        not_future = ts <= q_ts[:, None]
+        in_lo = ts >= lo[:, None]
+        head = (
+            valid & not_future & in_lo
+            & (bucket_row == b_lo[:, None]) & (b_lo != b_q)[:, None]
+        )
+        tail = valid & not_future & in_lo & (bucket_row == b_q[:, None])
+        raw = head | tail
+        rawf = raw.astype(jnp.float32)[..., None]  # (Q, C, 1)
+
+        g = lanes
+        s_raw = jnp.stack(
+            [
+                (g * rawf).sum(axis=1) + q_lanes,
+                rawf.sum(axis=1) + 1.0,
+                jnp.minimum(
+                    jnp.where(rawf > 0, g, POS_INF).min(axis=1), q_lanes
+                ),
+                jnp.maximum(
+                    jnp.where(rawf > 0, g, NEG_INF).max(axis=1), q_lanes
+                ),
+                (g * g * rawf).sum(axis=1) + q_lanes * q_lanes,
+            ],
+            axis=-1,
+        )  # (Q, L, 5)
+
+        mid_ok = (bids > b_lo[:, None]) & (bids < b_q[:, None])  # (Q, NB)
+        mo = mid_ok[..., None, None]
+        s_mid = jnp.stack(
+            [
+                jnp.where(mo[..., 0], bstats[..., 0], 0.0).sum(axis=1),
+                jnp.where(mo[..., 0], bstats[..., 1], 0.0).sum(axis=1),
+                jnp.where(mo[..., 0], bstats[..., 2], POS_INF).min(axis=1),
+                jnp.where(mo[..., 0], bstats[..., 3], NEG_INF).max(axis=1),
+                jnp.where(mo[..., 0], bstats[..., 4], 0.0).sum(axis=1),
+            ],
+            axis=-1,
+        )  # (Q, L, 5)
+
+        s = jnp.stack(
+            [
+                s_raw[..., 0] + s_mid[..., 0],
+                s_raw[..., 1] + s_mid[..., 1],
+                jnp.minimum(s_raw[..., 2], s_mid[..., 2]),
+                jnp.maximum(s_raw[..., 3], s_mid[..., 3]),
+                s_raw[..., 4] + s_mid[..., 4],
+            ],
+            axis=-1,
+        )
+        outs.append(s)
+    return jnp.stack(outs, axis=1)  # (Q, NW, L, 5)

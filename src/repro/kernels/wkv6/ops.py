@@ -1,0 +1,100 @@
+"""jit'd wrapper for the RWKV6 time-mix core.
+
+``wkv6(...)`` dispatches between the Pallas kernel (TPU target, interpret
+on CPU tests) and an XLA chunked implementation (same factorization,
+vectorized with vmap over chunks) used by the dry-run/model path.  Padding:
+T is padded to a multiple of the chunk with identity rows (r=k=0, lw=0),
+which leave both y and the carried state untouched.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.ref import LOG_W_MIN
+from repro.kernels.wkv6.wkv6 import CHUNK, wkv6_pallas
+
+__all__ = ["wkv6"]
+
+
+def _wkv6_xla_chunked(r, k, v, lw, u, s0, chunk):
+    """Same chunk factorization as the kernel, as one lax.scan over chunks."""
+    B, H, T, D = r.shape
+    nc = T // chunk
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, H, nc, chunk, D)
+    kc = k.astype(f32).reshape(B, H, nc, chunk, D)
+    vc = v.astype(f32).reshape(B, H, nc, chunk, D)
+    lwc = jnp.clip(lw.astype(f32), LOG_W_MIN, 0.0).reshape(B, H, nc, chunk, D)
+
+    cum = jnp.cumsum(lwc, axis=3)
+    cum_prev = cum - lwc
+    r_t = rc * jnp.exp(cum_prev)
+    k_t = kc * jnp.exp(-cum)
+    A = jnp.einsum("bhcti,bhcai->bhcta", r_t, k_t)
+    t_pos = jnp.arange(chunk)[:, None]
+    a_pos = jnp.arange(chunk)[None, :]
+    A = jnp.where(a_pos < t_pos, A, 0.0)
+    y_intra = jnp.einsum("bhcta,bhcad->bhctd", A, vc)
+    diag_coef = jnp.sum(rc * u[None, :, None, None, :] * kc, axis=-1)
+    y_local = y_intra + diag_coef[..., None] * vc
+
+    decay_last = jnp.exp(cum[:, :, :, -1])              # (B,H,nc,D)
+    kv = jnp.einsum("bhcai,bhcad->bhcid", k_t, vc)      # (B,H,nc,D,D)
+
+    def step(S, xs):
+        r_t_c, y_local_c, decay_c, kv_c = xs
+        y = jnp.einsum("bhti,bhid->bhtd", r_t_c, S) + y_local_c
+        S_new = decay_c[..., :, None] * (S + kv_c)
+        return S_new, y
+
+    xs = (
+        jnp.moveaxis(r_t, 2, 0),
+        jnp.moveaxis(y_local, 2, 0),
+        jnp.moveaxis(decay_last, 2, 0),
+        jnp.moveaxis(kv, 2, 0),
+    )
+    S_fin, ys = jax.lax.scan(step, s0.astype(f32), xs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, T, D)
+    return y.astype(r.dtype), S_fin
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "interpret"))
+def wkv6(
+    r: jnp.ndarray,    # (B, H, T, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lw: jnp.ndarray,   # (B, H, T, D) log decay (clamped internally)
+    u: jnp.ndarray,    # (H, D)
+    s0: jnp.ndarray | None = None,
+    *,
+    impl: str = "auto",
+    chunk: int = CHUNK,
+    interpret: bool = False,
+):
+    """Returns (y (B,H,T,D), final_state (B,H,D,D))."""
+    B, H, T, D = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+
+    pad = (-T) % chunk
+    if pad:
+        def padt(x, fill=0.0):
+            return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                           constant_values=fill)
+        r, k, v, lw = padt(r), padt(k), padt(v), padt(lw)
+
+    if impl == "pallas":
+        y, s_fin = wkv6_pallas(
+            r, k, v, lw, u, s0, chunk=chunk, interpret=interpret
+        )
+    else:
+        y, s_fin = _wkv6_xla_chunked(r, k, v, lw, u, s0, chunk)
+    if pad:
+        y = y[:, :, :T]
+    return y, s_fin

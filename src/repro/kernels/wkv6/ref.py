@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) time-mix recurrence.
+
+Per head with head dim D, per timestep t:
+
+    y_t    = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t)
+    S_t    = diag(w_t) S_{t-1} + k_t ⊗ v_t
+
+with data-dependent per-channel decay w_t = exp(lw_t), lw_t <= 0.  This is
+exactly FeatInsight's "long window with pre-aggregation" pattern in
+disguise: S is a running pre-aggregate and y composes it with the current
+row's contribution.
+
+Numerical contract shared with the kernel: lw is clamped to
+[LOG_W_MIN, 0]; the clamp bounds intra-chunk exponent magnitudes so the
+chunked factorization stays inside f32 range.  (RWKV's reference CUDA
+kernels apply an equivalent stability clamp.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv6_ref", "LOG_W_MIN"]
+
+LOG_W_MIN = -3.5  # min per-step log-decay (w >= exp(-3.5) ~ 0.03)
+
+
+def wkv6_ref(
+    r: jnp.ndarray,   # (B, H, T, D)
+    k: jnp.ndarray,   # (B, H, T, D)
+    v: jnp.ndarray,   # (B, H, T, D)
+    lw: jnp.ndarray,  # (B, H, T, D) log-decay (<= 0 after clamp)
+    u: jnp.ndarray,   # (H, D) bonus
+    state: jnp.ndarray | None = None,  # (B, H, D, D) initial S
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,H,T,D), final state (B,H,D,D))."""
+    B, H, T, D = r.shape
+    lw = jnp.clip(lw.astype(jnp.float32), LOG_W_MIN, 0.0)
+    w = jnp.exp(lw)
+    if state is None:
+        state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs  # (B, H, D) each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,D,D)
+        y = jnp.einsum(
+            "bhi,bhij->bhj",
+            r_t,
+            S + u[None, :, :, None] * kv,
+        )
+        S_new = w_t[..., :, None] * S + kv
+        return S_new, y
+
+    xs = tuple(
+        jnp.moveaxis(x.astype(jnp.float32), 2, 0) for x in (r, k, v, w)
+    )
+    S_fin, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 2)  # (B, H, T, D)
+    return y.astype(r.dtype), S_fin

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract roofline terms.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init) — do not move them.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+
+Results are cached as JSON under experiments/dryrun/ (one file per cell),
+so an interrupted sweep resumes where it left off.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import (
+    SHAPES, ShapeSpec, cells, get_config, shape_applicable,
+)
+from repro.launch.mesh import cfg_for, make_production_mesh, rules_for
+from repro.launch.roofline import (
+    CollectiveStats, model_flops, parse_collectives, roofline_terms,
+)
+from repro.launch.specs import (
+    batch_partition, batch_specs, cache_partition, cache_specs,
+)
+from repro.models import build_model
+from repro.optim.adamw import adamw_init
+from repro.sharding.api import use_rules
+from repro.sharding.params import (
+    opt_state_specs, param_specs, tree_named_shardings,
+)
+from repro.train.step import TrainSettings, build_train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _num_microbatches(cfg, shape: ShapeSpec, mesh) -> int:
+    """One sequence per data shard per microbatch (activation budget)."""
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    nm = max(1, shape.global_batch // data)
+    while shape.global_batch % nm != 0:
+        nm -= 1
+    return nm
+
+
+def _cost_get(ca, key: str) -> float:
+    if isinstance(ca, dict):
+        return float(ca.get(key, 0.0) or 0.0)
+    if isinstance(ca, (list, tuple)) and ca and isinstance(ca[0], dict):
+        return float(ca[0].get(key, 0.0) or 0.0)
+    return 0.0
+
+
+def run_cell(
+    arch: str, shape_name: str, *, multi_pod: bool = False,
+    extra: Optional[Dict] = None, return_lowered: bool = False,
+    skip_probe: bool = False, variant: str = "base",
+) -> Dict:
+    """Lower + compile one cell; return the roofline record."""
+    shape = SHAPES[shape_name]
+    cfg = cfg_for(get_config(arch), multi_pod=multi_pod, variant=variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, multi_pod=multi_pod, variant=variant)
+    if extra:
+        rules.update(extra.get("rules", {}))
+    model = build_model(cfg)
+    n_devices = 512 if multi_pod else 256
+    record: Dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "n_devices": n_devices,
+        "variant": variant,
+    }
+
+    t0 = time.time()
+    with mesh, use_rules(rules, mesh):
+        params_sds = jax.eval_shape(lambda: model.init(0))
+        p_specs = param_specs(params_sds, cfg, rules, mesh)
+        p_shard = tree_named_shardings(mesh, p_specs)
+
+        if shape.kind == "train":
+            nm = extra.get("num_microbatches") if extra else None
+            nm = nm or _num_microbatches(cfg, shape, mesh)
+            record["num_microbatches"] = nm
+            settings = TrainSettings(num_microbatches=nm)
+            step = build_train_step(model, cfg, settings)
+            opt_sds = jax.eval_shape(adamw_init, params_sds)
+            o_specs = opt_state_specs(p_specs, params_sds, mesh)
+            o_shard = tree_named_shardings(mesh, o_specs)
+            b_specs = batch_specs(cfg, shape)
+            b_shard = tree_named_shardings(
+                mesh, batch_partition(cfg, shape, rules, mesh)
+            )
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(params_sds, opt_sds, b_specs)
+        elif shape.kind == "prefill":
+            b_specs = batch_specs(cfg, shape)
+            b_shard = tree_named_shardings(
+                mesh, batch_partition(cfg, shape, rules, mesh)
+            )
+            if cfg.family in ("dense", "moe", "encdec"):
+                fn = lambda p, b: model.prefill(p, b, max_len=shape.seq_len)
+            else:
+                fn = lambda p, b: model.prefill(p, b)
+            lowered = jax.jit(
+                fn, in_shardings=(p_shard, b_shard),
+            ).lower(params_sds, b_specs)
+        else:  # decode
+            c_sds = cache_specs(cfg, shape)
+            c_shard = tree_named_shardings(
+                mesh, cache_partition(cfg, shape, rules, mesh)
+            )
+            b_specs = batch_specs(cfg, shape)
+            b_shard = tree_named_shardings(
+                mesh, batch_partition(cfg, shape, rules, mesh)
+            )
+            fn = lambda p, c, t: model.decode_step(p, c, t)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(p_shard, c_shard, b_shard["tokens"]),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            ).lower(params_sds, c_sds, b_specs["tokens"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis()
+    flops = _cost_get(ca, "flops")
+    bytes_acc = _cost_get(ca, "bytes accessed")
+    try:
+        ma = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_estimate_bytes": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        }
+    except Exception as e:  # pragma: no cover
+        record["memory"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    record["collectives"] = {
+        "counts": coll.counts,
+        "bytes_by_kind": coll.bytes_by_kind,
+        "ici_bytes": coll.ici_bytes,
+        "dcn_bytes": coll.dcn_bytes,
+    }
+    # raw cost_analysis counts while-loop (scan) bodies ONCE -> kept for
+    # reference; the roofline terms use the probe-corrected totals below.
+    record["raw_scan_counted_once"] = {
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+    }
+    if skip_probe:
+        record["collectives_raw"] = record["collectives"]
+        if return_lowered:
+            return record, lowered
+        return record
+
+    from repro.launch.probe import corrected_measure
+    corrected, probe_detail = corrected_measure(
+        arch, shape_name, multi_pod=multi_pod,
+        num_microbatches=record.get("num_microbatches", 1),
+        variant=variant,
+    )
+    cstats = CollectiveStats(
+        counts=coll.counts, bytes_by_kind=coll.bytes_by_kind,
+        ici_bytes=int(corrected.ici), dcn_bytes=int(corrected.dcn),
+    )
+    terms = roofline_terms(corrected.flops, corrected.bytes, cstats)
+    mf = model_flops(cfg, shape, shape.kind)
+    record.update(
+        flops_per_device=corrected.flops,
+        bytes_per_device=corrected.bytes,
+        probe_detail=probe_detail,
+        model_flops_global=mf,
+        model_flops_per_device=mf / n_devices,
+        useful_flops_ratio=(
+            (mf / n_devices) / corrected.flops if corrected.flops else 0.0
+        ),
+        roofline=terms,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        hlo_bytes=len(hlo),
+    )
+    if return_lowered:
+        return record, lowered
+    return record
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool,
+              tag: str = "") -> pathlib.Path:
+    mesh = "multi" if multi_pod else "single"
+    suffix = f"-{tag}" if tag else ""
+    return OUT_DIR / f"{arch}__{shape_name}__{mesh}{suffix}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="base",
+                    help="sharding variant from launch.mesh.VARIANTS")
+    ap.add_argument("--tag", default="", help="file tag (defaults to variant)")
+    args = ap.parse_args()
+    if args.variant != "base" and not args.tag:
+        args.tag = args.variant
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    todo = []
+    if args.all:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for arch, shape, ok, reason in cells():
+            for mp in meshes:
+                todo.append((arch, shape, mp, ok, reason))
+    else:
+        assert args.arch and args.shape
+        ok, reason = shape_applicable(args.arch, args.shape)
+        todo.append((args.arch, args.shape, args.multi_pod, ok, reason))
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mp, ok, reason in todo:
+        path = cell_path(arch, shape, mp, args.tag)
+        if path.exists() and not args.force:
+            print(f"[cached] {path.name}")
+            continue
+        if not ok:
+            rec = {
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if mp else "16x16",
+                "skipped": True, "reason": reason,
+            }
+            path.write_text(json.dumps(rec, indent=2))
+            print(f"[skip]   {arch} x {shape}: {reason.split(':')[0]}")
+            n_skip += 1
+            continue
+        print(f"[run]    {arch} x {shape} mesh={'2x16x16' if mp else '16x16'}"
+              f" variant={args.variant}")
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp, variant=args.variant)
+            path.write_text(json.dumps(rec, indent=2))
+            r = rec["roofline"]
+            print(
+                f"         ok: compile={rec['compile_s']}s "
+                f"flops/dev={rec['flops_per_device']:.3e} "
+                f"terms(c/m/coll)={r['compute_s']:.4f}/"
+                f"{r['memory_s']:.4f}/{r['collective_s']:.4f}s "
+                f"dominant={r['dominant']}"
+            )
+            n_ok += 1
+        except Exception as e:
+            n_fail += 1
+            err = {
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if mp else "16x16",
+                "error": str(e)[:2000],
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            path.with_suffix(".error.json").write_text(json.dumps(err, indent=2))
+            print(f"         FAIL: {str(e)[:300]}")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""HLO collective inspector — the perf-loop's profiler substitute.
+
+Lowers ONE cell (optionally with reduced layer count and rule overrides)
+on the production mesh and prints every collective op with its shape,
+byte count, and source line, largest first.  This is how hypotheses in
+EXPERIMENTS.md §Perf get grounded: the dry-run roofline says WHICH term
+dominates; this says WHY.
+
+  python -m repro.launch.inspect_hlo --arch qwen3-32b --shape decode_32k \
+      --layers 2 [--multi-pod] [--rule kv_head_dim=None] [--top 20]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import re
+
+_SIZES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def shape_bytes(sig: str) -> int:
+    """'bf16[8,4096,8,8]{...}' -> bytes (first shape in a possibly-tuple)."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([0-9,]*)\]", sig):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _SIZES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _SIZES[dt]
+    return total
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override n_layers (0 = full)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="override sharding rule, e.g. kv_head_dim=None")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--bytes-by-op", action="store_true")
+    ap.add_argument("--cfg", action="append", default=[],
+                    help="override config field, e.g. moe_groups=16")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs.registry import SHAPES, get_config
+    from repro.launch import dryrun as dr
+    from repro.launch.mesh import make_production_mesh, rules_for
+
+    cfg = get_config(args.arch)
+    if args.layers:
+        over = {"n_layers": args.layers}
+        if cfg.family == "encdec":
+            over["n_encoder_layers"] = args.layers
+        cfg = cfg.replace(**over)
+
+    rules = rules_for(cfg, multi_pod=args.multi_pod)
+    for r in args.rule:
+        k, v = r.split("=")
+        rules[k] = None if v in ("None", "none", "") else (
+            tuple(v.split("+")) if "+" in v else v
+        )
+
+    for c in args.cfg:
+        k, v = c.split("=")
+        cfg = cfg.replace(**{k: int(v) if v.lstrip("-").isdigit() else v})
+
+    # lower via the dryrun cell machinery but with our cfg/rules.
+    # NB: dryrun imported get_config into its own namespace -- patch BOTH.
+    import repro.configs.registry as registry
+    orig = registry.get_config
+    registry.get_config = lambda a: cfg
+    dr.get_config = lambda a: cfg
+    try:
+        extra = {"rules": rules}
+        if args.microbatches:
+            extra["num_microbatches"] = args.microbatches
+        rec, lowered = dr.run_cell(
+            args.arch, args.shape, multi_pod=args.multi_pod,
+            extra=extra, return_lowered=True, skip_probe=True,
+        )
+    finally:
+        registry.get_config = orig
+        dr.get_config = orig
+
+    hlo = lowered.compile().as_text()
+
+    if args.bytes_by_op:
+        # rank ALL ops by output bytes (coarse where-does-memory-go view)
+        allops = []
+        for line in hlo.splitlines():
+            ls = line.strip()
+            m = re.match(r"%?(\S+) = ((?:\()?[a-z0-9]+\[[^=]*?) ([a-z\-]+)\(",
+                         ls)
+            if not m:
+                continue
+            b = shape_bytes(m.group(2))
+            if b < (1 << 20):
+                continue
+            src = ""
+            mm = re.search(r'op_name="([^"]+)"', ls)
+            if mm:
+                src = mm.group(1)[-70:]
+            allops.append((b, m.group(3), m.group(2)[:48], src))
+        allops.sort(reverse=True)
+        print(f"\n== ops by output bytes (>1MiB): {len(allops)} ==")
+        agg = {}
+        for b, kind, sig, src in allops:
+            agg[kind] = agg.get(kind, 0) + b
+        for k, v in sorted(agg.items(), key=lambda x: -x[1]):
+            print(f"  total {v:>14.3e}  {k}")
+        for b, kind, sig, src in allops[: args.top]:
+            print(f"  {b:>14.3e}  {kind:<22s} {sig:<50s} {src}")
+
+    ops = []
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?\S+ = (\S+) (all-gather|all-reduce|reduce-scatter|"
+                     r"all-to-all|collective-permute)", ls)
+        if m:
+            b = shape_bytes(m.group(1))
+            kind = m.group(2)
+            src = ""
+            mm = re.search(r'op_name="([^"]+)"', ls)
+            if mm:
+                src = mm.group(1)[-90:]
+            ops.append((b, kind, m.group(1)[:60], src))
+    ops.sort(reverse=True)
+    total = sum(b for b, *_ in ops)
+    print(f"\n== collectives: {len(ops)} ops, {total:.3e} bytes total "
+          f"(layers={args.layers or 'full'}) ==")
+    for b, kind, sig, src in ops[: args.top]:
+        print(f"  {b:>14.3e}  {kind:<20s} {sig:<62s} {src}")
+
+
+if __name__ == "__main__":
+    main()

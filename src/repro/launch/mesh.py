@@ -1,0 +1,72 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests and benches see 1 CPU device; only
+dryrun.py sets XLA_FLAGS for 512 host devices before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "rules_for", "cfg_for", "VARIANTS"]
+
+# Perf-iteration variants (EXPERIMENTS.md §Perf): named rule overrides so
+# each hypothesis is a one-flag dry-run away and probes cache per-variant.
+VARIANTS = {
+    "base": {},
+    # flash-decoding cache layout: shard the KV sequence over the model
+    # axis; softmax-stat psums (KB) replace the K/V all-gather (GB)
+    "kvseq": {"kv_seq": "model"},
+    # group-local MoE dispatch (+ kvseq): G = data-shard count so routing
+    # sort/scatter never crosses shards; EP exchange becomes an all-to-all
+    "moegroup": {"kv_seq": "model"},
+    # ZeRO-2-style sharded gradient accumulation: per-microbatch gradient
+    # reduction becomes a reduce-scatter into a (pod,data)-sharded
+    # accumulator instead of a full all-reduce
+    "gradrs": {"kv_seq": "model", "grad_accum": ("pod", "data")},
+    "gradrs1p": {"kv_seq": "model", "grad_accum": ("data",)},
+}
+
+# config-level overrides per variant (applied by dryrun/probe via cfg_for)
+CFG_VARIANTS = {
+    "moegroup": {"moe_groups": 16},
+}
+
+
+def cfg_for(cfg, *, multi_pod: bool = False, variant: str = "base"):
+    over = dict(CFG_VARIANTS.get(variant, {}))
+    if "moe_groups" in over and multi_pod:
+        over["moe_groups"] = 32  # pod x data shards
+    return cfg.replace(**over) if over else cfg
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def rules_for(cfg, *, multi_pod: bool = False, variant: str = "base"):
+    """Logical-axis rules adjusted per architecture.
+
+    MoE: 64 experts (moonshot) -> expert-parallel on "model"; 8 experts
+    (mixtral) -> experts replicated, expert FFN tensor-sharded on d_ff.
+    """
+    from repro.sharding.api import DEFAULT_RULES, MULTI_POD_RULES
+
+    rules = dict(MULTI_POD_RULES if multi_pod else DEFAULT_RULES)
+    rules["fused_heads"] = "model"
+    model_size = 16
+    if cfg.family == "moe":
+        if cfg.num_experts % model_size == 0:
+            rules["experts"] = "model"
+            rules["expert_ff"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_ff"] = "model"
+    rules.update(VARIANTS[variant])
+    return rules

@@ -1,0 +1,289 @@
+"""Trip-count-corrected roofline accounting via unrolled layer probes.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE regardless of trip
+count, so a scanned-L-layer model reports ~1/L of its real flops.  The
+correction: lower UNROLLED (python-loop) variants with 1 and 2 layers under
+the identical mesh/shardings; the difference isolates one layer's exact
+per-device flops / bytes / collective-bytes, and the full step is
+reconstructed linearly:
+
+  train:   total = nm * (L * layer_grad + base_grad) + L * opt_layer + opt_base
+           where {G1, G2} are grad-only probes and {O1, O2} full-step probes:
+           layer_grad = G2 - G1, base_grad = 2*G1 - G2,
+           opt_layer = (O2-G2) - (O1-G1), opt_base = (O1-G1) - opt_layer.
+  prefill/decode: total = L * (P2 - P1) + (2*P1 - P2).
+
+  griffin scales by super-blocks (probes at n_layers 3/6, tails at 5);
+  encdec scales encoder and decoder independently (probes (1,1),(2,1),(1,2)).
+
+Probes are cached by content key under experiments/probes/ — identical
+probes shared across cells/meshes are compiled once.
+
+Caveat (documented in EXPERIMENTS.md): probes measure a layer as compiled
+standalone; the scanned full program may fuse slightly differently.  The
+probe numbers are the honest per-layer costs; the real-cell compile is
+still performed for memory_analysis and the collective schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES, ShapeSpec, get_config
+from repro.launch.mesh import cfg_for, make_production_mesh, rules_for
+from repro.launch.roofline import CollectiveStats, parse_collectives
+from repro.launch.specs import batch_partition, batch_specs, cache_partition, cache_specs
+from repro.models import build_model
+from repro.optim.adamw import adamw_init
+from repro.sharding.api import use_rules
+from repro.sharding.params import (
+    opt_state_specs, param_specs, tree_named_shardings,
+)
+from repro.train.step import TrainSettings, build_train_step
+
+PROBE_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "probes"
+
+# bump when MODEL code changes alter lowered HLO (invalidates probe cache);
+# rev history is logged in EXPERIMENTS.md SPerf.
+PROBE_REV = 3
+
+
+@dataclasses.dataclass
+class Measure:
+    flops: float
+    bytes: float
+    ici: float
+    dcn: float
+
+    def __add__(self, o):
+        return Measure(self.flops + o.flops, self.bytes + o.bytes,
+                       self.ici + o.ici, self.dcn + o.dcn)
+
+    def __sub__(self, o):
+        return Measure(self.flops - o.flops, self.bytes - o.bytes,
+                       self.ici - o.ici, self.dcn - o.dcn)
+
+    def __mul__(self, k):
+        return Measure(self.flops * k, self.bytes * k, self.ici * k,
+                       self.dcn * k)
+
+    __rmul__ = __mul__
+
+    def clamp(self):
+        return Measure(max(self.flops, 0.0), max(self.bytes, 0.0),
+                       max(self.ici, 0.0), max(self.dcn, 0.0))
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _cost_get(ca, key):
+    if isinstance(ca, dict):
+        return float(ca.get(key, 0.0) or 0.0)
+    if isinstance(ca, (list, tuple)) and ca and isinstance(ca[0], dict):
+        return float(ca[0].get(key, 0.0) or 0.0)
+    return 0.0
+
+
+def _measure_compiled(compiled) -> Measure:
+    ca = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text())
+    return Measure(
+        flops=_cost_get(ca, "flops"),
+        bytes=_cost_get(ca, "bytes accessed"),
+        ici=float(coll.ici_bytes),
+        dcn=float(coll.dcn_bytes),
+    )
+
+
+def _probe_key(**kw) -> str:
+    blob = json.dumps(kw, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def _cached(key: str) -> Optional[Measure]:
+    p = PROBE_DIR / f"{key}.json"
+    if p.exists():
+        d = json.loads(p.read_text())
+        return Measure(**d["measure"])
+    return None
+
+
+def _store(key: str, m: Measure, meta: Dict) -> None:
+    PROBE_DIR.mkdir(parents=True, exist_ok=True)
+    (PROBE_DIR / f"{key}.json").write_text(
+        json.dumps({"measure": m.to_dict(), **meta}, indent=2)
+    )
+
+
+def _probe(arch: str, shape_name: str, *, multi_pod: bool, kind: str,
+           layers: int, enc_layers: Optional[int], with_opt: bool,
+           micro_batch: int, variant: str = "base") -> Measure:
+    """Compile one probe and measure it (cached)."""
+    key = _probe_key(arch=arch, shape=shape_name, multi_pod=multi_pod,
+                     kind=kind, layers=layers, enc=enc_layers,
+                     opt=with_opt, micro=micro_batch, rev=PROBE_REV,
+                     **({"variant": variant} if variant != "base" else {}))
+    hit = _cached(key)
+    if hit is not None:
+        return hit
+
+    shape = SHAPES[shape_name]
+    cfg = cfg_for(
+        get_config(arch), multi_pod=multi_pod, variant=variant
+    ).replace(n_layers=layers, unroll_layers=True)
+    if enc_layers is not None:
+        cfg = cfg.replace(n_encoder_layers=enc_layers)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, multi_pod=multi_pod, variant=variant)
+    model = build_model(cfg)
+
+    # probe shape: the real per-microbatch global batch
+    pshape = ShapeSpec(shape.name, shape.seq_len, micro_batch, shape.kind)
+
+    with mesh, use_rules(rules, mesh):
+        params_sds = jax.eval_shape(lambda: model.init(0))
+        p_specs = param_specs(params_sds, cfg, rules, mesh)
+        p_shard = tree_named_shardings(mesh, p_specs)
+        b_specs = batch_specs(cfg, pshape)
+        b_shard = tree_named_shardings(
+            mesh, batch_partition(cfg, pshape, rules, mesh)
+        )
+        if kind == "train":
+            if with_opt:
+                settings = TrainSettings(num_microbatches=1)
+                step = build_train_step(model, cfg, settings)
+                opt_sds = jax.eval_shape(adamw_init, params_sds)
+                o_specs = opt_state_specs(p_specs, params_sds, mesh)
+                o_shard = tree_named_shardings(mesh, o_specs)
+                lowered = jax.jit(
+                    step, in_shardings=(p_shard, o_shard, b_shard),
+                ).lower(params_sds, opt_sds, b_specs)
+            else:
+                grad_fn = jax.grad(
+                    lambda p, b: model.loss(p, b)[0]
+                )
+                lowered = jax.jit(
+                    grad_fn, in_shardings=(p_shard, b_shard),
+                ).lower(params_sds, b_specs)
+        elif kind == "prefill":
+            if cfg.family in ("dense", "moe", "encdec"):
+                fn = lambda p, b: model.prefill(p, b, max_len=pshape.seq_len)
+            else:
+                fn = lambda p, b: model.prefill(p, b)
+            lowered = jax.jit(
+                fn, in_shardings=(p_shard, b_shard)
+            ).lower(params_sds, b_specs)
+        else:  # decode
+            c_sds = cache_specs(cfg, pshape)
+            c_shard = tree_named_shardings(
+                mesh, cache_partition(cfg, pshape, rules, mesh)
+            )
+            lowered = jax.jit(
+                lambda p, c, t: model.decode_step(p, c, t),
+                in_shardings=(p_shard, c_shard, b_shard["tokens"]),
+            ).lower(params_sds, c_sds, b_specs["tokens"])
+        compiled = lowered.compile()
+
+    m = _measure_compiled(compiled)
+    _store(key, m, dict(arch=arch, shape=shape_name, multi_pod=multi_pod,
+                        kind=kind, layers=layers, enc=enc_layers,
+                        opt=with_opt, micro=micro_batch, variant=variant))
+    return m
+
+
+def corrected_measure(
+    arch: str, shape_name: str, *, multi_pod: bool,
+    num_microbatches: int = 1, variant: str = "base",
+) -> Tuple[Measure, Dict]:
+    """Reconstruct full-step per-device costs from unrolled probes."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    kind = shape.kind
+    nm = num_microbatches if kind == "train" else 1
+    micro = shape.global_batch // nm if kind == "train" else shape.global_batch
+
+    detail: Dict = {"num_microbatches": nm, "micro_batch": micro}
+
+    def probe(layers, enc=None, with_opt=False):
+        return _probe(
+            arch, shape_name, multi_pod=multi_pod, kind=kind,
+            layers=layers, enc_layers=enc, with_opt=with_opt,
+            micro_batch=micro, variant=variant,
+        )
+
+    if cfg.family == "griffin":
+        ae = cfg.attn_every
+        L_units = cfg.n_layers // ae          # super-blocks
+        tails = cfg.n_layers - L_units * ae   # tail rec blocks
+        if kind == "train":
+            G1, G2 = probe(ae), probe(2 * ae)
+            layer_g = (G2 - G1).clamp()
+            base_g = (2 * G1 - G2).clamp()
+            O1, O2 = probe(ae, with_opt=True), probe(2 * ae, with_opt=True)
+            opt_layer = ((O2 - G2) - (O1 - G1)).clamp()
+            opt_base = ((O1 - G1) - opt_layer).clamp()
+            total = nm * (L_units * layer_g + base_g) \
+                + L_units * opt_layer + opt_base
+            if tails:
+                T = (probe(ae + tails) - G1).clamp()
+                total = total + nm * T
+        else:
+            P1, P2 = probe(ae), probe(2 * ae)
+            layer = (P2 - P1).clamp()
+            base = (2 * P1 - P2).clamp()
+            total = L_units * layer + base
+            if tails:
+                total = total + (probe(ae + tails) - P1).clamp()
+        detail["units"] = L_units
+        return total, detail
+
+    if cfg.family == "encdec":
+        if kind == "train":
+            G11 = probe(1, enc=1)
+            Gd = (probe(2, enc=1) - G11).clamp()    # one decoder layer
+            Ge = (probe(1, enc=2) - G11).clamp()    # one encoder layer
+            base = (G11 - Gd - Ge).clamp()
+            O11 = probe(1, enc=1, with_opt=True)
+            Od = ((probe(2, enc=1, with_opt=True) - probe(2, enc=1)) - (O11 - G11)).clamp()
+            Oe = ((probe(1, enc=2, with_opt=True) - probe(1, enc=2)) - (O11 - G11)).clamp()
+            opt_base = ((O11 - G11) - Od - Oe).clamp()
+            total = nm * (cfg.n_layers * Gd + cfg.n_encoder_layers * Ge + base) \
+                + cfg.n_layers * Od + cfg.n_encoder_layers * Oe + opt_base
+        elif kind == "prefill":
+            P11 = probe(1, enc=1)
+            Pd = (probe(2, enc=1) - P11).clamp()
+            Pe = (probe(1, enc=2) - P11).clamp()
+            base = (P11 - Pd - Pe).clamp()
+            total = cfg.n_layers * Pd + cfg.n_encoder_layers * Pe + base
+        else:  # decode touches only decoder layers
+            P1, P2 = probe(1, enc=1), probe(2, enc=1)
+            layer = (P2 - P1).clamp()
+            base = (2 * P1 - P2).clamp()
+            total = cfg.n_layers * layer + base
+        return total, detail
+
+    L = cfg.n_layers
+    if kind == "train":
+        G1, G2 = probe(1), probe(2)
+        layer_g = (G2 - G1).clamp()
+        base_g = (2 * G1 - G2).clamp()
+        O1, O2 = probe(1, with_opt=True), probe(2, with_opt=True)
+        opt_layer = ((O2 - G2) - (O1 - G1)).clamp()
+        opt_base = ((O1 - G1) - opt_layer).clamp()
+        total = nm * (L * layer_g + base_g) + L * opt_layer + opt_base
+        detail["layer_grad_flops"] = layer_g.flops
+    else:
+        P1, P2 = probe(1), probe(2)
+        layer = (P2 - P1).clamp()
+        base = (2 * P1 - P2).clamp()
+        total = L * layer + base
+        detail["layer_flops"] = layer.flops
+    return total, detail

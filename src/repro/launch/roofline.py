@@ -1,0 +1,144 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step per chip:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS          (197 TF bf16, v5e)
+  memory     = HLO_bytes_per_device / HBM_BW              (819 GB/s)
+  collective = ici_bytes / ICI_BW + dcn_bytes / DCN_BW    (50 GB/s/link;
+               cross-pod counted at DCN_BW — assumed ICI/8, documented)
+
+``cost_analysis()`` reports per-partition (per-device) flops/bytes for the
+SPMD-partitioned module (verified empirically).  Collective bytes are NOT
+in cost_analysis: we parse the optimized HLO and sum operand bytes of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute, classifying each by whether its replica group crosses
+the pod boundary (device id // 256).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 per chip, TPU v5e-class
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+DCN_BW = ICI_BW / 8      # assumption for cross-pod links (documented)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+    ici_bytes: int
+    dcn_bytes: int
+
+    def total_bytes(self) -> int:
+        return self.ici_bytes + self.dcn_bytes
+
+
+def parse_collectives(hlo_text: str, pod_size: int = 256) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    bytes_by_kind: Dict[str, int] = {}
+    ici = 0
+    dcn = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        result_type = m.group(1) or m.group(2)
+        nbytes = _shape_bytes(result_type)
+        if nbytes == 0:
+            continue
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + nbytes
+
+        crosses_pod = False
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            # first group is representative (SPMD groups are uniform)
+            first = gm.group(1).split("},{")[0]
+            ids = [int(x) for x in re.findall(r"\d+", first)]
+            if ids and (max(ids) // pod_size) != (min(ids) // pod_size):
+                crosses_pod = True
+        else:
+            pm = _PAIRS_RE.search(line)
+            if pm:
+                ids = [int(x) for x in re.findall(r"\d+", pm.group(1))[:8]]
+                if any(
+                    (a // pod_size) != (b // pod_size)
+                    for a, b in zip(ids[::2], ids[1::2])
+                ):
+                    crosses_pod = True
+        if crosses_pod:
+            dcn += nbytes
+        else:
+            ici += nbytes
+    return CollectiveStats(counts, bytes_by_kind, ici, dcn)
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    coll: CollectiveStats,
+) -> Dict[str, float]:
+    compute = flops_per_device / PEAK_FLOPS
+    memory = bytes_per_device / HBM_BW
+    collective = coll.ici_bytes / ICI_BW + coll.dcn_bytes / DCN_BW
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "collective_ici_bytes": coll.ici_bytes,
+        "collective_dcn_bytes": coll.dcn_bytes,
+        "dominant": dominant,
+    }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS: 6ND train, 2ND forward-only (N = active params)."""
+    n_active = cfg.param_count(active_only=True)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence (KV-cache reads dominate; the flops
+    # term counts the matmul work only)
+    return 2.0 * n_active * shape.global_batch

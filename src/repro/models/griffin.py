@@ -1,0 +1,364 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrence + local attention (1:2).
+
+Block pattern (recurrent, recurrent, local-attn) repeating — 38 layers =
+12 scanned super-blocks of 3 + 2 tail recurrent blocks.  Super-block
+scanning keeps the HLO O(1) in depth while preserving the heterogeneous
+pattern.
+
+RG-LRU (per channel):
+    r_t = sigmoid(W_a x_t + b_a)           # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)           # input gate
+    log a_t = -c * softplus(Λ) * r_t       # data-dependent decay, c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+A diagonal linear recurrence -> associative scan for train/prefill, O(1)
+step for decode.  Local attention is MQA (kv=1) with window 2048; its ring
+cache is O(window), so long_500k decode is runnable.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import kvcache as kvc
+from repro.models.layers import (
+    attention_qkv,
+    attention_qkv_init,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    embed_lookup,
+    gqa_attention,
+    key_for,
+    logits_from_embedding,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    scan_layers,
+)
+from repro.sharding.api import logical_constraint
+
+__all__ = ["GriffinLM"]
+
+_LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+
+def _rec_init(key, cfg: ModelConfig) -> Dict:
+    D, R = cfg.d_model, cfg.d_rnn
+    return {
+        "w_in": dense_init(key_for(key, "w_in"), (D, R), cfg.pdtype),
+        "w_gate": dense_init(key_for(key, "w_gate"), (D, R), cfg.pdtype),
+        "conv_w": dense_init(key_for(key, "conv"), (cfg.conv_width, R),
+                             cfg.pdtype, scale=0.5),
+        "w_a": dense_init(key_for(key, "w_a"), (R, R), cfg.pdtype),
+        "b_a": jnp.zeros((R,), jnp.float32),
+        "w_x": dense_init(key_for(key, "w_x"), (R, R), cfg.pdtype),
+        "b_x": jnp.zeros((R,), jnp.float32),
+        "lam": jnp.full((R,), 1.0, jnp.float32),  # Λ
+        "w_out": dense_init(key_for(key, "w_out"), (R, D), cfg.pdtype),
+    }
+
+
+def _causal_conv(
+    x: jnp.ndarray,                    # (B, S, R)
+    w: jnp.ndarray,                    # (CW, R) depthwise taps
+    state: Optional[jnp.ndarray],      # (B, CW-1, R) previous inputs
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    CW = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], CW - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)      # (B, S+CW-1, R)
+    out = sum(
+        xp[:, i:i + x.shape[1]] * w[i] for i in range(CW)
+    )
+    new_state = xp[:, -(CW - 1):] if CW > 1 else pad
+    return out, new_state
+
+
+def _rg_lru(
+    x: jnp.ndarray,                    # (B, S, R) conv output
+    p: Dict,
+    h0: Optional[jnp.ndarray],         # (B, R)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"]) * r      # (B, S, R) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if x.shape[1] == 1 and h0 is not None:  # decode fast path
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None].astype(x.dtype), h
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_in, g_in = a, gated
+    if h0 is not None:
+        # fold the carry into the first step
+        g_in = g_in.at[:, 0].add(a[:, 0] * h0)
+    _, h_seq = jax.lax.associative_scan(comb, (a_in, g_in), axis=1)
+    return h_seq.astype(x.dtype), h_seq[:, -1].astype(jnp.float32)
+
+
+def _rec_apply(
+    p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+    state: Optional[Dict],
+) -> Tuple[jnp.ndarray, Dict]:
+    """state: {conv: (B, CW-1, R), h: (B, R)} or None (train from zero)."""
+    gate = jax.nn.gelu((x @ p["w_gate"]), approximate=True)
+    u = x @ p["w_in"]
+    u = logical_constraint(u, "batch", None, "d_ff")
+    u, conv_state = _causal_conv(
+        u, p["conv_w"], None if state is None else state["conv"]
+    )
+    h, h_last = _rg_lru(u, p, None if state is None else state["h"])
+    out = ((gate * h) @ p["w_out"]).astype(x.dtype)
+    return out, {"conv": conv_state.astype(x.dtype), "h": h_last}
+
+
+# ---------------------------------------------------------------------------
+# Super-block = [rec, rec, local-attn], each + MLP residual
+# ---------------------------------------------------------------------------
+
+
+def _super_init(key, cfg: ModelConfig) -> Dict:
+    return {
+        "ln_r1": norm_init(cfg), "rec1": _rec_init(key_for(key, "r1"), cfg),
+        "ln_m1": norm_init(cfg), "mlp1": mlp_init(key_for(key, "m1"), cfg),
+        "ln_r2": norm_init(cfg), "rec2": _rec_init(key_for(key, "r2"), cfg),
+        "ln_m2": norm_init(cfg), "mlp2": mlp_init(key_for(key, "m2"), cfg),
+        "ln_a": norm_init(cfg), "attn": attention_qkv_init(key_for(key, "a"), cfg),
+        "ln_m3": norm_init(cfg), "mlp3": mlp_init(key_for(key, "m3"), cfg),
+    }
+
+
+class GriffinLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_super = cfg.n_layers // cfg.attn_every
+        self.n_tail = cfg.n_layers - self.n_super * cfg.attn_every
+        assert cfg.n_kv_heads in (1, cfg.n_heads)
+
+    def init(self, seed: int = 0) -> Dict:
+        cfg = self.cfg
+        root = jax.random.PRNGKey(seed)
+        sk = jax.random.split(key_for(root, "supers"), self.n_super)
+        params = {
+            "embed": embed_init(key_for(root, "embed"), cfg),
+            "supers": jax.vmap(lambda k: _super_init(k, cfg))(sk),
+            "ln_out": norm_init(cfg),
+        }
+        tails = {}
+        for t in range(self.n_tail):
+            tk = key_for(root, f"tail{t}")
+            tails[f"t{t}"] = {
+                "ln_r": norm_init(cfg), "rec": _rec_init(tk, cfg),
+                "ln_m": norm_init(cfg), "mlp": mlp_init(key_for(tk, "m"), cfg),
+            }
+        params["tails"] = tails
+        return params
+
+    # -- forward over full sequences (train / prefill) --------------------------
+
+    def _super_fwd(self, sp, x, positions, cfg, states, window):
+        """states None (train) or dict(conv1,h1,conv2,h2,k,v,k_pos,pos)."""
+        # rec block 1
+        r_in = norm_apply(sp["ln_r1"], x, cfg.norm)
+        r_out, ns1 = _rec_apply(
+            sp["rec1"], r_in, cfg,
+            None if states is None else {"conv": states["conv1"], "h": states["h1"]},
+        )
+        x = x + r_out
+        x = x + mlp_apply(sp["mlp1"], norm_apply(sp["ln_m1"], x, cfg.norm), cfg).astype(x.dtype)
+        # rec block 2
+        r_in = norm_apply(sp["ln_r2"], x, cfg.norm)
+        r_out, ns2 = _rec_apply(
+            sp["rec2"], r_in, cfg,
+            None if states is None else {"conv": states["conv2"], "h": states["h2"]},
+        )
+        x = x + r_out
+        x = x + mlp_apply(sp["mlp2"], norm_apply(sp["ln_m2"], x, cfg.norm), cfg).astype(x.dtype)
+        # local attention block
+        a_in = norm_apply(sp["ln_a"], x, cfg.norm)
+        q, k_new, v_new = attention_qkv(sp["attn"], a_in, positions, cfg)
+        if states is None:
+            o = gqa_attention(
+                q, k_new, v_new, positions, positions,
+                causal=True, window=window,
+            )
+            new_kv = (k_new, v_new)
+            kv_extra = {}
+        else:
+            B = q.shape[0]
+            W = states["k"].shape[1]
+            k_layer, v_layer = kvc.sliding_kv_update_layer(
+                states["k"], states["v"], k_new, v_new, states["pos"]
+            )
+            k_pos = states["k_pos"].at[
+                jnp.arange(B), states["pos"] % W
+            ].set(states["pos"])
+            valid = (k_pos >= 0) & (k_pos > (states["pos"][:, None] - window))
+            o = gqa_attention(
+                q, k_layer, v_layer, positions, k_pos,
+                causal=True, window=window, kv_valid=valid,
+            )
+            new_kv = (k_layer, v_layer)
+            kv_extra = {"k_pos": k_pos}
+        B, S, H, hd = o.shape
+        x = x + (o.reshape(B, S, H * hd) @ sp["attn"]["wo"]).astype(x.dtype)
+        x = x + mlp_apply(sp["mlp3"], norm_apply(sp["ln_m3"], x, cfg.norm), cfg).astype(x.dtype)
+        new_states = {
+            "conv1": ns1["conv"], "h1": ns1["h"],
+            "conv2": ns2["conv"], "h2": ns2["h"],
+            "k": new_kv[0], "v": new_kv[1], **kv_extra,
+        }
+        return x, new_states
+
+    def _tail_fwd(self, tp, x, cfg, state):
+        r_in = norm_apply(tp["ln_r"], x, cfg.norm)
+        r_out, ns = _rec_apply(tp["rec"], r_in, cfg, state)
+        x = x + r_out
+        x = x + mlp_apply(tp["mlp"], norm_apply(tp["ln_m"], x, cfg.norm), cfg).astype(x.dtype)
+        return x, ns
+
+    def loss(self, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        x = embed_lookup(params["embed"], tokens, cfg)
+        x = logical_constraint(x, "batch", None, None)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        window = cfg.sliding_window or S
+
+        def body(h, sp):
+            h, _ = self._super_fwd(sp, h, positions, cfg, None, window)
+            return h, None
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        x, _ = scan_layers(body, x, params["supers"], cfg, self.n_super)
+        for t in range(self.n_tail):
+            x, _ = self._tail_fwd(params["tails"][f"t{t}"], x, cfg, None)
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x, cfg)
+        return cross_entropy_loss(logits, labels)
+
+    # -- serving ------------------------------------------------------------------
+
+    def prefill(self, params: Dict, batch: Dict, max_len: Optional[int] = None):
+        """Run the prompt once, return (last-token logits, serving state).
+
+        The full-sequence forward (associative-scan RG-LRU + windowed
+        attention) also yields each block's final recurrence/conv state;
+        the last ``window`` keys/values are scattered into the sliding
+        cache slots exactly as decode_step expects them.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_lookup(params["embed"], tokens, cfg)
+        x = logical_constraint(x, "batch", None, None)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        window = cfg.sliding_window or 2048
+        W = window
+        take = min(S, W)
+        abs_pos = jnp.arange(S - take, S, dtype=jnp.int32)
+        slots = abs_pos % W
+
+        def body(h, sp):
+            h, ns = self._super_fwd(sp, h, positions, cfg, None, window)
+            k_new, v_new = ns["k"], ns["v"]  # (B, S, Hkv, hd) train-mode KV
+            k_c = jnp.zeros((B, W, cfg.n_kv_heads, cfg.hd), cfg.cdtype)
+            k_c = k_c.at[:, slots].set(k_new[:, S - take:].astype(k_c.dtype))
+            v_c = jnp.zeros((B, W, cfg.n_kv_heads, cfg.hd), cfg.cdtype)
+            v_c = v_c.at[:, slots].set(v_new[:, S - take:].astype(v_c.dtype))
+            k_pos = jnp.full((B, W), jnp.int32(-1))
+            k_pos = k_pos.at[:, slots].set(abs_pos[None, :])
+            out_state = {
+                "conv1": ns["conv1"], "h1": ns["h1"],
+                "conv2": ns["conv2"], "h2": ns["h2"],
+                "k": k_c, "v": v_c, "k_pos": k_pos,
+            }
+            return h, out_state
+
+        x, states = scan_layers(body, x, params["supers"], cfg, self.n_super)
+        state = dict(states)  # leaves carry the (NS, ...) leading dim
+        for t in range(self.n_tail):
+            x, ns = self._tail_fwd(params["tails"][f"t{t}"], x, cfg, None)
+            state[f"tail_conv{t}"] = ns["conv"]
+            state[f"tail_h{t}"] = ns["h"]
+        state["pos"] = jnp.full((B,), S, jnp.int32)
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x[:, -1:], cfg)
+        return logits, state
+
+    def init_state(self, batch_size: int) -> Dict:
+        cfg = self.cfg
+        R, CW = cfg.d_rnn, cfg.conv_width
+        W = cfg.sliding_window or 2048
+        NS = self.n_super
+        mk = lambda *s: jnp.zeros(s, cfg.cdtype)
+        state = {
+            "conv1": mk(NS, batch_size, CW - 1, R),
+            "h1": jnp.zeros((NS, batch_size, R), jnp.float32),
+            "conv2": mk(NS, batch_size, CW - 1, R),
+            "h2": jnp.zeros((NS, batch_size, R), jnp.float32),
+            "k": mk(NS, batch_size, W, cfg.n_kv_heads, cfg.hd),
+            "v": mk(NS, batch_size, W, cfg.n_kv_heads, cfg.hd),
+            "k_pos": jnp.full((NS, batch_size, W), jnp.int32(-1)),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+        for t in range(self.n_tail):
+            state[f"tail_conv{t}"] = mk(batch_size, CW - 1, R)
+            state[f"tail_h{t}"] = jnp.zeros((batch_size, R), jnp.float32)
+        return state
+
+    def decode_step(self, params: Dict, state: Dict, tokens: jnp.ndarray):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = embed_lookup(params["embed"], tokens, cfg)
+        positions = state["pos"][:, None]
+        window = cfg.sliding_window or 2048
+
+        def body(h, xs):
+            sp, c1, h1, c2, h2, k, v, kp = xs
+            st = {"conv1": c1, "h1": h1, "conv2": c2, "h2": h2,
+                  "k": k, "v": v, "k_pos": kp, "pos": state["pos"]}
+            h, ns = self._super_fwd(sp, h, positions, cfg, st, window)
+            return h, (ns["conv1"], ns["h1"], ns["conv2"], ns["h2"],
+                       ns["k"], ns["v"], ns["k_pos"])
+
+        x, (c1, h1, c2, h2, k, v, kp) = scan_layers(
+            body, x,
+            (params["supers"], state["conv1"], state["h1"], state["conv2"],
+             state["h2"], state["k"], state["v"], state["k_pos"]),
+            cfg, self.n_super,
+        )
+        new_state = dict(state, conv1=c1, h1=h1, conv2=c2, h2=h2, k=k, v=v,
+                         k_pos=kp)
+        for t in range(self.n_tail):
+            st = {"conv": state[f"tail_conv{t}"], "h": state[f"tail_h{t}"]}
+            x, ns = self._tail_fwd(params["tails"][f"t{t}"], x, cfg, st)
+            new_state[f"tail_conv{t}"] = ns["conv"]
+            new_state[f"tail_h{t}"] = ns["h"]
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x, cfg)
+        new_state["pos"] = state["pos"] + 1
+        return logits, new_state

@@ -1,0 +1,133 @@
+"""Decode-time caches for every model family (functional pytrees).
+
+* FullKV     — dense decoders (nemotron, qwen3, yi, phi3, phi3-vision, and
+               the seamless decoder self-attention).
+* SlidingKV  — ring-buffer cache for sliding-window attention (mixtral SWA,
+               recurrentgemma local attention): O(window) memory at any
+               context length — this is what makes the long_500k decode
+               cells runnable.
+* RecurrentState — RWKV6 (wkv matrix state + token-shift) and
+               RG-LRU (hidden + conv tap) states: O(1) in context length.
+
+All caches are stacked on a leading layer axis and updated inside the
+layer scan (cache slices are scan xs/ys).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["FullKV", "SlidingKV", "full_kv_init", "sliding_kv_init"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FullKV:
+    """k, v: (L, B, Smax, Hkv, hd); pos: (B,) current lengths."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+
+def full_kv_init(
+    cfg: ModelConfig, batch: int, max_len: int, n_layers: Optional[int] = None,
+    dtype=None,
+) -> FullKV:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    dt = dtype or cfg.cdtype
+    return FullKV(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def full_kv_update_layer(
+    k_layer: jnp.ndarray,   # (B, Smax, Hkv, hd) cache slice
+    v_layer: jnp.ndarray,
+    k_new: jnp.ndarray,     # (B, S_new, Hkv, hd)
+    v_new: jnp.ndarray,
+    pos: jnp.ndarray,       # (B,) write offsets (uniform start assumed)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    # uniform-position batched write (serving keeps slot positions aligned;
+    # the batch scheduler pads ragged requests)
+    start = pos[0]
+    k_layer = jax.lax.dynamic_update_slice_in_dim(k_layer, k_new.astype(k_layer.dtype), start, axis=1)
+    v_layer = jax.lax.dynamic_update_slice_in_dim(v_layer, v_new.astype(v_layer.dtype), start, axis=1)
+    return k_layer, v_layer
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SlidingKV:
+    """Ring cache: k, v: (L, B, W, Hkv, hd); k_pos: (B, W) absolute positions
+    (-1 = empty); pos: (B,) next position."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k_pos: jnp.ndarray
+    pos: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.k_pos, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def window(self) -> int:
+        return self.k.shape[2]
+
+
+def sliding_kv_init(
+    cfg: ModelConfig, batch: int, window: int, n_layers: Optional[int] = None,
+    dtype=None,
+) -> SlidingKV:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, window, cfg.n_kv_heads, cfg.hd)
+    dt = dtype or cfg.cdtype
+    return SlidingKV(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        k_pos=jnp.full((batch, window), jnp.int32(-1)),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def sliding_kv_update_layer(
+    k_layer: jnp.ndarray,   # (B, W, Hkv, hd)
+    v_layer: jnp.ndarray,
+    k_new: jnp.ndarray,     # (B, 1, Hkv, hd) — decode writes one token
+    v_new: jnp.ndarray,
+    pos: jnp.ndarray,       # (B,)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    W = k_layer.shape[1]
+    slot = (pos % W)[:, None, None, None]  # (B,1,1,1)
+    b_idx = jnp.arange(k_layer.shape[0])[:, None, None, None]
+    k_layer = k_layer.at[
+        b_idx[..., 0, 0, 0], slot[..., 0, 0, 0]
+    ].set(k_new[:, 0].astype(k_layer.dtype))
+    v_layer = v_layer.at[
+        b_idx[..., 0, 0, 0], slot[..., 0, 0, 0]
+    ].set(v_new[:, 0].astype(v_layer.dtype))
+    return k_layer, v_layer

@@ -1,0 +1,290 @@
+"""Shared model layers (pure JAX, functional params-as-pytrees).
+
+Covers every assigned family's needs: RMSNorm/LayerNorm, RoPE, GQA
+attention (full / causal / sliding-window, optional qk_norm, grouped
+einsum so broadcast KV is never materialized), SwiGLU / GeGLU /
+squared-ReLU MLPs, vocab-padded embeddings with masked logits.
+
+Initialization is deterministic per (seed, path-hash) and usable under
+``jax.eval_shape`` (the dry-run instantiates full configs as
+ShapeDtypeStructs only).
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding.api import logical_constraint
+
+__all__ = [
+    "dense_init", "norm_init", "norm_apply", "rope", "attention_qkv",
+    "gqa_attention", "mlp_init", "mlp_apply", "embed_init", "embed_lookup",
+    "logits_from_embedding", "cross_entropy_loss", "key_for",
+]
+
+
+def key_for(seed_key: jax.Array, path: str) -> jax.Array:
+    """Deterministic per-path PRNG key (stable across refactors)."""
+    return jax.random.fold_in(seed_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+def scan_layers(body, carry, xs, cfg, length: int):
+    """lax.scan over stacked layers, or an unrolled python loop when
+    cfg.unroll_layers (roofline probes: XLA cost_analysis counts while-loop
+    bodies once, so probes must materialize each layer)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs, length=length)
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda x: x[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is None:
+        return carry, None
+    return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None) -> Dict:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p: Dict, x: jnp.ndarray, kind: str = "rmsnorm") -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"] + p.get("bias", 0.0)
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd), positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_qkv_init(key, cfg: ModelConfig, d_model: Optional[int] = None) -> Dict:
+    D = d_model or cfg.d_model
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": dense_init(key_for(key, "wq"), (D, H * hd), cfg.pdtype),
+        "wk": dense_init(key_for(key, "wk"), (D, Hkv * hd), cfg.pdtype),
+        "wv": dense_init(key_for(key, "wv"), (D, Hkv * hd), cfg.pdtype),
+        "wo": dense_init(key_for(key, "wo"), (H * hd, D), cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(cfg, hd)
+        p["k_norm"] = norm_init(cfg, hd)
+    return p
+
+
+def attention_qkv(
+    p: Dict,
+    x: jnp.ndarray,                  # (B, S, D)
+    positions: jnp.ndarray,          # (B, S)
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Project + rope.  Returns q (B,S,H,hd), k,v (B,S,Hkv,hd)."""
+    B, S, _ = x.shape
+    hd, H, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = norm_apply(p["q_norm"], q, cfg.norm)
+        k = norm_apply(p["k_norm"], k, cfg.norm)
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(
+    q: jnp.ndarray,                  # (B, Sq, H, hd)
+    k: jnp.ndarray,                  # (B, Sk, Hkv, hd)
+    v: jnp.ndarray,                  # (B, Sk, Hkv, hd)
+    q_positions: jnp.ndarray,        # (B, Sq)
+    k_positions: jnp.ndarray,        # (B, Sk)  (or None -> arange)
+    *,
+    causal: bool,
+    window: Optional[int],
+    kv_valid: Optional[jnp.ndarray] = None,  # (B, Sk) bool
+) -> jnp.ndarray:
+    """Grouped-query attention; never materializes broadcast KV.
+
+    Returns (B, Sq, H, hd).  f32 softmax accumulation.
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = hd ** -0.5
+
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    # operands stay in their storage dtype (bf16 on TPU): the MXU
+    # accumulates bf16 x bf16 -> f32 natively via preferred_element_type.
+    # An explicit .astype(f32) here would materialize an f32 copy of the
+    # entire KV cache every layer (measured: ~3x decode HBM traffic).
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k,
+        preferred_element_type=jnp.float32,
+    ) * scale  # (B, Hkv, G, Sq, Sk) f32
+
+    qp = q_positions[:, None, None, :, None]
+    kp = k_positions[:, None, None, None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None:
+        mask = mask & (kp > qp - window)
+    if kv_valid is not None:
+        mask = mask & kv_valid[:, None, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p_ = jnp.exp(s - m)
+    p_ = jnp.where(mask, p_, 0.0)
+    denom = jnp.maximum(p_.sum(-1, keepdims=True), 1e-30)
+    p_ = p_ / denom
+    # downcast the attention weights to the value dtype (f32 softmax is
+    # kept; only the PV matmul runs in storage precision with f32
+    # accumulation) -- the standard TPU flash-attention recipe.
+    o = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", p_.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_model: Optional[int] = None,
+             d_ff: Optional[int] = None) -> Dict:
+    D = d_model or cfg.d_model
+    F = d_ff or cfg.d_ff
+    p = {
+        "w_in": dense_init(key_for(key, "w_in"), (D, F), cfg.pdtype),
+        "w_out": dense_init(key_for(key, "w_out"), (F, D), cfg.pdtype),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(key_for(key, "w_gate"), (D, F), cfg.pdtype)
+    return p
+
+
+def mlp_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = x @ p["w_in"]
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * h
+    elif cfg.mlp == "squared_relu":
+        r = jax.nn.relu(h)
+        h = r * r
+    else:  # relu
+        h = jax.nn.relu(h)
+    h = logical_constraint(h, *(None,) * (h.ndim - 1), "d_ff")
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig) -> Dict:
+    Vp, D = cfg.vocab_padded, cfg.d_model
+    # std 1/sqrt(D): keeps tied-head logits at O(1) scale at init
+    p = {"table": dense_init(key_for(key, "embed"), (Vp, D), cfg.pdtype,
+                             scale=D ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(key_for(key, "head"), (D, Vp), cfg.pdtype)
+    return p
+
+
+def embed_lookup(p: Dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return p["table"][tokens].astype(cfg.cdtype)
+
+
+def logits_from_embedding(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "...d,vd->...v", x.astype(jnp.float32),
+            p["table"].astype(jnp.float32),
+        )
+    else:
+        logits = jnp.einsum(
+            "...d,dv->...v", x.astype(jnp.float32),
+            p["head"].astype(jnp.float32),
+        )
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,   # (B, S, V) f32
+    labels: jnp.ndarray,   # (B, S) int32, -1 = ignore
+    z_loss: float = 0.0,
+) -> Tuple[jnp.ndarray, Dict]:
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * valid
+    denom = jnp.maximum(valid.sum(), 1)
+    loss = nll.sum() / denom
+    metrics = {"nll": loss, "tokens": denom}
+    if z_loss > 0:
+        zl = z_loss * ((lse * valid) ** 2).sum() / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics

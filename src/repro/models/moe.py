@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity (GShard-style
+semantics, sort/scatter dispatch).
+
+Dispatch is sort-based rather than one-hot-einsum: token->expert
+assignments are ranked per expert via an argsort, tokens beyond the
+per-expert capacity are dropped (classic capacity-factor semantics), kept
+tokens are scattered into a dense (E, Cap, D) buffer, expert FFNs run as
+one batched einsum, and results scatter-add back with router weights.
+This keeps peak memory at k x token activations (no (tokens, E, Cap)
+one-hot), shards cleanly (tokens on "batch"/data, experts on "experts"/
+model for 64-expert moonshot -> GSPMD inserts the all-to-alls of expert
+parallelism), and its FLOPs equal the top-k active-parameter count the
+roofline expects.
+
+Routing skew is FeatInsight's "hotspot keys" problem in model form; the
+capacity factor + dropped-fraction metric mirror the paper's dynamic
+data adjusting.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, key_for
+from repro.sharding.api import logical_constraint
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg: ModelConfig) -> Dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "router": dense_init(key_for(key, "router"), (D, E), jnp.float32),
+        "w_in": dense_init(key_for(key, "w_in"), (E, D, F), cfg.pdtype),
+        "w_out": dense_init(key_for(key, "w_out"), (E, F, D), cfg.pdtype),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(key_for(key, "w_gate"), (E, D, F), cfg.pdtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def _seg_rank(sorted_e: jnp.ndarray) -> jnp.ndarray:
+    """Per-row rank within runs of equal values. sorted_e: (G, M) sorted."""
+    G, M = sorted_e.shape
+    iota = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32), (G, M))
+    is_start = jnp.concatenate(
+        [jnp.ones((G, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1
+    )
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, iota, 0), axis=1
+    )
+    return iota - seg_start
+
+
+def moe_apply(
+    p: Dict, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, S, D) -> (out (B, S, D), aux metrics).
+
+    Group-local dispatch: tokens split into G groups (G = data shards in
+    production; 1 on CPU), each group sorts/ranks/scatters privately —
+    GSPMD keeps every dispatch op shard-local, and the only cross-device
+    traffic is the (G, E, C, D) buffer exchange (expert-parallel
+    all-to-all) + the router.  A global sort over the sharded token axis
+    would instead replicate the dispatch buffers on every device
+    (measured: 20 GB/layer ICI on moonshot — see EXPERIMENTS.md §Perf M1).
+    """
+    B, S, D = x.shape
+    N = B * S
+    E, k = cfg.num_experts, cfg.top_k
+    G = cfg.moe_groups if N % max(cfg.moe_groups, 1) == 0 else 1
+    G = max(G, 1)
+    Ng = N // G
+    cap = _capacity(Ng, cfg)
+
+    xf = x.reshape(G, Ng, D)
+    xf = logical_constraint(xf, "batch", None, None)
+    logits = jnp.einsum(
+        "gnd,de->gne", xf.astype(jnp.float32), p["router"]
+    )                                                     # (G, Ng, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                  # (G, Ng, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # aux: load-balance loss (Switch-style) + router z-loss
+    me = probs.mean((0, 1))                               # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(
+        jnp.ones((N * k,), jnp.float32)
+    ) / (N * k)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # group-local sort-based rank within expert
+    M = Ng * k
+    flat_e = topi.reshape(G, M)
+    order = jnp.argsort(flat_e, axis=1, stable=True)      # (G, M) local
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    pos_in_e = _seg_rank(sorted_e)
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, sorted_e * cap + pos_in_e, E * cap)
+    src_token = order // k                                # (G, M)
+
+    # vmapped 1-group gathers/scatters lower with operand_batching_dims,
+    # which GSPMD partitions along G; explicit (G, M) index arrays instead
+    # replicate the whole (G, M, D) data movement on every device
+    # (measured: 51 GB/device/layer — EXPERIMENTS.md §Perf M2).
+    gathered_in = jax.vmap(lambda t, s: t[s])(xf, src_token)     # (G, M, D)
+    buf = jax.vmap(
+        lambda vals, idx: jnp.zeros((E * cap, D), x.dtype)
+        .at[idx].set(vals, mode="drop")
+    )(gathered_in, dest)
+    buf = buf.reshape(G, E, cap, D)
+    buf = logical_constraint(buf, "batch", "experts", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w_in"])
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp == "geglu":
+        g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.relu(h)
+    h = logical_constraint(h, "batch", "experts", None, "expert_ff")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_out"]).reshape(
+        G, E * cap, D
+    )
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((G, 1, D), out_buf.dtype)], axis=1
+    )  # row E*cap = dropped sentinel (zeros)
+
+    gathered = jax.vmap(lambda t, d: t[d])(out_buf, dest)        # (G, M, D)
+    w = (jnp.take_along_axis(topw.reshape(G, M), order, axis=1)
+         * keep).astype(x.dtype)
+    contrib = gathered * w[..., None]
+    out = jax.vmap(
+        lambda c, s: jnp.zeros((Ng, D), x.dtype).at[s].add(c)
+    )(contrib, src_token)
+
+    aux = {
+        "moe_lb_loss": lb_loss,
+        "moe_z_loss": z_loss,
+        "moe_dropped_frac": 1.0 - keep.mean(),
+    }
+    return out.reshape(B, S, D), aux

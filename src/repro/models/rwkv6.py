@@ -1,0 +1,264 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+
+Time-mix uses the chunked wkv6 core (repro.kernels.wkv6): the per-channel
+decayed matrix state is FeatInsight's pre-aggregation pattern (running
+aggregate + current-row compose) applied to sequence modeling.  Decode
+state is O(1) in context — this arch runs the long_500k cell.
+
+Structure per layer (faithful to Finch at the block level):
+  time-mix:   ddlerp token-shift -> r,k,v,g,w projections (w via LoRA),
+              wkv6 core per 64-dim head, group-norm, gated output
+  channel-mix: token-shift -> squared-ReLU MLP with receptance gate
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import LOG_W_MIN
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    embed_lookup,
+    key_for,
+    logits_from_embedding,
+    norm_apply,
+    norm_init,
+    scan_layers,
+)
+from repro.sharding.api import logical_constraint
+
+__all__ = ["RWKV6LM", "RWKV_HEAD_DIM"]
+
+RWKV_HEAD_DIM = 64
+LORA_R = 32
+
+
+def _tm_init(key, cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    H = D // RWKV_HEAD_DIM
+    p = {
+        "mu": jnp.zeros((5, D), jnp.float32),  # r,k,v,w,g shift-mix
+        "w_r": dense_init(key_for(key, "w_r"), (D, D), cfg.pdtype),
+        "w_k": dense_init(key_for(key, "w_k"), (D, D), cfg.pdtype),
+        "w_v": dense_init(key_for(key, "w_v"), (D, D), cfg.pdtype),
+        "w_g": dense_init(key_for(key, "w_g"), (D, D), cfg.pdtype),
+        "w_o": dense_init(key_for(key, "w_o"), (D, D), cfg.pdtype),
+        "w0": jnp.full((D,), -1.0, jnp.float32),     # base log-log decay
+        "w_lora_a": dense_init(key_for(key, "wla"), (D, LORA_R), cfg.pdtype),
+        "w_lora_b": dense_init(key_for(key, "wlb"), (LORA_R, D), cfg.pdtype),
+        "u": jnp.zeros((H, RWKV_HEAD_DIM), jnp.float32),  # bonus
+        "gn": norm_init(cfg, D),
+    }
+    return p
+
+
+def _cm_init(key, cfg: ModelConfig) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "mu": jnp.zeros((2, D), jnp.float32),  # k, r shift-mix
+        "w_k": dense_init(key_for(key, "w_k"), (D, F), cfg.pdtype),
+        "w_v": dense_init(key_for(key, "w_v"), (F, D), cfg.pdtype),
+        "w_r": dense_init(key_for(key, "w_r"), (D, D), cfg.pdtype),
+    }
+
+
+def _shift(x: jnp.ndarray, state: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Previous-token x (train: roll; decode: carried state). x: (B,S,D)."""
+    if state is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([state[:, None, :], x[:, :-1]], axis=1)
+    return prev
+
+
+def _mix(x, prev, mu):
+    return x + (prev - x) * mu  # lerp token shift
+
+
+def _time_mix(
+    p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+    shift_state: Optional[jnp.ndarray],
+    wkv_state: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, D = x.shape
+    H = D // RWKV_HEAD_DIM
+    prev = _shift(x, shift_state)
+    xr = _mix(x, prev, p["mu"][0])
+    xk = _mix(x, prev, p["mu"][1])
+    xv = _mix(x, prev, p["mu"][2])
+    xw = _mix(x, prev, p["mu"][3])
+    xg = _mix(x, prev, p["mu"][4])
+
+    r = (xr @ p["w_r"]).reshape(B, S, H, RWKV_HEAD_DIM)
+    k = (xk @ p["w_k"]).reshape(B, S, H, RWKV_HEAD_DIM)
+    v = (xv @ p["w_v"]).reshape(B, S, H, RWKV_HEAD_DIM)
+    g = jax.nn.silu(xg @ p["w_g"])
+
+    w_log = p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    lw = -jnp.exp(w_log.astype(jnp.float32))          # (B, S, D), <= 0
+    lw = jnp.clip(lw, LOG_W_MIN, 0.0).reshape(B, S, H, RWKV_HEAD_DIM)
+
+    to_bhsd = lambda t: jnp.moveaxis(t, 2, 1)          # (B,H,S,hd)
+    s0 = (
+        wkv_state if wkv_state is not None
+        else jnp.zeros((B, H, RWKV_HEAD_DIM, RWKV_HEAD_DIM), jnp.float32)
+    )
+    y, s_fin = wkv6(
+        to_bhsd(r), to_bhsd(k), to_bhsd(v), to_bhsd(lw),
+        p["u"], s0, impl="xla" if cfg.attn_impl == "xla" else "auto",
+    )
+    y = jnp.moveaxis(y, 1, 2).reshape(B, S, D)
+    y = norm_apply(p["gn"], y, "rmsnorm") * g
+    out = (y @ p["w_o"]).astype(x.dtype)
+    return out, x[:, -1, :], s_fin
+
+
+def _channel_mix(
+    p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+    shift_state: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    prev = _shift(x, shift_state)
+    xk = _mix(x, prev, p["mu"][0])
+    xr = _mix(x, prev, p["mu"][1])
+    kk = jax.nn.relu(xk @ p["w_k"])
+    kk = kk * kk
+    kk = logical_constraint(kk, "batch", None, "d_ff")
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (kk @ p["w_v"])
+    return out.astype(x.dtype), x[:, -1, :]
+
+
+def _layer_init(key, cfg: ModelConfig) -> Dict:
+    return {
+        "ln_tm": norm_init(cfg),
+        "tm": _tm_init(key_for(key, "tm"), cfg),
+        "ln_cm": norm_init(cfg),
+        "cm": _cm_init(key_for(key, "cm"), cfg),
+    }
+
+
+class RWKV6LM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.d_model % RWKV_HEAD_DIM == 0
+        self.cfg = cfg
+
+    def init(self, seed: int = 0) -> Dict:
+        cfg = self.cfg
+        root = jax.random.PRNGKey(seed)
+        keys = jax.random.split(key_for(root, "layers"), cfg.n_layers)
+        return {
+            "embed": embed_init(key_for(root, "embed"), cfg),
+            "layers": jax.vmap(lambda k: _layer_init(k, cfg))(keys),
+            "ln_out": norm_init(cfg),
+        }
+
+    def _apply_layer(self, lp, x, cfg, states):
+        """states: None (train) or dict(att_shift, cm_shift, wkv)."""
+        tm_in = norm_apply(lp["ln_tm"], x, cfg.norm)
+        tm_out, att_shift, wkv_s = _time_mix(
+            lp["tm"], tm_in, cfg,
+            None if states is None else states["att_shift"],
+            None if states is None else states["wkv"],
+        )
+        x = x + tm_out
+        cm_in = norm_apply(lp["ln_cm"], x, cfg.norm)
+        cm_out, cm_shift = _channel_mix(
+            lp["cm"], cm_in, cfg,
+            None if states is None else states["cm_shift"],
+        )
+        x = x + cm_out
+        new_states = {"att_shift": att_shift, "cm_shift": cm_shift, "wkv": wkv_s}
+        return x, new_states
+
+    def loss(self, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = embed_lookup(params["embed"], tokens, cfg)
+        x = logical_constraint(x, "batch", None, None)
+
+        def body(h, lp):
+            h, _ = self._apply_layer(lp, h, cfg, None)
+            return h, None
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        x, _ = scan_layers(body, x, params["layers"], cfg, cfg.n_layers)
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x, cfg)
+        return cross_entropy_loss(logits, labels)
+
+    # -- serving ----------------------------------------------------------------
+
+    def init_state(self, batch_size: int) -> Dict:
+        cfg = self.cfg
+        D = cfg.d_model
+        H = D // RWKV_HEAD_DIM
+        L = cfg.n_layers
+        return {
+            "att_shift": jnp.zeros((L, batch_size, D), cfg.cdtype),
+            "cm_shift": jnp.zeros((L, batch_size, D), cfg.cdtype),
+            "wkv": jnp.zeros((L, batch_size, H, RWKV_HEAD_DIM, RWKV_HEAD_DIM),
+                             jnp.float32),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def prefill(self, params: Dict, batch: Dict):
+        """Run the prompt through, carrying states (scan over layers with
+        full-sequence wkv — state comes out of the kernel's final state)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_lookup(params["embed"], tokens, cfg)
+
+        def body(h, lp):
+            tm_in = norm_apply(lp["ln_tm"], h, cfg.norm)
+            tm_out, att_shift, wkv_s = _time_mix(lp["tm"], tm_in, cfg, None, None)
+            h = h + tm_out
+            cm_in = norm_apply(lp["ln_cm"], h, cfg.norm)
+            cm_out, cm_shift = _channel_mix(lp["cm"], cm_in, cfg, None)
+            h = h + cm_out
+            return h, (att_shift, cm_shift, wkv_s)
+
+        x, (att_s, cm_s, wkv_s) = scan_layers(
+            body, x, params["layers"], cfg, cfg.n_layers
+        )
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x[:, -1:], cfg)
+        state = {
+            "att_shift": att_s, "cm_shift": cm_s, "wkv": wkv_s,
+            "pos": jnp.full((B,), S, jnp.int32),
+        }
+        return logits, state
+
+    def decode_step(self, params: Dict, state: Dict, tokens: jnp.ndarray):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens, cfg)  # (B, 1, D)
+
+        def body(h, xs):
+            lp, att_s, cm_s, wkv_s = xs
+            h, ns = self._apply_layer(
+                lp, h, cfg,
+                {"att_shift": att_s, "cm_shift": cm_s, "wkv": wkv_s},
+            )
+            return h, (ns["att_shift"], ns["cm_shift"], ns["wkv"])
+
+        x, (att_s, cm_s, wkv_s) = scan_layers(
+            body, x,
+            (params["layers"], state["att_shift"], state["cm_shift"],
+             state["wkv"]),
+            cfg, cfg.n_layers,
+        )
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x, cfg)
+        new_state = {
+            "att_shift": att_s, "cm_shift": cm_s, "wkv": wkv_s,
+            "pos": state["pos"] + 1,
+        }
+        return logits, new_state

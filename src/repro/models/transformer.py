@@ -1,0 +1,297 @@
+"""Decoder-only transformer LM (dense + MoE FFN), scan-over-layers.
+
+One driver covers nemotron-4 (squared-ReLU), qwen3 (qk_norm), yi (llama
+GQA), phi3-mini, mixtral (SWA + MoE), moonshot (64e top-6 MoE), and the
+phi3-vision backbone (precomputed patch embeddings prepended — frontend
+stub per the assignment).
+
+Layers are stacked on a leading axis and executed with ``jax.lax.scan``
+(+ configurable remat), so compile time and HLO size are O(1) in depth —
+a hard requirement for dry-running 60-layer configs at 512 devices.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import kvcache as kvc
+from repro.models.layers import (
+    attention_qkv,
+    attention_qkv_init,
+    cross_entropy_loss,
+    embed_init,
+    embed_lookup,
+    gqa_attention,
+    key_for,
+    logits_from_embedding,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    scan_layers,
+)
+from repro.models.moe import moe_apply, moe_init
+from repro.sharding.api import logical_constraint
+
+__all__ = ["DecoderLM"]
+
+
+def _block_init(key, cfg: ModelConfig) -> Dict:
+    p = {
+        "ln_attn": norm_init(cfg),
+        "attn": attention_qkv_init(key_for(key, "attn"), cfg),
+        "ln_mlp": norm_init(cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_init(key_for(key, "moe"), cfg)
+    else:
+        p["mlp"] = mlp_init(key_for(key, "mlp"), cfg)
+    return p
+
+
+def _block_apply(
+    p: Dict,
+    x: jnp.ndarray,               # (B, S, D)
+    positions: jnp.ndarray,       # (B, S)
+    cfg: ModelConfig,
+    *,
+    kv: Optional[Tuple] = None,   # (k_layer, v_layer[, k_pos]) for decode
+    kv_valid: Optional[jnp.ndarray] = None,
+    k_positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Dict, Tuple]:
+    """Returns (x_out, aux, new_kv (k, v))."""
+    h = norm_apply(p["ln_attn"], x, cfg.norm)
+    q, k_new, v_new = attention_qkv(p["attn"], h, positions, cfg)
+    q = logical_constraint(q, "batch", None, "heads", None)
+
+    if kv is None:
+        k_att, v_att = k_new, v_new
+        kp = positions
+        valid = None
+    else:
+        k_att, v_att = kv
+        kp = k_positions
+        valid = kv_valid
+
+    o = gqa_attention(
+        q, k_att, v_att, positions, kp,
+        causal=causal, window=cfg.sliding_window, kv_valid=valid,
+    )
+    B, S, H, hd = o.shape
+    x = x + (o.reshape(B, S, H * hd) @ p["attn"]["wo"]).astype(x.dtype)
+
+    h = norm_apply(p["ln_mlp"], x, cfg.norm)
+    if cfg.family == "moe":
+        f, aux = moe_apply(p["moe"], h, cfg)
+    else:
+        f, aux = mlp_apply(p["mlp"], h, cfg), {}
+    x = x + f.astype(x.dtype)
+    x = logical_constraint(x, "batch", None, None)
+    return x, aux, (k_new, v_new)
+
+
+class DecoderLM:
+    """Pure-function model API: init / apply / prefill / decode_step."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init -----------------------------------------------------------------
+
+    def init(self, seed: int = 0) -> Dict:
+        cfg = self.cfg
+        root = jax.random.PRNGKey(seed)
+        layer_keys = jax.random.split(key_for(root, "layers"), cfg.n_layers)
+        stacked = jax.vmap(lambda k: _block_init(k, cfg))(layer_keys)
+        return {
+            "embed": embed_init(key_for(root, "embed"), cfg),
+            "layers": stacked,
+            "ln_out": norm_init(cfg),
+        }
+
+    # -- shared embedding-side ----------------------------------------------------
+
+    def _embed_inputs(self, params, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens (+ optional frontend embeds) -> (x (B,S,D), positions)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed_lookup(params["embed"], tokens, cfg)
+        if cfg.frontend is not None and "frontend_embeds" in batch:
+            fe = batch["frontend_embeds"].astype(x.dtype)  # (B, P, D)
+            x = jnp.concatenate([fe, x], axis=1)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = logical_constraint(x, "batch", None, None)
+        return x, positions
+
+    # -- training forward -----------------------------------------------------------
+
+    def loss(self, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+
+        def body(carry, layer_p):
+            h, aux_acc = carry
+            h, aux, _ = _block_apply(layer_p, h, positions, cfg)
+            aux_acc = {
+                k: aux_acc.get(k, 0.0) + v for k, v in aux.items()
+            } if aux else aux_acc
+            return (h, aux_acc), None
+
+        aux0 = (
+            {"moe_lb_loss": 0.0, "moe_z_loss": 0.0, "moe_dropped_frac": 0.0}
+            if cfg.family == "moe" else {}
+        )
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        (x, aux), _ = scan_layers(
+            body, (x, aux0), params["layers"], cfg, cfg.n_layers
+        )
+
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x, cfg)
+        labels = batch["labels"]
+        if cfg.frontend is not None and "frontend_embeds" in batch:
+            P = batch["frontend_embeds"].shape[1]
+            pad = jnp.full(
+                (labels.shape[0], P), -1, labels.dtype
+            )
+            labels = jnp.concatenate([pad, labels], axis=1)
+        loss, metrics = cross_entropy_loss(logits, labels)
+        if cfg.family == "moe":
+            L = cfg.n_layers
+            lb = aux["moe_lb_loss"] / L
+            zl = aux["moe_z_loss"] / L
+            loss = loss + 0.01 * lb + 1e-3 * zl
+            metrics.update(
+                moe_lb_loss=lb, moe_z_loss=zl,
+                moe_dropped_frac=aux["moe_dropped_frac"] / L,
+            )
+        return loss, metrics
+
+    # -- prefill ----------------------------------------------------------------------
+
+    def prefill(
+        self, params: Dict, batch: Dict, max_len: Optional[int] = None
+    ):
+        """Run the prompt, build the cache, return last-token logits."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        use_sliding = cfg.sliding_window is not None
+        W = min(cfg.sliding_window or S, S) if use_sliding else None
+        # a frontend (VLM patches / audio frames) extends the embedded
+        # sequence past the token count -- the cache must hold all of it
+        max_len = max(max_len or S, S)
+
+        def body(h, layer_p):
+            h, _, (k_new, v_new) = _block_apply(layer_p, h, positions, cfg)
+            return h, (k_new, v_new)
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        x, (k_all, v_all) = scan_layers(
+            body, x, params["layers"], cfg, cfg.n_layers
+        )
+        # k_all: (L, B, S, Hkv, hd)
+
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x[:, -1:], cfg)
+
+        pos_end = jnp.full((B,), S, jnp.int32)
+        if use_sliding:
+            Wc = cfg.sliding_window
+            cache = kvc.sliding_kv_init(cfg, B, Wc)
+            take = min(S, Wc)
+            src = k_all[:, :, S - take:]
+            srcv = v_all[:, :, S - take:]
+            abs_pos = jnp.arange(S - take, S, dtype=jnp.int32)
+            slots = abs_pos % Wc
+            k = cache.k.at[:, :, slots].set(src.astype(cache.k.dtype))
+            v = cache.v.at[:, :, slots].set(srcv.astype(cache.v.dtype))
+            k_pos = cache.k_pos.at[:, slots].set(abs_pos[None, :])
+            cache = kvc.SlidingKV(k=k, v=v, k_pos=k_pos, pos=pos_end)
+        else:
+            cache = kvc.full_kv_init(cfg, B, max_len)
+            k = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k_all.astype(cache.k.dtype), 0, axis=2
+            )
+            v = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v_all.astype(cache.v.dtype), 0, axis=2
+            )
+            cache = kvc.FullKV(k=k, v=v, pos=pos_end)
+        return logits, cache
+
+    # -- decode ------------------------------------------------------------------------
+
+    def decode_step(self, params: Dict, cache, tokens: jnp.ndarray):
+        """One token for every sequence. tokens: (B, 1)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = embed_lookup(params["embed"], tokens, cfg)
+        positions = cache.pos[:, None]  # (B, 1)
+        sliding = isinstance(cache, kvc.SlidingKV)
+
+        if sliding:
+            W = cache.window
+            k_positions = cache.k_pos  # (B, W)
+        else:
+            Smax = cache.max_len
+            k_positions = jnp.broadcast_to(
+                jnp.arange(Smax, dtype=jnp.int32), (B, Smax)
+            )
+
+        def body(h, xs):
+            layer_p, k_layer, v_layer = xs
+            hh = norm_apply(layer_p["ln_attn"], h, cfg.norm)
+            q, k_new, v_new = attention_qkv(layer_p["attn"], hh, positions, cfg)
+            if sliding:
+                k_layer, v_layer = kvc.sliding_kv_update_layer(
+                    k_layer, v_layer, k_new, v_new, cache.pos
+                )
+                kp = k_positions.at[
+                    jnp.arange(B), cache.pos % W
+                ].set(cache.pos)
+                valid = (kp >= 0) & (kp > (cache.pos[:, None] - (cfg.sliding_window or W)))
+            else:
+                k_layer, v_layer = kvc.full_kv_update_layer(
+                    k_layer, v_layer, k_new, v_new, cache.pos
+                )
+                kp = k_positions
+                valid = kp <= cache.pos[:, None]
+            o = gqa_attention(
+                q, k_layer, v_layer, positions, kp,
+                causal=True, window=cfg.sliding_window, kv_valid=valid,
+            )
+            _, S1, H, hd = o.shape
+            h = h + (o.reshape(B, S1, H * hd) @ layer_p["attn"]["wo"]).astype(h.dtype)
+            hh = norm_apply(layer_p["ln_mlp"], h, cfg.norm)
+            if cfg.family == "moe":
+                f, _ = moe_apply(layer_p["moe"], hh, cfg)
+            else:
+                f = mlp_apply(layer_p["mlp"], hh, cfg)
+            h = h + f.astype(h.dtype)
+            return h, (k_layer, v_layer)
+
+        x, (k_cache, v_cache) = scan_layers(
+            body, x, (params["layers"], cache.k, cache.v), cfg, cfg.n_layers
+        )
+        x = norm_apply(params["ln_out"], x, cfg.norm)
+        logits = logits_from_embedding(params["embed"], x, cfg)
+
+        new_pos = cache.pos + 1
+        if sliding:
+            k_pos = cache.k_pos.at[jnp.arange(B), cache.pos % cache.window].set(
+                cache.pos
+            )
+            new_cache = kvc.SlidingKV(k=k_cache, v=v_cache, k_pos=k_pos, pos=new_pos)
+        else:
+            new_cache = kvc.FullKV(k=k_cache, v=v_cache, pos=new_pos)
+        return logits, new_cache

@@ -1,0 +1,108 @@
+"""AdamW with fp32 master weights and ZeRO-1-style state sharding.
+
+State = {master, m, v, step}: master/m/v are fp32 copies shaped like the
+params.  Sharding: each state leaf inherits the param's (model-axis) spec
+*plus* the first free dim divisible by the data-axis size is sharded over
+"data" (see sharding/params.zero1_spec) — optimizer math is elementwise, so
+any extra sharding is free, and it divides optimizer memory by |data|.
+
+Gradient compression (int8 error feedback) lives in optim/compress.py and
+wraps the update when enabled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 200
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr_peak * warm * (cfg.lr_min / cfg.lr_peak + (1 - cfg.lr_min / cfg.lr_peak) * cos)
+
+
+def adamw_init(params) -> Dict:
+    # copy=True: when params are already f32 (tests/CPU examples) a plain
+    # astype aliases the param buffer, and donating params+opt_state to the
+    # same jit call would donate one buffer twice.
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), t
+    )
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {
+        "master": f32(params),
+        "m": zeros(params),
+        "v": zeros(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads,                 # pytree, any float dtype
+    opt_state: Dict,
+    param_dtype,
+) -> Tuple[Any, Dict, Dict]:
+    """Returns (new_params (param_dtype), new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = cosine_lr(cfg, step.astype(jnp.float32))
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        p_new = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * p)
+        return m_new, v_new, p_new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_p = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda x: x.astype(param_dtype), new_master)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {
+        "master": new_master, "m": new_m, "v": new_v, "step": step
+    }, metrics

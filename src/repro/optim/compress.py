@@ -1,0 +1,65 @@
+"""int8 error-feedback gradient compression (cross-pod DP traffic).
+
+At multi-pod scale the pod-axis gradient all-reduce crosses DCN-class
+links (~25x slower than ICI); compressing the cross-pod reduction 4x
+(f32->int8 with per-block scales) cuts that term proportionally.  Error
+feedback keeps the quantization bias out of the optimization trajectory:
+the residual (g - dequant(quant(g))) is added to the next step's gradient.
+
+Used by train.step when ``compress_pod_grads=True``; unit-tested for the
+error-feedback contract in tests/test_train.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compress_tree"]
+
+_BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(
+    q: jnp.ndarray, scale: jnp.ndarray, shape, dtype=jnp.float32
+) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def ef_compress_tree(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Quantize (grads + residual) leaf-wise; return (dequantized grads for
+    the optimizer, new residuals).  The round-trip models what the wire
+    carries; on real multi-pod hardware the int8 payload is what crosses
+    the pod axis (psum of int32-accumulated int8 blocks)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s, g.shape)
+        return deq, gf - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )

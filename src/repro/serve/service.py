@@ -1,0 +1,166 @@
+"""Online feature service + model serving — FeatInsight §3.1 step 4.
+
+``FeatureService`` is the paper's deployment unit: a named, versioned
+view bound to an online store, answering request rows with feature
+vectors under a latency budget.  ``ScoringService`` composes it with a
+model (feature vector -> signature embedding -> transformer -> score),
+the fraud-detection layout of §3.3.
+
+``BatchScheduler`` is the serving loop's micro-batcher: requests are
+coalesced up to ``max_batch`` or ``max_wait_us`` (whichever first) so the
+jit'd query executes at a fixed batch shape (padding to the shape bucket
+keeps one compiled executable per bucket — compilation caching again).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.online import OnlineFeatureStore
+from repro.core.view import FeatureRegistry, FeatureView
+
+__all__ = ["FeatureService", "BatchScheduler", "ScoringService"]
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    batches: int = 0
+    total_latency_s: float = 0.0
+
+    @property
+    def mean_latency_ms(self) -> float:
+        return 1e3 * self.total_latency_s / max(self.batches, 1)
+
+
+class FeatureService:
+    """A deployed (view, version) answering online feature requests."""
+
+    def __init__(
+        self,
+        name: str,
+        view: FeatureView,
+        store: OnlineFeatureStore,
+        registry: Optional[FeatureRegistry] = None,
+        mode: str = "preagg",
+    ):
+        self.name = name
+        self.view = view
+        self.store = store
+        self.mode = mode
+        self.stats = ServiceStats()
+        if registry is not None:
+            registry.deploy(name, view.name, view.version)
+
+    def request(self, rows: Dict[str, np.ndarray],
+                ingest: bool = True) -> Dict[str, np.ndarray]:
+        """Compute features for a batch of request rows; optionally ingest
+        them afterwards (the online-learning pattern of the paper)."""
+        t0 = time.perf_counter()
+        out = self.store.query(rows, mode=self.mode)
+        out = {k: np.asarray(v) for k, v in out.items()}
+        if ingest:
+            key = np.asarray(rows[self.view.schema.key])
+            ts = np.asarray(rows[self.view.schema.ts])
+            order = np.lexsort((ts, key))
+            self.store.ingest({c: np.asarray(v)[order] for c, v in rows.items()})
+        dt = time.perf_counter() - t0
+        self.stats.requests += len(next(iter(rows.values())))
+        self.stats.batches += 1
+        self.stats.total_latency_s += dt
+        return out
+
+    def feature_matrix(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
+        out = self.request(rows, ingest=False)
+        return np.stack([out[f] for f in self.view.features], axis=-1)
+
+
+class BatchScheduler:
+    """Coalesce requests into fixed-shape batches (bucketed padding)."""
+
+    def __init__(self, buckets: Sequence[int] = (1, 4, 16, 64, 256)):
+        self.buckets = sorted(buckets)
+        self.queue: List[Dict] = []
+
+    def submit(self, row: Dict) -> None:
+        self.queue.append(row)
+
+    def next_batch(self, max_batch: Optional[int] = None) -> Optional[Dict[str, np.ndarray]]:
+        if not self.queue:
+            return None
+        n = len(self.queue)
+        if max_batch:
+            n = min(n, max_batch)
+        bucket = next((b for b in self.buckets if b >= n), self.buckets[-1])
+        n = min(n, bucket)
+        rows, self.queue = self.queue[:n], self.queue[n:]
+        cols = {
+            k: np.asarray([r[k] for r in rows])
+            for k in rows[0]
+        }
+        # pad to bucket by repeating the last row (masked out by caller)
+        pad = bucket - n
+        if pad:
+            cols = {k: np.concatenate([v, np.repeat(v[-1:], pad, 0)])
+                    for k, v in cols.items()}
+        cols["__valid__"] = np.arange(bucket) < n
+        return cols
+
+
+class ScoringService:
+    """features -> signature embedding -> model -> score (fraud §3.3)."""
+
+    def __init__(self, feature_service: FeatureService, model, params,
+                 embed_table: jnp.ndarray, num_hashes: int = 2):
+        from repro.core.signature import signature_ids
+        from repro.kernels.signature.ops import signature_embed
+
+        self.fs = feature_service
+        self.model = model
+        self.params = params
+        self.table = embed_table
+        self.num_hashes = num_hashes
+        self._signature_ids = signature_ids
+        self._embed = signature_embed
+
+        cfg = model.cfg
+
+        def score(params, feats, emb):
+            # feature vector projected as frontend embeddings + a CLS token
+            B = feats.shape[0]
+            fe = jnp.concatenate(
+                [feats[:, None, :], emb[:, None, :]], axis=1
+            )
+            P = cfg.frontend_len
+            fe = jnp.pad(fe, ((0, 0), (0, P - 2), (0, 0)))
+            batch = {
+                "tokens": jnp.zeros((B, 1), jnp.int32),
+                "frontend_embeds": fe,
+            }
+            logits, _ = model.prefill(params, batch, max_len=P + 1)
+            return jax.nn.sigmoid(logits[:, -1, 0])
+
+        self._score = jax.jit(score)
+
+    def handle(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
+        feats = self.fs.feature_matrix(rows)  # (B, F)
+        cfg = self.model.cfg
+        F = feats.shape[1]
+        pad = np.zeros((feats.shape[0], cfg.d_model - F), np.float32)
+        featvec = jnp.asarray(np.concatenate([feats, pad], -1), jnp.float32)
+        sig = self._signature_ids(
+            [jnp.asarray(rows[self.fs.view.schema.key], jnp.int32)], bits=20
+        )
+        emb = self._embed(
+            self.table, sig,
+            jnp.ones((self.num_hashes,), jnp.float32) / self.num_hashes,
+            num_hashes=self.num_hashes,
+        )
+        emb = jnp.pad(emb, ((0, 0), (0, cfg.d_model - emb.shape[-1])))
+        return np.asarray(self._score(self.params, featvec, emb))

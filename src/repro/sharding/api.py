@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules (MaxText-style), mesh-agnostic model code.
+
+Models annotate activations/params with *logical* axis names
+("batch", "seq", "d_model", "d_ff", "heads", "kv_heads", "vocab",
+"experts", ...).  A rules table maps logical names to mesh axes; the same
+model code runs unsharded on one CPU device (rules empty -> no-op) and
+fully sharded on the production mesh (rules installed by the launcher).
+
+Rules are installed with ``use_rules`` (context manager) so tests,
+smoke runs and the dry-run can each pick their own mapping without
+threading a mesh through every call.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "use_rules",
+    "current_rules",
+    "current_mesh",
+    "logical_constraint",
+    "logical_spec",
+    "named_sharding",
+    "DEFAULT_RULES",
+    "MULTI_POD_RULES",
+]
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# single-pod (16, 16) ("data", "model") production rules
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("data",),
+    "seq": None,
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "kv_head_dim": "model",   # decode caches: shard the head_dim lane
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "opt_state": "data",      # ZeRO-1: optimizer state sharded over data
+    "seq_shard": "data",      # SP cells: shard sequence over data axis
+}
+
+# multi-pod (2, 16, 16) ("pod", "data", "model"): pod is outer DP
+MULTI_POD_RULES: Dict[str, MeshAxes] = {
+    **DEFAULT_RULES,
+    "batch": ("pod", "data"),
+}
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.rules: Optional[Dict[str, MeshAxes]] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+    prev = (_STATE.rules, _STATE.mesh)
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev
+
+
+def current_rules() -> Optional[Dict[str, MeshAxes]]:
+    return _STATE.rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def logical_spec(
+    logical_axes: Sequence[Optional[str]],
+    rules: Optional[Dict[str, MeshAxes]] = None,
+) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules."""
+    rules = rules if rules is not None else (_STATE.rules or {})
+    parts = []
+    for name in logical_axes:
+        if name is None:
+            parts.append(None)
+        else:
+            parts.append(rules.get(name))
+    return P(*parts)
+
+
+def logical_constraint(x: jnp.ndarray, *logical_axes: Optional[str]):
+    """with_sharding_constraint by logical axis names; no-op without rules.
+
+    Divisibility guard: a mesh-axis mapping is dropped (replicated) when the
+    corresponding dim is not divisible by the mesh axis size — e.g. yi-34b's
+    56 heads on a 16-way model axis fall back to replication and GSPMD
+    shards the fused projections instead.
+    """
+    rules, mesh = _STATE.rules, _STATE.mesh
+    if rules is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    parts = []
+    for dim, name in zip(x.shape, logical_axes):
+        axes = rules.get(name) if name is not None else None
+        if axes is None:
+            parts.append(None)
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = 1
+        if mesh is not None:
+            for a in axes_t:
+                size *= mesh.shape[a]
+        if size > 1 and dim % size != 0:
+            parts.append(None)
+        else:
+            parts.append(axes)
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def named_sharding(mesh: Mesh, *logical_axes: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(logical_axes))

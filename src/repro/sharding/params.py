@@ -1,0 +1,162 @@
+"""Parameter / optimizer-state PartitionSpecs by leaf path.
+
+Megatron-style tensor parallelism on the "model" axis:
+  * column-parallel: qkv projections, mlp w_in/w_gate   (shard output dim)
+  * row-parallel:    attn wo, mlp w_out                 (shard input dim)
+  * vocab-parallel:  embedding table / untied head
+  * expert-parallel: MoE expert dim when divisible (moonshot 64/16),
+                     else expert-FFN d_ff sharding (mixtral 8<16 -> TP-MoE)
+
+Leading layer-stack dims get None.  Every mapping passes a divisibility
+guard — non-divisible dims fall back to replication and GSPMD shards the
+surrounding einsums (yi-34b's 56 heads).
+
+ZeRO-1 (`zero1_spec`): optimizer-state leaves additionally shard their
+first still-free divisible dim over "data".
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["param_specs", "zero1_spec", "tree_named_shardings"]
+
+
+# (path regex, trailing-dim logical axes) — first match wins.
+def _patterns(cfg: ModelConfig):
+    model_divides_experts = (
+        cfg.num_experts > 0
+    )
+    pats = [
+        (r"embed/table$", ("vocab", None)),
+        (r"embed/head$", (None, "vocab")),
+        # attention projections (incl. griffin local attn, encdec self/cross)
+        (r"(attn|self_attn|cross_attn)/wq$", (None, "fused_heads")),
+        (r"(attn|self_attn|cross_attn)/wk$", (None, "fused_heads")),
+        (r"(attn|self_attn|cross_attn)/wv$", (None, "fused_heads")),
+        (r"(attn|self_attn|cross_attn)/wo$", ("fused_heads", None)),
+        # dense MLPs
+        (r"mlp\d*/w_in$", (None, "d_ff")),
+        (r"mlp\d*/w_gate$", (None, "d_ff")),
+        (r"mlp\d*/w_out$", ("d_ff", None)),
+        # MoE
+        (r"moe/router$", (None, None)),
+        (r"moe/w_in$", ("experts", None, "expert_ff")),
+        (r"moe/w_gate$", ("experts", None, "expert_ff")),
+        (r"moe/w_out$", ("experts", "expert_ff", None)),
+        # rwkv time-mix / channel-mix
+        (r"tm/w_[rkvg]$", (None, "d_ff")),      # D x D, shard outputs
+        (r"tm/w_o$", ("d_ff", None)),
+        (r"tm/w_lora_a$", (None, None)),
+        (r"tm/w_lora_b$", (None, None)),
+        (r"cm/w_k$", (None, "d_ff")),
+        (r"cm/w_v$", ("d_ff", None)),
+        (r"cm/w_r$", (None, "d_ff")),
+        # griffin recurrent block
+        (r"rec\d*/w_in$", (None, "d_ff")),
+        (r"rec\d*/w_gate$", (None, "d_ff")),
+        (r"rec\d*/conv_w$", (None, "d_ff")),
+        (r"rec\d*/w_a$", (None, "d_ff")),
+        (r"rec\d*/w_x$", (None, "d_ff")),
+        (r"rec\d*/w_out$", ("d_ff", None)),
+        (r"rec\d*/lam$", ("d_ff",)),
+        (r"rec\d*/b_[ax]$", ("d_ff",)),
+    ]
+    return [(re.compile(p), ax) for p, ax in pats]
+
+
+def _axis_size(mesh: Optional[Mesh], axes) -> int:
+    if mesh is None or axes is None:
+        return 1
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    n = 1
+    for a in axes_t:
+        n *= mesh.shape[a]
+    return n
+
+
+def _spec_for(
+    path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+    rules: Dict, mesh: Optional[Mesh], pats,
+) -> P:
+    for pat, axes in pats:
+        if pat.search(path):
+            trailing = list(axes)
+            lead = len(shape) - len(trailing)
+            if lead < 0:
+                return P()
+            logical = [None] * lead + trailing
+            parts = []
+            for dim, name in zip(shape, logical):
+                mapped = rules.get(name) if name else None
+                if mapped is None:
+                    parts.append(None)
+                    continue
+                if dim % _axis_size(mesh, mapped) != 0:
+                    parts.append(None)  # divisibility guard
+                else:
+                    parts.append(mapped)
+            return P(*parts)
+    return P()  # norms, biases, mu vectors, u bonus, router: replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(
+    params_tree, cfg: ModelConfig, rules: Dict, mesh: Optional[Mesh],
+):
+    """PartitionSpec pytree matching ``params_tree`` (arrays or SDS)."""
+    pats = _patterns(cfg)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(
+            _path_str(path), leaf.shape, cfg, rules, mesh, pats
+        ),
+        params_tree,
+    )
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Optional[Mesh],
+               data_axes="data") -> P:
+    """Add "data" sharding on the first free divisible dim (ZeRO-1)."""
+    if mesh is None:
+        return spec
+    dsize = _axis_size(mesh, data_axes)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and dim % dsize == 0 and dim >= dsize:
+            parts[i] = data_axes
+            return P(*parts)
+    return P(*parts)
+
+
+def opt_state_specs(param_spec_tree, params_tree, mesh: Optional[Mesh]):
+    """Specs for {master, m, v, step} given param specs (ZeRO-1)."""
+    z = jax.tree.map(
+        lambda sp, leaf: zero1_spec(sp, leaf.shape, mesh),
+        param_spec_tree, params_tree,
+    )
+    return {"master": z, "m": z, "v": z, "step": P()}
+
+
+def tree_named_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + no NaNs; plus a decode-step cache check."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, get_smoke_config
+from repro.models import build_model
+
+ALL_ARCHS = [a for a in ARCHS]
+
+
+def _batch_for(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.float32
+        )
+    elif cfg.frontend is not None:
+        batch["frontend_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(seed=0)
+    batch = _batch_for(cfg)
+
+    def loss_fn(p):
+        loss, metrics = model.loss(p, batch)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    # gradient sanity: finite and at least one nonzero leaf
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves), arch
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves), arch
+    # loss should be near ln(vocab) at random init
+    expected = np.log(cfg.vocab)
+    assert 0.3 * expected < float(metrics["nll"]) < 3.0 * expected, (
+        arch, float(metrics["nll"]), expected
+    )
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_step_smoke(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(seed=0)
+    B, S = 2, 16
+    batch = _batch_for(cfg, B=B, S=S)
+
+    if cfg.family in ("dense", "moe"):
+        extra = cfg.frontend_len if cfg.frontend else 0
+        logits, cache = model.prefill(params, batch, max_len=S + extra + 4)
+    elif cfg.family == "rwkv":
+        logits, cache = model.prefill(params, batch)
+    elif cfg.family == "griffin":
+        cache = model.init_state(B)
+        logits = None
+    else:  # encdec
+        logits, cache = model.prefill(params, batch, max_len=S + 4)
+
+    if logits is not None:
+        assert logits.shape[:2] == (B, 1)
+        assert np.isfinite(np.asarray(logits)).all(), arch
+
+    tok = jnp.ones((B, 1), jnp.int32)
+    if cfg.family == "griffin":
+        logits2, cache2 = model.decode_step(params, cache, tok)
+    else:
+        logits2, cache2 = model.decode_step(params, cache, tok)
+    assert logits2.shape == (B, 1, cfg.vocab_padded), (arch, logits2.shape)
+    assert np.isfinite(np.asarray(logits2)).all(), arch
+    # cache advanced
+    def _pos(c):
+        if isinstance(c, dict):
+            return c["self"].pos if "self" in c else c["pos"]
+        return c.pos
+
+    assert int(_pos(cache2)[0]) == int(_pos(cache)[0]) + 1
+
+
+def test_decode_matches_prefill_dense():
+    """Teacher-forcing equivalence: decode logits == prefill logits."""
+    cfg = get_smoke_config("qwen3-32b")
+    model = build_model(cfg)
+    params = model.init(seed=0)
+    rng = np.random.default_rng(0)
+    B, S = 1, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    # full forward logits at each position
+    full, _ = model.loss(params, {"tokens": tokens, "labels": jnp.full((B, S), -1)})
+    # prefill on the prefix, then decode token by token
+    prefix = 6
+    logits_p, cache = model.prefill(
+        params, {"tokens": tokens[:, :prefix]}, max_len=S
+    )
+    outs = [logits_p[:, 0]]
+    for i in range(prefix, S):
+        lg, cache = model.decode_step(params, cache, tokens[:, i:i + 1])
+        outs.append(lg[:, 0])
+
+    # reference: prefill over longer prefixes, compare last-token logits
+    for i in range(prefix, S):
+        ref, _ = model.prefill(params, {"tokens": tokens[:, :i + 1]}, max_len=S)
+        got = outs[i - prefix + 1] if i + 1 <= S - 1 else outs[-1]
+        # outs[j] is logits after consuming token j-1+prefix
+        np.testing.assert_allclose(
+            np.asarray(outs[i - prefix + 1]), np.asarray(ref[:, 0]),
+            rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_rwkv_decode_matches_prefill():
+    cfg = get_smoke_config("rwkv6-3b")
+    model = build_model(cfg)
+    params = model.init(seed=0)
+    rng = np.random.default_rng(1)
+    B, S = 1, 10
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    prefix = 5
+    _, state = model.prefill(params, {"tokens": tokens[:, :prefix]})
+    outs = []
+    for i in range(prefix, S):
+        lg, state = model.decode_step(params, state, tokens[:, i:i + 1])
+        outs.append(lg[:, 0])
+    for i in range(prefix, S):
+        ref, _ = model.prefill(params, {"tokens": tokens[:, :i + 1]})
+        np.testing.assert_allclose(
+            np.asarray(outs[i - prefix]), np.asarray(ref[:, 0]),
+            rtol=5e-4, atol=5e-4,
+        )
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact assigned hyperparams."""
+    from repro.configs.registry import get_config
+
+    spec = {
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "rwkv6-3b": (32, 2560, None, None, 8960, 65536),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "phi3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    }
+    for arch, (L, D, H, Hkv, F, V) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L and cfg.d_model == D, arch
+        assert cfg.d_ff == F and cfg.vocab == V, arch
+        if H is not None:
+            assert cfg.n_heads == H and cfg.n_kv_heads == Hkv, arch
+    assert get_config("mixtral-8x7b").num_experts == 8
+    assert get_config("mixtral-8x7b").top_k == 2
+    assert get_config("moonshot-v1-16b-a3b").num_experts == 64
+    assert get_config("moonshot-v1-16b-a3b").top_k == 6

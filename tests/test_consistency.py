@@ -1,0 +1,115 @@
+"""Property-based offline↔online consistency — the paper's §2(3) guarantee.
+
+Hypothesis generates random workloads (keys, timestamps, values, window
+specs); the invariant is that the offline batch engine and the online
+request-mode store compute the same features (within f32 tolerance), on
+both the naive and pre-aggregated query paths.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (
+    Col,
+    FeatureView,
+    TableSchema,
+    range_window,
+    rows_window,
+    w_count,
+    w_distinct_approx,
+    w_max,
+    w_mean,
+    w_min,
+    w_std,
+    w_sum,
+    w_topn_freq,
+)
+from repro.core.consistency import verify_view
+
+SCHEMA = TableSchema(name="tx", key="uid", ts="ts", numeric=("amount",),
+                     categorical=("mcc",))
+
+
+def _workload(seed, n, k, tmax):
+    rng = np.random.default_rng(seed)
+    key = rng.integers(0, k, n).astype(np.int32)
+    ts = np.sort(rng.integers(0, tmax, n)).astype(np.int32)
+    return dict(
+        uid=key, ts=ts,
+        amount=rng.gamma(2.0, 40.0, n).astype(np.float32),
+        mcc=rng.integers(0, 20, n).astype(np.int32),
+    )
+
+
+BIG_VIEW = FeatureView("all_aggs", SCHEMA, {
+    "sum_r": w_sum(Col("amount"), range_window(500, bucket=64)),
+    "mean_r": w_mean(Col("amount"), range_window(500, bucket=64)),
+    "min_r": w_min(Col("amount"), range_window(500, bucket=64)),
+    "max_r": w_max(Col("amount"), range_window(500, bucket=64)),
+    "std_r": w_std(Col("amount"), range_window(500, bucket=64)),
+    "cnt_rows": w_count(Col("amount"), rows_window(9)),
+    "sum_rows": w_sum(Col("amount"), rows_window(9)),
+    "distinct": w_distinct_approx(Col("mcc"), range_window(500, bucket=64)),
+    "top1": w_topn_freq(Col("mcc"), rows_window(16), n=0),
+    "derived": w_sum(Col("amount") * (Col("amount") > 50.0),
+                     range_window(500, bucket=64)),
+})
+
+
+@pytest.mark.parametrize("mode", ["naive", "preagg"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_consistency_all_aggs(mode, seed):
+    cols = _workload(seed, n=500, k=6, tmax=3000)
+    rep = verify_view(
+        BIG_VIEW, cols, num_keys=6, capacity=256, num_buckets=64,
+        bucket_size=64, mode=mode,
+    )
+    assert rep.passed, rep.summary() + f" per-feature: {rep.per_feature}"
+
+
+@settings(
+    max_examples=12, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+@given(
+    seed=st.integers(0, 2**20),
+    n=st.integers(50, 300),
+    k=st.integers(1, 8),
+    tmax=st.integers(200, 4000),
+    wsize=st.integers(2, 900),
+    mode=st.sampled_from(["naive", "preagg"]),
+)
+def test_consistency_property_range_windows(seed, n, k, tmax, wsize, mode):
+    cols = _workload(seed, n, k, tmax)
+    view = FeatureView("prop", SCHEMA, {
+        "s": w_sum(Col("amount"), range_window(wsize, bucket=64)),
+        "c": w_count(Col("amount"), range_window(wsize, bucket=64)),
+        "mx": w_max(Col("amount"), range_window(wsize, bucket=64)),
+    })
+    rep = verify_view(
+        view, cols, num_keys=k, capacity=512, num_buckets=64,
+        bucket_size=64, mode=mode,
+    )
+    assert rep.passed, rep.summary() + f" per-feature: {rep.per_feature}"
+
+
+@settings(
+    max_examples=8, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+@given(
+    seed=st.integers(0, 2**20),
+    wrows=st.integers(1, 30),
+)
+def test_consistency_property_rows_windows(seed, wrows):
+    cols = _workload(seed, 200, 4, 2000)
+    view = FeatureView("prop_rows", SCHEMA, {
+        "s": w_sum(Col("amount"), rows_window(wrows)),
+        "mn": w_min(Col("amount"), rows_window(wrows)),
+    })
+    rep = verify_view(
+        view, cols, num_keys=4, capacity=256, num_buckets=64,
+        bucket_size=64, mode="naive",
+    )
+    assert rep.passed, rep.summary() + f" per-feature: {rep.per_feature}"

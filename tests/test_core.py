@@ -1,0 +1,244 @@
+"""Feature-engine behaviour tests: offline engine, online store, views,
+lineage, signatures, sketches."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Agg,
+    Col,
+    FeatureRegistry,
+    FeatureView,
+    OfflineEngine,
+    OnlineFeatureStore,
+    TableSchema,
+    range_window,
+    render_sql,
+    rows_window,
+    w_count,
+    w_distinct_approx,
+    w_first,
+    w_last,
+    w_max,
+    w_mean,
+    w_min,
+    w_std,
+    w_sum,
+    w_topn_freq,
+)
+from repro.core.signature import (
+    cms_init,
+    cms_query,
+    cms_update,
+    multi_hash_ids,
+    signature_ids,
+)
+
+
+SCHEMA = TableSchema(name="tx", key="uid", ts="ts", numeric=("amount",),
+                     categorical=("mcc",))
+
+
+def _table(rng, n=400, k=5, tmax=3000):
+    key = rng.integers(0, k, n).astype(np.int32)
+    ts = np.sort(rng.integers(0, tmax, n)).astype(np.int32)
+    return dict(
+        uid=key, ts=ts,
+        amount=rng.gamma(2.0, 40.0, n).astype(np.float32),
+        mcc=rng.integers(0, 30, n).astype(np.int32),
+    )
+
+
+def _brute_offline(cols, agg, window_mode, size):
+    """O(N^2) brute-force oracle for per-key windows."""
+    key, ts, x = cols["uid"], cols["ts"], cols["amount"]
+    n = len(key)
+    out = np.zeros(n, np.float64)
+    order = np.lexsort((ts, key))
+    pos_in_seg = {}
+    rows_by_key = {}
+    res = np.zeros(n, np.float64)
+    for idx in order:
+        kk = key[idx]
+        hist = rows_by_key.setdefault(kk, [])
+        hist.append((ts[idx], x[idx], idx))
+        if window_mode == "rows":
+            win = hist[-size:]
+        else:
+            win = [h for h in hist if h[0] > ts[idx] - size]
+        vals = np.array([h[1] for h in win], np.float64)
+        if agg == "sum":
+            res[idx] = vals.sum()
+        elif agg == "count":
+            res[idx] = len(vals)
+        elif agg == "mean":
+            res[idx] = vals.mean()
+        elif agg == "min":
+            res[idx] = vals.min()
+        elif agg == "max":
+            res[idx] = vals.max()
+        elif agg == "std":
+            res[idx] = vals.std()
+        elif agg == "first":
+            res[idx] = vals[0]
+        elif agg == "last":
+            res[idx] = vals[-1]
+    return res
+
+
+@pytest.mark.parametrize("agg,maker", [
+    ("sum", w_sum), ("count", w_count), ("mean", w_mean), ("min", w_min),
+    ("max", w_max), ("std", w_std), ("first", w_first), ("last", w_last),
+])
+@pytest.mark.parametrize("mode,size", [("rows", 7), ("range", 500)])
+def test_offline_engine_vs_bruteforce(agg, maker, mode, size):
+    rng = np.random.default_rng(hash((agg, mode, size)) % 2**31)
+    cols = _table(rng)
+    w = rows_window(size) if mode == "rows" else range_window(size)
+    view = FeatureView("t", SCHEMA, {"f": maker(Col("amount"), w)})
+    out = np.asarray(OfflineEngine().compute(
+        view, {k: jnp.asarray(v) for k, v in cols.items()}
+    )["f"])
+    ref = _brute_offline(cols, agg, mode, size)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-2)
+
+
+def test_offline_rowlevel_composition():
+    rng = np.random.default_rng(1)
+    cols = _table(rng)
+    ratio = w_sum(Col("amount"), rows_window(5)) / w_count(
+        Col("amount"), rows_window(5)
+    )
+    view = FeatureView("t", SCHEMA, {
+        "ratio": ratio,
+        "mean": w_mean(Col("amount"), rows_window(5)),
+    })
+    out = OfflineEngine().compute(view, {k: jnp.asarray(v) for k, v in cols.items()})
+    np.testing.assert_allclose(out["ratio"], out["mean"], rtol=1e-5, atol=1e-4)
+
+
+def test_offline_derived_arg():
+    """Window agg over a derived expression (amount > 100)."""
+    rng = np.random.default_rng(2)
+    cols = _table(rng)
+    view = FeatureView("t", SCHEMA, {
+        "big_cnt": w_sum(Col("amount") > 100.0, rows_window(10)),
+    })
+    out = np.asarray(OfflineEngine().compute(
+        view, {k: jnp.asarray(v) for k, v in cols.items()}
+    )["big_cnt"])
+    # centered prefix sums may leave O(eps) negatives on 0/1 data
+    assert out.min() >= -1e-4 and out.max() <= 10 + 1e-4
+
+
+def test_topn_freq_exact_small():
+    """TOPN over a tiny controlled history."""
+    key = np.zeros(6, np.int32)
+    ts = np.arange(6, dtype=np.int32)
+    mcc = np.array([3, 3, 5, 3, 5, 7], np.int32)
+    cols = dict(uid=key, ts=ts, amount=np.ones(6, np.float32), mcc=mcc)
+    view = FeatureView("t", SCHEMA, {
+        "top1": w_topn_freq(Col("mcc"), rows_window(6), n=0),
+        "top2": w_topn_freq(Col("mcc"), rows_window(6), n=1),
+    })
+    out = OfflineEngine().compute(view, {k: jnp.asarray(v) for k, v in cols.items()})
+    # at the last row: history = [3,3,5,3,5,7] -> top1=3 (x3), top2=5 (x2)
+    assert float(out["top1"][-1]) == 3.0
+    assert float(out["top2"][-1]) == 5.0
+
+
+def test_online_store_rows_window_incremental():
+    rng = np.random.default_rng(3)
+    view = FeatureView("t", SCHEMA, {
+        "s5": w_sum(Col("amount"), rows_window(5)),
+    })
+    store = OnlineFeatureStore(view, num_keys=4, capacity=32,
+                               num_buckets=16, bucket_size=32)
+    amounts = rng.gamma(2.0, 40.0, 20).astype(np.float32)
+    # single key, sequential ingest; query before each ingest
+    run = []
+    for i, a in enumerate(amounts):
+        cols = dict(uid=np.array([0], np.int32),
+                    ts=np.array([i * 10], np.int32),
+                    amount=np.array([a], np.float32),
+                    mcc=np.array([1], np.int32))
+        res = store.query(cols, mode="naive")
+        expect = amounts[max(0, i - 4): i + 1].sum()
+        run.append((float(res["s5"][0]), float(expect)))
+        store.ingest(cols)
+    got, want = zip(*run)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_ring_eviction_keeps_recent():
+    """Ring keeps the newest `capacity` rows; old rows age out (TTL)."""
+    view = FeatureView("t", SCHEMA, {"c": w_count(Col("amount"), rows_window(100))})
+    store = OnlineFeatureStore(view, num_keys=2, capacity=8,
+                               num_buckets=16, bucket_size=32)
+    n = 20
+    cols = dict(uid=np.zeros(n, np.int32), ts=np.arange(n, dtype=np.int32),
+                amount=np.ones(n, np.float32), mcc=np.zeros(n, np.int32))
+    store.ingest(cols)
+    res = store.query(dict(uid=np.array([0], np.int32),
+                           ts=np.array([n], np.int32),
+                           amount=np.array([1.0], np.float32),
+                           mcc=np.array([0], np.int32)), mode="naive")
+    # only 8 retained + request row
+    assert float(res["c"][0]) == 9.0
+
+
+def test_feature_registry_versioning_and_lineage():
+    reg = FeatureRegistry()
+    v1 = FeatureView("fraud", SCHEMA, {
+        "s": w_sum(Col("amount"), range_window(600)),
+    })
+    reg.register(v1)
+    v2 = v1.evolve({"m": w_mean(Col("amount"), range_window(600))})
+    reg.register(v2)
+    assert reg.versions("fraud") == [1, 2]
+    assert set(reg.get("fraud").features) == {"s", "m"}  # latest
+    lin = reg.lineage("fraud", "s", version=2)
+    assert lin["columns"] == ["amount"]
+    assert lin["windows"][0]["size"] == 600
+    assert "OVER (PARTITION BY uid" in lin["sql"]
+    rec = reg.deploy("fraud_svc", "fraud")
+    assert rec["version"] == 2
+    assert reg.service("fraud_svc")["features"] == ["s", "m"]
+
+
+def test_render_sql_roundtrip_tokens():
+    e = w_sum(Col("amount") * (Col("amount") > 10.0), range_window(100))
+    sql = render_sql("f", e, SCHEMA)
+    for tok in ("sum", "amount", "RANGE BETWEEN 100 PRECEDING", "PARTITION BY uid"):
+        assert tok in sql, sql
+
+
+def test_signature_ids_range_and_determinism():
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.integers(0, 1000, 256), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 1000, 256), jnp.int32)
+    s1 = signature_ids([a, b], bits=20)
+    s2 = signature_ids([a, b], bits=20)
+    assert np.array_equal(s1, s2)
+    assert int(s1.min()) >= 0 and int(s1.max()) < 2**20
+    # order sensitivity (product x item != item x product)
+    s3 = signature_ids([b, a], bits=20)
+    assert not np.array_equal(s1, s3)
+
+
+def test_multi_hash_ids_distinct_probes():
+    sig = jnp.asarray([42], jnp.int32)
+    ids = multi_hash_ids(sig, 4, 1 << 16)
+    assert len(set(np.asarray(ids).ravel().tolist())) >= 3
+
+
+def test_count_min_sketch_overestimates_bounded():
+    rng = np.random.default_rng(6)
+    items = rng.zipf(1.5, 5000).astype(np.int32) % 1000
+    sk = cms_init(depth=4, width=2048)
+    sk = cms_update(sk, jnp.asarray(items))
+    uniq, counts = np.unique(items, return_counts=True)
+    est = np.asarray(cms_query(sk, jnp.asarray(uniq)))
+    assert (est >= counts - 1e-5).all()          # never underestimates
+    assert (est - counts).mean() < 30            # small average overestimate

@@ -1,0 +1,205 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.signature.ops import signature_embed
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+from repro.kernels.window_agg.ops import window_stats
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_SHAPES = [
+    # B, H, Hkv, S, D, causal, window
+    (2, 4, 2, 256, 64, True, None),
+    (1, 8, 8, 128, 128, True, 64),
+    (2, 4, 1, 192, 80, False, None),   # partial blocks + MQA + pad D
+    (1, 2, 2, 100, 32, True, 32),      # odd seq
+    (2, 16, 4, 128, 128, True, None),  # GQA 4:1
+    (1, 4, 4, 384, 64, True, 128),     # window == block
+]
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D,causal,window", FA_SHAPES)
+def test_flash_attention_matches_ref(B, H, Hkv, S, D, causal, window):
+    rng = np.random.default_rng(hash((B, H, S, D)) % 2**31)
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    out = attention(q, k, v, causal=causal, window=window,
+                    impl="pallas", interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), dtype)
+    out = attention(q, k, v, impl="pallas", interpret=True)
+    ref = attention_ref(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32),
+        atol=3e-2 if dtype == jnp.bfloat16 else 2e-5, rtol=3e-2,
+    )
+
+
+def test_flash_attention_blocks_sweep():
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    ref = attention_ref(q, k, v)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        out = attention(q, k, v, impl="pallas", interpret=True,
+                        block_q=bq, block_k=bk)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+WKV_SHAPES = [(2, 3, 64, 32), (1, 2, 100, 64), (2, 4, 128, 64), (1, 1, 16, 16)]
+
+
+@pytest.mark.parametrize("B,H,T,D", WKV_SHAPES)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_wkv6_matches_recurrence(B, H, T, D, impl):
+    rng = np.random.default_rng(hash((B, H, T, D)) % 2**31)
+    r = jnp.asarray(rng.normal(size=(B, H, T, D)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, T, D)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    lw = jnp.asarray(-np.exp(rng.normal(size=(B, H, T, D)) - 1.0), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, D)) * 0.3, jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, D, D)) * 0.1, jnp.float32)
+    y_ref, s_ref = wkv6_ref(r, k, v, lw, u, s0)
+    y, s = wkv6(r, k, v, lw, u, s0, impl=impl, interpret=True)
+    np.testing.assert_allclose(y, y_ref, atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(s, s_ref, atol=5e-4, rtol=5e-4)
+
+
+def test_wkv6_state_chaining():
+    """Running two halves with carried state == running the whole sequence."""
+    rng = np.random.default_rng(11)
+    B, H, T, D = 1, 2, 64, 32
+    r = jnp.asarray(rng.normal(size=(B, H, T, D)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, T, D)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    lw = jnp.asarray(-np.exp(rng.normal(size=(B, H, T, D)) - 1.0), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, D)) * 0.3, jnp.float32)
+    y_full, s_full = wkv6(r, k, v, lw, u, impl="xla")
+    h = T // 2
+    y1, s1 = wkv6(r[:, :, :h], k[:, :, :h], v[:, :, :h], lw[:, :, :h], u,
+                  impl="xla")
+    y2, s2 = wkv6(r[:, :, h:], k[:, :, h:], v[:, :, h:], lw[:, :, h:], u,
+                  s0=s1, impl="xla")
+    np.testing.assert_allclose(
+        jnp.concatenate([y1, y2], axis=2), y_full, atol=1e-4, rtol=1e-4
+    )
+    np.testing.assert_allclose(s2, s_full, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# signature embedding
+# ---------------------------------------------------------------------------
+
+SIG_SHAPES = [(512, 128, 64, 2), (1024, 256, 33, 4), (256, 64, 7, 1)]
+
+
+@pytest.mark.parametrize("V,D,N,k", SIG_SHAPES)
+def test_signature_embed_matches_ref(V, D, N, k):
+    rng = np.random.default_rng(hash((V, D, N, k)) % 2**31)
+    table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    sig = jnp.asarray(rng.integers(0, 2**20, N), jnp.int32)
+    w = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    a = signature_embed(table, sig, w, num_hashes=k, impl="xla")
+    b = signature_embed(table, sig, w, num_hashes=k, impl="pallas",
+                        interpret=True)
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_signature_embed_deterministic():
+    table = jnp.ones((64, 32), jnp.float32)
+    sig = jnp.asarray([5, 5, 5], jnp.int32)
+    w = jnp.asarray([0.5, 0.5], jnp.float32)
+    out = signature_embed(table, sig, w, num_hashes=2, impl="pallas",
+                          interpret=True)
+    assert np.allclose(out[0], out[1]) and np.allclose(out[1], out[2])
+
+
+# ---------------------------------------------------------------------------
+# window_agg
+# ---------------------------------------------------------------------------
+
+def _make_store_state(rng, K, N, capacity=128, num_buckets=64, bucket=64):
+    from repro.core import (
+        Col, FeatureView, TableSchema, range_window, w_mean, w_sum,
+    )
+    from repro.core.online import OnlineFeatureStore
+
+    schema = TableSchema(name="tx", key="uid", ts="ts", numeric=("amount",))
+    view = FeatureView("v", schema, {
+        "s": w_sum(Col("amount"), range_window(600, bucket=bucket)),
+        "m": w_mean(Col("amount"), range_window(600, bucket=bucket)),
+    })
+    store = OnlineFeatureStore(view, num_keys=K, capacity=capacity,
+                               num_buckets=num_buckets, bucket_size=bucket)
+    key = np.sort(rng.integers(0, K, N)).astype(np.int32)
+    ts = rng.integers(0, 4000, N).astype(np.int32)
+    order = np.lexsort((ts, key))
+    cols = dict(uid=key[order], ts=ts[order],
+                amount=rng.gamma(2.0, 50.0, N).astype(np.float32))
+    store.ingest(cols)
+    return store
+
+
+@pytest.mark.parametrize("Q,windows", [(16, (600,)), (37, (600, 100)),
+                                       (5, (64, 600, 1200))])
+def test_window_stats_kernel_matches_ref(Q, windows):
+    rng = np.random.default_rng(hash((Q, windows)) % 2**31)
+    store = _make_store_state(rng, K=9, N=800)
+    qk = jnp.asarray(rng.integers(0, 9, Q), jnp.int32)
+    qt = jnp.asarray(rng.integers(3000, 4200, Q), jnp.int32)
+    qv = rng.gamma(2.0, 50.0, Q).astype(np.float32)
+    qlanes = store._lanes(dict(uid=qk, ts=qt, amount=qv))
+    args = (store.state.ring.ts, store.state.ring.vals,
+            store.state.bagg.stats, store.state.bagg.bucket, qk, qt, qlanes)
+    ref = window_stats(*args, windows=windows, bucket_size=64, impl="xla")
+    pal = window_stats(*args, windows=windows, bucket_size=64,
+                       impl="pallas", interpret=True)
+    np.testing.assert_allclose(ref, pal, atol=1e-3, rtol=1e-5)
+
+
+def test_window_stats_kernel_matches_online_store():
+    rng = np.random.default_rng(99)
+    store = _make_store_state(rng, K=9, N=800)
+    Q = 25
+    qk = jnp.asarray(rng.integers(0, 9, Q), jnp.int32)
+    qt = jnp.asarray(rng.integers(3000, 4200, Q), jnp.int32)
+    qv = rng.gamma(2.0, 50.0, Q).astype(np.float32)
+    qcols = dict(uid=qk, ts=qt, amount=qv)
+    qlanes = store._lanes(qcols)
+    stats = window_stats(
+        store.state.ring.ts, store.state.ring.vals, store.state.bagg.stats,
+        store.state.bagg.bucket, qk, qt, qlanes,
+        windows=(600,), bucket_size=64, impl="pallas", interpret=True,
+    )
+    res = store.query(qcols, mode="preagg")
+    np.testing.assert_allclose(
+        stats[:, 0, 0, 0], res["s"], rtol=1e-4, atol=1e-2
+    )
+    np.testing.assert_allclose(
+        stats[:, 0, 0, 0] / stats[:, 0, 0, 1], res["m"], rtol=1e-4, atol=1e-2
+    )

@@ -1,0 +1,139 @@
+"""System-level integration tests: data import, serving stack, checkpoint
+restart, elastic supervisor, wide-time-span ingest."""
+
+import io
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt.manifest import CheckpointManager
+from repro.core import (
+    Col, FeatureRegistry, FeatureView, OnlineFeatureStore, range_window,
+    w_count, w_sum,
+)
+from repro.core.storage import TableSchema
+from repro.data import insert_rows, load_csv, load_table
+from repro.data.synthetic import FRAUD_SCHEMA, fraud_stream, lm_stream
+from repro.runtime.coordinator import (
+    ElasticPlanner, MeshTemplate, TrainSupervisor,
+)
+from repro.serve.service import BatchScheduler, FeatureService
+
+SCHEMA = TableSchema(name="t", key="k", ts="ts", numeric=("x",),
+                     categorical=("c",))
+
+
+def test_csv_import_round_trip():
+    csv = io.StringIO("k,ts,x,c\n0,1,1.5,3\n1,2,2.5,4\n0,3,3.5,5\n")
+    cols = load_csv(csv, SCHEMA)
+    assert cols["k"].dtype == np.int32
+    assert cols["x"].dtype == np.float32
+    np.testing.assert_allclose(cols["x"], [1.5, 2.5, 3.5])
+    more = insert_rows([{"k": 2, "ts": 4, "x": 9.0, "c": 1}], SCHEMA, into=cols)
+    assert len(more["k"]) == 4
+
+
+def test_load_table_dispatch_errors():
+    with pytest.raises(NotImplementedError):
+        load_table("x", SCHEMA, format="hive")
+    with pytest.raises(ValueError):
+        load_table("x", SCHEMA, format="bogus")
+
+
+def test_lm_stream_shapes():
+    it = lm_stream(np.random.default_rng(0), batch=2, seq_len=16, vocab=64)
+    b = next(it)
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+    assert int(b["tokens"].max()) < 64
+
+
+def test_wide_span_ingest_matches_naive():
+    """Backfills spanning more buckets than the ring are split internally;
+    preagg query must still equal the naive ring-scan."""
+    rng = np.random.default_rng(0)
+    cols, _ = fraud_stream(rng, 1200, num_cards=16, t_max=300_000)  # wide span
+    view = FeatureView(
+        name="w", schema=FRAUD_SCHEMA,
+        features={"s": w_sum(Col("amount"), range_window(3600, bucket=64)),
+                  "c": w_count(Col("amount"), range_window(3600, bucket=64))},
+    )
+    store = OnlineFeatureStore(view, num_keys=16, capacity=256,
+                               num_buckets=64, bucket_size=64)
+    order = np.lexsort((cols["ts"], cols["card"]))
+    store.ingest({c: v[order] for c, v in cols.items()})
+    req = {c: v[-16:].copy() for c, v in cols.items()}
+    req["ts"] = np.full(16, 300_001, np.int32)
+    req["card"] = np.arange(16, dtype=np.int32)
+    a = store.query(req, mode="naive")
+    b = store.query(req, mode="preagg")
+    for f in view.features:
+        np.testing.assert_allclose(np.asarray(a[f]), np.asarray(b[f]),
+                                   rtol=1e-4, atol=1e-2)
+
+
+def test_batch_scheduler_buckets():
+    s = BatchScheduler(buckets=(1, 4, 16))
+    for i in range(6):
+        s.submit({"k": np.int32(i), "ts": np.int32(i), "x": np.float32(i),
+                  "c": np.int32(0)})
+    b = s.next_batch()
+    assert len(b["k"]) == 16 and b["__valid__"].sum() == 6  # padded to bucket
+    assert s.next_batch() is None
+
+
+def test_feature_service_registry_lineage():
+    rng = np.random.default_rng(1)
+    cols, _ = fraud_stream(rng, 400, num_cards=8, t_max=20_000)
+    view = FeatureView(
+        name="svc_view", schema=FRAUD_SCHEMA,
+        features={"s1h": w_sum(Col("amount"), range_window(3600, bucket=64))},
+    )
+    reg = FeatureRegistry()
+    reg.register(view)
+    store = OnlineFeatureStore(view, num_keys=8, num_buckets=64,
+                               bucket_size=64)
+    order = np.lexsort((cols["ts"], cols["card"]))
+    store.ingest({c: v[order] for c, v in cols.items()})
+    svc = FeatureService("svc", view, store, reg)
+    out = svc.request({c: v[:4] for c, v in cols.items()}, ingest=False)
+    assert np.asarray(out["s1h"]).shape == (4,)
+    assert reg.service("svc")["version"] == 1
+    lin = reg.lineage("svc_view", "s1h")
+    assert lin["columns"] == ["amount"] and "OVER" in lin["sql"]
+
+
+def test_checkpoint_restart_equivalence(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": jnp.zeros((4,))}
+    for step in (1, 2, 3):
+        mgr.save(step, jax.tree.map(lambda x: x + step, tree), blocking=True)
+    assert mgr.latest_step() == 3
+    restored = mgr.restore(3, like=tree)
+    np.testing.assert_allclose(restored["a"], np.arange(6.0).reshape(2, 3) + 3)
+    # keep=2 garbage-collected step 1
+    assert not (tmp_path / "step_000000001").exists()
+
+
+def test_supervisor_failure_restart(tmp_path):
+    """Host failure mid-training -> restore from checkpoint -> rescale."""
+    mgr = CheckpointManager(str(tmp_path))
+    planner = ElasticPlanner(MeshTemplate(data=8, model=4))
+    fail_at = {"step": 13, "done": False}
+
+    def step_fn(state, step, plan):
+        if step == fail_at["step"] and not fail_at["done"]:
+            fail_at["done"] = True
+            raise TrainSupervisor.HostFailure("host3")
+        return {"w": state["w"] + 1.0}
+
+    sup = TrainSupervisor(planner, mgr, lambda: {"w": jnp.zeros(())},
+                          step_fn, ckpt_every=5)
+    state, info = sup.run(target_steps=20, total_hosts=8)
+    assert info["restarts"] == 1
+    assert info["final_step"] == 20
+    assert float(state["w"]) == 20.0  # resumed from step-10 ckpt, re-ran 10..20
+    kinds = [e["kind"] for e in info["events"]]
+    assert "failure" in kinds and "rescale" in kinds
+    assert info["plan"].new_data == 4  # shrunk to the power-of-two <= 7 hosts
