@@ -1,0 +1,156 @@
+"""Multi-table feature plane: LAST JOIN + WINDOW UNION cost (§1 / §2).
+
+The paper's first challenge is feature computation over "large-scale,
+complex raw data (e.g., the 2018 PHM dataset contains 17 tables)"; OpenMLDB
+answers it with point-in-time LAST JOIN and WINDOW UNION.  This bench
+measures what the multi-table plane costs on both engines:
+
+* offline — batch throughput (rows/s) of a 4-table view (2 LAST JOINs +
+  2 WINDOW UNION aggs + plain windows) vs the same view with the
+  multi-table features removed, isolating the join/union overhead;
+* online  — request latency of the same view answered from device state
+  (per-table rings: joins resolve by masked gather, unions by combining
+  masked ring windows) on the naive and preagg paths.
+
+Offline↔online equality is asserted on a replay prefix before timing.
+
+Aggregations are restricted to the prefix-sum family (sum/count/mean/std):
+MIN/MAX windows route through the offline sparse-table primitive whose XLA
+compile is minutes-slow on CPU hosts (pre-existing, see windows._SparseTable)
+and would swamp the join/union signal this bench isolates.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import (
+    Col, FeatureView, OfflineEngine, OnlineFeatureStore,
+    last_join, range_window, w_count, w_mean, w_std, w_sum,
+)
+from repro.data.synthetic import MULTITABLE_DB, multitable_stream
+
+HIST_ROWS = 8_000
+NUM_ACCOUNTS = 256
+NUM_MERCHANTS = 32
+T_MAX = 100_000
+Q = 64  # request batch
+
+
+def join_view() -> FeatureView:
+    amt = Col("amount")
+    w1h = range_window(3600, bucket=64)
+    return FeatureView(
+        name="join_bench",
+        features={
+            "credit_limit": last_join(
+                Col("credit_limit"), "accounts", on="account", default=1000.0
+            ),
+            "merchant_reports": last_join(
+                Col("fraud_reports"), "merchants", on="merchant"
+            ),
+            "outflow_sum_1h": w_sum(amt, w1h, union=("wires",)),
+            "outflow_cnt_1h": w_count(amt, w1h, union=("wires",)),
+            "amt_mean_1h": w_mean(amt, w1h),
+            "amt_std_1h": w_std(amt, w1h),
+        },
+        database=MULTITABLE_DB,
+    )
+
+
+def single_table_view() -> FeatureView:
+    amt = Col("amount")
+    w1h = range_window(3600, bucket=64)
+    return FeatureView(
+        name="join_bench_baseline",
+        features={
+            "amt_sum_1h": w_sum(amt, w1h),
+            "amt_cnt_1h": w_count(amt, w1h),
+            "amt_mean_1h": w_mean(amt, w1h),
+            "amt_std_1h": w_std(amt, w1h),
+        },
+        database=MULTITABLE_DB,
+    )
+
+
+def run() -> None:
+    rng = np.random.default_rng(7)
+    tables = multitable_stream(
+        rng, HIST_ROWS, num_accounts=NUM_ACCOUNTS,
+        num_merchants=NUM_MERCHANTS, t_max=T_MAX,
+    )
+    tx = tables["transactions"]
+    secondary = {t: c for t, c in tables.items() if t != "transactions"}
+    view = join_view()
+    base = single_table_view()
+    engine = OfflineEngine()
+
+    # -- offline throughput ---------------------------------------------------
+    engine.compute(view, tx, secondary)  # warm/compile
+    r = timeit(lambda: engine.compute(view, tx, secondary))
+    emit("join", "offline_rows_per_s", HIST_ROWS / r["median_s"], "rows/s",
+         "4-table view: 2 LAST JOIN + 2 WINDOW UNION")
+    engine.compute(base, tx, secondary)
+    rb = timeit(lambda: engine.compute(base, tx, secondary))
+    emit("join", "offline_rows_per_s_single_table", HIST_ROWS / rb["median_s"],
+         "rows/s", "same windows; no joins/unions")
+    emit("join", "offline_multitable_overhead",
+         r["median_s"] / rb["median_s"], "x")
+
+    # -- online: preload device state, equality check, latency ----------------
+    sec_nk = {"merchants": NUM_MERCHANTS}
+    stores = {}
+    for mode in ("naive", "preagg"):
+        s = OnlineFeatureStore(
+            view, num_keys=NUM_ACCOUNTS, capacity=256,
+            secondary_num_keys=sec_nk,
+        )
+        for t, cols in secondary.items():
+            sch = MULTITABLE_DB.table(t)
+            order = np.lexsort((cols[sch.ts], cols[sch.key]))
+            s.ingest_table(t, {c: v[order] for c, v in cols.items()})
+        order = np.lexsort((tx["ts"], tx["account"]))
+        s.ingest({c: v[order] for c, v in tx.items()})
+        stores[mode] = s
+
+    # equality vs offline on fresh request rows (later ts than the history;
+    # unique accounts: a batched query answers every request against state
+    # excluding the whole batch — verify_view's unique-key-round semantics)
+    req = {
+        "account": rng.choice(NUM_ACCOUNTS, Q, replace=False).astype(np.int32),
+        "ts": np.sort(rng.integers(T_MAX, T_MAX + 3600, Q)).astype(np.int32),
+        "amount": rng.gamma(1.5, 60.0, Q).astype(np.float32),
+        "merchant": rng.integers(0, NUM_MERCHANTS, Q).astype(np.int32),
+    }
+    off = engine.compute(
+        view,
+        {c: np.concatenate([tx[c], req[c]]) for c in tx},
+        secondary,
+    )
+    for mode, s in stores.items():
+        on = s.query(req, mode=mode)
+        for f in view.features:
+            a = np.asarray(off[f])[-Q:]
+            b = np.asarray(on[f])
+            # scale-aware tolerance (same contract as consistency.verify_view:
+            # offline prefix-sum differences vs online direct masked sums;
+            # STD sqrt-amplifies near zero — see windows._segment_prefix_sum)
+            atol = 2e-3 * max(1.0, float(np.percentile(np.abs(a), 99)))
+            assert np.allclose(a, b, rtol=2e-4, atol=atol), (
+                mode, f, np.abs(a - b).max()
+            )
+
+    for mode, s in stores.items():
+        s.query(req, mode=mode)  # warm
+        t = timeit(lambda: s.query(req, mode=mode))
+        emit("join", f"online_{mode}_batch_ms", 1e3 * t["median_s"], "ms",
+             f"Q={Q} multi-table requests")
+        emit("join", f"online_{mode}_qps", Q / t["median_s"], "req/s")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+
+    header()
+    run()

@@ -20,6 +20,7 @@ BENCHES = [
     "deploy",            # §3.2 one-click deployment pipeline
     "consistency",       # §2 offline/online verification
     "signature",         # §1 trillion-dim signatures
+    "join",              # §1 multi-table plane: LAST JOIN + WINDOW UNION
 ]
 
 

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification entrypoint: run the repo's test suite exactly as the
+# roadmap specifies.  Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

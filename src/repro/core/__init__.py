@@ -6,10 +6,13 @@ from repro.core.expr import (  # noqa: F401
     Col,
     Expr,
     Hash,
+    LastJoin,
     Lit,
     Signature,
+    TableCol,
     WindowAgg,
     WindowSpec,
+    last_join,
     range_window,
     rows_window,
     w_count,
@@ -23,7 +26,7 @@ from repro.core.expr import (  # noqa: F401
     w_sum,
     w_topn_freq,
 )
-from repro.core.storage import RowCodec, TableSchema  # noqa: F401
+from repro.core.storage import Database, RowCodec, TableSchema  # noqa: F401
 from repro.core.view import FeatureRegistry, FeatureView, render_sql  # noqa: F401
 from repro.core.engine import OfflineEngine  # noqa: F401
 from repro.core.online import OnlineFeatureStore  # noqa: F401

@@ -84,11 +84,30 @@ def verify_view(
     rtol: float = 2e-4,
     atol_scale: float = 1e-3,
     engine: Optional[OfflineEngine] = None,
+    secondary: Optional[Dict[str, Dict[str, np.ndarray]]] = None,
+    secondary_num_keys: Optional[Dict[str, int]] = None,
 ) -> ConsistencyReport:
-    """Run the full offline-vs-online verification for one view."""
+    """Run the full offline-vs-online verification for one view.
+
+    Multi-table views pass their secondary tables via ``secondary``
+    ({table: {col: (M,) array}}).  The replay then interleaves ingest
+    across tables by timestamp: before each primary round, every
+    secondary row with ``ts <= max(round ts)`` that has not been ingested
+    yet is pushed into its table's ring — so LAST JOIN lookups and union
+    windows are answered from exactly the secondary state a live service
+    would hold at that point of the stream (early arrivals are invisible
+    anyway: every online path masks ``ts <= request ts``).
+
+    Capacity contract: a round's worth of early-ingested secondary rows
+    must not wrap a key's ring (``capacity`` rows per key), or they could
+    evict rows an earlier-ts request in the same round still needs — size
+    ``capacity`` to the per-key secondary row count, as with the primary.
+    """
     engine = engine or OfflineEngine()
+    secondary = secondary or {}
     offline = {
-        k: np.asarray(v) for k, v in engine.compute(view, columns).items()
+        k: np.asarray(v)
+        for k, v in engine.compute(view, columns, secondary).items()
     }
 
     store = OnlineFeatureStore(
@@ -97,14 +116,41 @@ def verify_view(
         capacity=capacity,
         num_buckets=num_buckets,
         bucket_size=bucket_size,
+        secondary_num_keys=secondary_num_keys,
     )
     schema = view.schema
     key = np.asarray(columns[schema.key])
     ts = np.asarray(columns[schema.ts])
     n = len(key)
 
+    # per-table (key, ts)-stable-sorted-by-ts event cursors
+    sec_events: Dict[str, Dict] = {}
+    for t in store._sec_names:
+        tsch = view.database.table(t)
+        tcols = {c: np.asarray(v) for c, v in secondary[t].items()}
+        order = np.argsort(tcols[tsch.ts], kind="stable")
+        sec_events[t] = {
+            "cols": {c: v[order] for c, v in tcols.items()},
+            "ts": tcols[tsch.ts][order],
+            "keycol": tsch.key,
+            "tscol": tsch.ts,
+            "pos": 0,
+        }
+
+    def ingest_secondary_upto(tmax: int) -> None:
+        for t, ev in sec_events.items():
+            hi = int(np.searchsorted(ev["ts"], tmax, side="right"))
+            if hi <= ev["pos"]:
+                continue
+            sl = slice(ev["pos"], hi)
+            ev["pos"] = hi
+            batch = {c: v[sl] for c, v in ev["cols"].items()}
+            sort = np.lexsort((batch[ev["tscol"]], batch[ev["keycol"]]))
+            store.ingest_table(t, {c: v[sort] for c, v in batch.items()})
+
     online = {f: np.zeros(n, np.float32) for f in view.features}
     for idx in replay_rounds(key, ts):
+        ingest_secondary_upto(int(ts[idx].max()))
         batch = {c: np.asarray(columns[c])[idx] for c in columns}
         res = store.query(batch, mode=mode)
         for f, v in res.items():

@@ -28,15 +28,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.expr import collect_window_aggs, eval_rowlevel
+from repro.core.expr import (
+    collect_last_joins,
+    collect_tables,
+    collect_window_aggs,
+    eval_rowlevel,
+)
+from repro.core.join import last_join_gather, merge_streams
 from repro.core.view import FeatureView
 from repro.core.windows import sort_by_key_ts, windowed_aggregate
 
 __all__ = ["OfflineEngine"]
 
+Tables = Dict[str, Dict[str, jnp.ndarray]]
+
 
 class OfflineEngine:
-    """Compiles feature views to batch executables over historical tables."""
+    """Compiles feature views to batch executables over historical tables.
+
+    Multi-table views compile to the same single fused jitted program:
+    secondary tables are (key, ts)-sorted inside the trace, LAST JOINs
+    resolve with one vectorized point-in-time binary search + gather per
+    (table, join expr), and WINDOW UNION aggregations run the segmented
+    window machinery over the timestamp-merged streams.
+    """
 
     def __init__(self) -> None:
         self._cache: Dict[Tuple[str, int], jax.stages.Wrapped] = {}
@@ -49,10 +64,23 @@ class OfflineEngine:
             return self._cache[key]
 
         feature_names = list(view.features)
-        waggs = collect_window_aggs(list(view.features.values()))
+        exprs = list(view.features.values())
+        waggs = collect_window_aggs(exprs)
+        ljoins = collect_last_joins(exprs)
+        db = view.database
         schema = view.schema
+        needed = collect_tables(exprs)
 
-        def run(columns: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        def run(
+            columns: Dict[str, jnp.ndarray], secondary: Optional[Tables] = None
+        ) -> Dict[str, jnp.ndarray]:
+            secondary = secondary or {}
+            for t in needed:
+                if t not in secondary:
+                    raise KeyError(
+                        f"view {view.name!r} references table {t!r}; pass it "
+                        "via secondary={...}"
+                    )
             key_c = jnp.asarray(columns[schema.key], jnp.int32)
             ts_c = jnp.asarray(columns[schema.ts], jnp.int32)
             others = [c for c in columns if c not in (schema.key, schema.ts)]
@@ -64,25 +92,102 @@ class OfflineEngine:
             sorted_cols = {schema.key: skey, schema.ts: sts}
             for name, arr in zip(others, sorted_all[2:-1]):
                 sorted_cols[name] = arr
+            n_p = skey.shape[0]
 
-            requests = {}
-            arg_cache: Dict[Tuple, jnp.ndarray] = {}
+            # one (key, ts) sort per referenced secondary table, shared by
+            # every join/union touching it
+            sec_sorted: Dict[str, Dict[str, jnp.ndarray]] = {}
+            for t in needed:
+                tsch = db.table(t)
+                tcols = secondary[t]
+                tkey = jnp.asarray(tcols[tsch.key], jnp.int32)
+                tts = jnp.asarray(tcols[tsch.ts], jnp.int32)
+                tothers = [
+                    c for c in tcols if c not in (tsch.key, tsch.ts)
+                ]
+                tsorted = sort_by_key_ts(
+                    tkey, tts, *[jnp.asarray(tcols[c]) for c in tothers]
+                )
+                cols_t = {tsch.key: tsorted[0], tsch.ts: tsorted[1]}
+                for name, arr in zip(tothers, tsorted[2:-1]):
+                    cols_t[name] = arr
+                sec_sorted[t] = cols_t
+
+            pre_vals: Dict[Tuple, jnp.ndarray] = {}
+
+            # -- LAST JOINs: point-in-time searchsorted gather --------------
+            for lk, lj in ljoins.items():
+                tsch = db.table(lj.table)
+                cols_t = sec_sorted[lj.table]
+                argv = eval_rowlevel(lj.arg, cols_t, {}).astype(jnp.float32)
+                pre_vals[lk] = last_join_gather(
+                    cols_t[tsch.key],
+                    cols_t[tsch.ts],
+                    argv,
+                    jnp.asarray(sorted_cols[lj.on], jnp.int32),
+                    sts,
+                    default=lj.default,
+                )
+
+            # -- window aggregations, grouped by union signature ------------
+            groups: Dict[Tuple[str, ...], Dict] = {}
             for wk, wa in waggs.items():
+                groups.setdefault(wa.union, {})[wk] = wa
+
+            arg_cache: Dict[Tuple, jnp.ndarray] = {}
+
+            def primary_arg(wa) -> jnp.ndarray:
                 ak = wa.arg.key
                 if ak not in arg_cache:
                     arg_cache[ak] = eval_rowlevel(
                         wa.arg, sorted_cols, {}
                     ).astype(jnp.float32)
-                requests[wk] = (wa.agg, arg_cache[ak], wa.window, wa.n)
+                return arg_cache[ak]
 
-            wagg_values = windowed_aggregate(skey, sts, requests)
+            for union, group in groups.items():
+                if not union:
+                    requests = {
+                        wk: (wa.agg, primary_arg(wa), wa.window, wa.n)
+                        for wk, wa in group.items()
+                    }
+                    pre_vals.update(windowed_aggregate(skey, sts, requests))
+                    continue
+                # WINDOW UNION: merge the union streams (secondaries first,
+                # so ts-tied union rows land inside the primary row's
+                # window), aggregate over the merged stream, read back at
+                # primary positions.
+                u_schemas = [db.table(t) for t in union]
+                perm_m, key_m, ts_m, rank_m = merge_streams(
+                    [sec_sorted[t][s.key] for t, s in zip(union, u_schemas)]
+                    + [skey],
+                    [sec_sorted[t][s.ts] for t, s in zip(union, u_schemas)]
+                    + [sts],
+                )
+                primary_rank = len(union)
+                prim_pos = jnp.nonzero(
+                    rank_m == primary_rank, size=n_p
+                )[0]
+                requests = {}
+                for wk, wa in group.items():
+                    args = [
+                        eval_rowlevel(wa.arg, sec_sorted[t], {}).astype(
+                            jnp.float32
+                        )
+                        for t in union
+                    ] + [primary_arg(wa)]
+                    arg_m = jnp.concatenate(args)[perm_m]
+                    requests[wk] = (wa.agg, arg_m, wa.window, wa.n)
+                merged_vals = windowed_aggregate(key_m, ts_m, requests)
+                for wk, v in merged_vals.items():
+                    pre_vals[wk] = v[prim_pos]
+
             out = {}
             inv = jnp.zeros_like(perm).at[perm].set(
                 jnp.arange(perm.shape[0], dtype=perm.dtype)
             )
             for fname in feature_names:
                 v = eval_rowlevel(
-                    view.features[fname], sorted_cols, wagg_values
+                    view.features[fname], sorted_cols, pre_vals
                 )
                 out[fname] = v[inv]  # back to input row order
             return out
@@ -93,10 +198,17 @@ class OfflineEngine:
         return fn
 
     def compute(
-        self, view: FeatureView, columns: Dict[str, jnp.ndarray]
+        self,
+        view: FeatureView,
+        columns: Dict[str, jnp.ndarray],
+        secondary: Optional[Tables] = None,
     ) -> Dict[str, jnp.ndarray]:
-        """Offline batch feature computation (row order preserved)."""
-        return self.compile(view)(columns)
+        """Offline batch feature computation (row order preserved).
+
+        ``secondary`` maps secondary table name -> {col: (M,) array} for
+        multi-table views; single-table views omit it.
+        """
+        return self.compile(view)(columns, secondary or {})
 
     def export_training_set(
         self,
@@ -104,12 +216,13 @@ class OfflineEngine:
         columns: Dict[str, jnp.ndarray],
         label: Optional[str] = None,
         path: Optional[str] = None,
+        secondary: Optional[Tables] = None,
     ) -> Dict[str, np.ndarray]:
         """Paper step 3: compute features offline and export samples.
 
         Returns (and optionally .npz-writes) the feature matrix + label.
         """
-        feats = self.compute(view, columns)
+        feats = self.compute(view, columns, secondary)
         out = {k: np.asarray(v) for k, v in feats.items()}
         if label is not None:
             out["__label__"] = np.asarray(columns[label])

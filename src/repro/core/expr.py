@@ -16,13 +16,25 @@ Two strata:
 Window aggregations may themselves feed further row-level expressions
 (e.g. ``w_sum(amount, 1h) / w_count(amount, 1h)``), mirroring how FeatInsight
 users chain SQL blocks.
+
+Multi-table views (the paper's "large-scale, complex raw data" — e.g. the
+2018 PHM dataset's 17 tables) add a third stratum, mirroring OpenMLDB's two
+cross-table constructs:
+
+* ``LastJoin`` — point-in-time LAST JOIN: for each primary row, the most
+  recent secondary-table row with a matching key and ``ts <= row ts``;
+  the joined row feeds a row-level sub-expression (``TableCol`` /
+  ``Col`` references resolve against the secondary table);
+* ``WindowAgg(..., union=("table", ...))`` — WINDOW UNION: the per-key
+  RANGE window is evaluated over the primary stream merged by timestamp
+  with the named secondary streams (OpenMLDB's ``WINDOW ... UNION``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Callable, Dict, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -31,12 +43,16 @@ __all__ = [
     "WindowSpec",
     "Expr",
     "Col",
+    "TableCol",
     "Lit",
     "BinOp",
     "UnOp",
     "Hash",
     "Signature",
     "WindowAgg",
+    "LastJoin",
+    "last_join",
+    "UNION_AGGS",
     "rows_window",
     "range_window",
     "w_sum",
@@ -50,7 +66,9 @@ __all__ = [
     "w_distinct_approx",
     "w_topn_freq",
     "collect_window_aggs",
+    "collect_last_joins",
     "collect_columns",
+    "collect_tables",
 ]
 
 
@@ -179,13 +197,37 @@ def _wrap(v: Any) -> "Expr":
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Col(Expr):
-    """Reference to a source-table column (lineage leaf)."""
+    """Reference to a source-table column (lineage leaf).
+
+    Resolves against whichever table the enclosing context evaluates over:
+    the primary table for ordinary features, the joined table inside a
+    :class:`LastJoin` argument, and *every* unioned table for a
+    ``WindowAgg(..., union=...)`` argument (the name must exist in all of
+    them — OpenMLDB's WINDOW UNION schema-compatibility rule).
+    """
 
     name: str
 
     @property
     def key(self) -> Tuple:
         return ("col", self.name)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TableCol(Expr):
+    """Explicitly table-qualified column reference (lineage leaf).
+
+    Only meaningful inside a :class:`LastJoin` argument, where it must name
+    the joined table; it resolves to that table's column and records the
+    qualified source in lineage.
+    """
+
+    table: str
+    name: str
+
+    @property
+    def key(self) -> Tuple:
+        return ("tcol", self.table, self.name)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -284,14 +326,51 @@ class Signature(Expr):
         return ("sig", self.bits, self.salt, tuple(a.key for a in self.args))
 
 
+# Aggregations whose union-window composition is implemented by both
+# engines.  FIRST needs a cross-stream oldest-row tie-break and TOPN_FREQ a
+# cross-stream merged tail — neither is supported over unions yet.
+UNION_AGGS = (
+    Agg.SUM, Agg.COUNT, Agg.MEAN, Agg.MIN, Agg.MAX, Agg.STD,
+    Agg.DISTINCT_APPROX, Agg.LAST,
+)
+
+
+def _contains_node(e: "Expr", types: tuple) -> bool:
+    if isinstance(e, types):
+        return True
+    return any(_contains_node(c, types) for c in e.children())
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class WindowAgg(Expr):
-    """Per-key window aggregation of a row-level expression."""
+    """Per-key window aggregation of a row-level expression.
+
+    ``union`` names secondary tables whose streams are merged (by timestamp)
+    into the primary stream before windowing — OpenMLDB WINDOW UNION.  Union
+    windows must be RANGE windows (a merged ROWS ranking is not offered by
+    the online store) and ``agg`` must be in :data:`UNION_AGGS`.
+    """
 
     agg: Agg
     arg: Expr
     window: WindowSpec
     n: int = 1  # for TOPN_FREQ: which rank (0-based) to return
+    union: Tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "union", tuple(self.union))
+        if self.union:
+            if self.window.mode != "range":
+                raise ValueError("WINDOW UNION requires a RANGE window")
+            if self.agg not in UNION_AGGS:
+                raise ValueError(
+                    f"{self.agg.value} is not supported over WINDOW UNION"
+                )
+        if _contains_node(self.arg, (LastJoin,)):
+            raise ValueError(
+                "window-aggregation arguments may not contain LAST JOINs "
+                "(join the value into the view first, window it separately)"
+            )
 
     def children(self) -> Tuple[Expr, ...]:
         return (self.arg,)
@@ -304,47 +383,98 @@ class WindowAgg(Expr):
             self.window.mode,
             self.window.size,
             self.n,
+            self.union,
             self.arg.key,
         )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LastJoin(Expr):
+    """Point-in-time LAST JOIN: evaluate ``arg`` on the most recent row of
+    ``table`` whose key equals the primary row's ``on`` column and whose
+    timestamp is <= the primary row's timestamp (OpenMLDB LAST JOIN with the
+    ``ORDER BY ts`` + ``ts <= request ts`` point-in-time condition).
+
+    ``default`` is returned when no secondary row matches.  ``arg`` is a
+    row-level expression over the *secondary* table's columns.
+    """
+
+    arg: Expr
+    table: str
+    on: str
+    default: float = 0.0
+
+    def __post_init__(self) -> None:
+        if _contains_node(self.arg, (WindowAgg, LastJoin)):
+            raise ValueError(
+                "LAST JOIN arguments must be row-level expressions over the "
+                "joined table (no nested windows or joins)"
+            )
+
+        def check_tcols(e: Expr) -> None:
+            if isinstance(e, TableCol) and e.table != self.table:
+                raise ValueError(
+                    f"TableCol({e.table!r}, {e.name!r}) inside a LAST JOIN of "
+                    f"table {self.table!r}: join arguments evaluate over the "
+                    "joined table only"
+                )
+            for c in e.children():
+                check_tcols(c)
+
+        check_tcols(self.arg)
+
+    def children(self) -> Tuple[Expr, ...]:
+        return (self.arg,)
+
+    @property
+    def key(self) -> Tuple:
+        return ("ljoin", self.table, self.on, self.default, self.arg.key)
+
+
+def last_join(arg: Expr, table: str, on: str, default: float = 0.0) -> LastJoin:
+    """DSL constructor: ``last_join(Col("credit_limit"), "accounts", on="account")``."""
+    return LastJoin(_wrap(arg), table, on, float(default))
 
 
 # -- convenience constructors (the user-facing feature DSL) -------------------
 
 
-def w_sum(arg: Expr, window: WindowSpec) -> WindowAgg:
-    return WindowAgg(Agg.SUM, arg, window)
+def w_sum(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg:
+    return WindowAgg(Agg.SUM, arg, window, union=tuple(union))
 
 
-def w_count(arg: Expr, window: WindowSpec) -> WindowAgg:
-    return WindowAgg(Agg.COUNT, arg, window)
+def w_count(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg:
+    return WindowAgg(Agg.COUNT, arg, window, union=tuple(union))
 
 
-def w_mean(arg: Expr, window: WindowSpec) -> WindowAgg:
-    return WindowAgg(Agg.MEAN, arg, window)
+def w_mean(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg:
+    return WindowAgg(Agg.MEAN, arg, window, union=tuple(union))
 
 
-def w_min(arg: Expr, window: WindowSpec) -> WindowAgg:
-    return WindowAgg(Agg.MIN, arg, window)
+def w_min(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg:
+    return WindowAgg(Agg.MIN, arg, window, union=tuple(union))
 
 
-def w_max(arg: Expr, window: WindowSpec) -> WindowAgg:
-    return WindowAgg(Agg.MAX, arg, window)
+def w_max(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg:
+    return WindowAgg(Agg.MAX, arg, window, union=tuple(union))
 
 
-def w_std(arg: Expr, window: WindowSpec) -> WindowAgg:
-    return WindowAgg(Agg.STD, arg, window)
+def w_std(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg:
+    return WindowAgg(Agg.STD, arg, window, union=tuple(union))
 
 
 def w_first(arg: Expr, window: WindowSpec) -> WindowAgg:
     return WindowAgg(Agg.FIRST, arg, window)
 
 
-def w_last(arg: Expr, window: WindowSpec) -> WindowAgg:
-    return WindowAgg(Agg.LAST, arg, window)
+def w_last(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg:
+    return WindowAgg(Agg.LAST, arg, window, union=tuple(union))
 
 
-def w_distinct_approx(arg: Expr, window: WindowSpec) -> WindowAgg:
-    return WindowAgg(Agg.DISTINCT_APPROX, arg, window)
+def w_distinct_approx(
+    arg: Expr, window: WindowSpec, union: Sequence[str] = ()
+) -> WindowAgg:
+    return WindowAgg(Agg.DISTINCT_APPROX, arg, window, union=tuple(union))
 
 
 def w_topn_freq(arg: Expr, window: WindowSpec, n: int = 0) -> WindowAgg:
@@ -375,19 +505,71 @@ def collect_window_aggs(exprs: Sequence[Expr]) -> Dict[Tuple, WindowAgg]:
     return out
 
 
-def collect_columns(exprs: Sequence[Expr]) -> Tuple[str, ...]:
-    """All source columns referenced (lineage: feature -> raw columns)."""
-    cols = []
+def collect_last_joins(exprs: Sequence[Expr]) -> Dict[Tuple, LastJoin]:
+    """All distinct LastJoin nodes, CSE'd by structural key."""
+    out: Dict[Tuple, LastJoin] = {}
 
     def walk(e: Expr) -> None:
-        if isinstance(e, Col) and e.name not in cols:
-            cols.append(e.name)
+        if isinstance(e, LastJoin):
+            out.setdefault(e.key, e)
         for c in e.children():
             walk(c)
 
     for e in exprs:
         walk(e)
+    return out
+
+
+def collect_columns(exprs: Sequence[Expr]) -> Tuple[str, ...]:
+    """All source columns referenced (lineage: feature -> raw columns).
+
+    Columns inside a LastJoin argument (and explicit TableCol references)
+    are reported table-qualified as ``"table.col"``.
+    """
+    cols: List[str] = []
+
+    def add(name: str) -> None:
+        if name not in cols:
+            cols.append(name)
+
+    def walk(e: Expr, table: Optional[str]) -> None:
+        if isinstance(e, Col):
+            add(f"{table}.{e.name}" if table else e.name)
+        elif isinstance(e, TableCol):
+            add(f"{e.table}.{e.name}")
+        elif isinstance(e, LastJoin):
+            walk(e.arg, e.table)
+            return
+        for c in e.children():
+            walk(c, table)
+
+    for e in exprs:
+        walk(e, None)
     return tuple(cols)
+
+
+def collect_tables(exprs: Sequence[Expr]) -> Tuple[str, ...]:
+    """All *secondary* tables referenced (LAST JOIN and WINDOW UNION)."""
+    tables: List[str] = []
+
+    def add(name: str) -> None:
+        if name not in tables:
+            tables.append(name)
+
+    def walk(e: Expr) -> None:
+        if isinstance(e, LastJoin):
+            add(e.table)
+        elif isinstance(e, TableCol):
+            add(e.table)
+        elif isinstance(e, WindowAgg):
+            for t in e.union:
+                add(t)
+        for c in e.children():
+            walk(c)
+
+    for e in exprs:
+        walk(e)
+    return tuple(tables)
 
 
 # ---------------------------------------------------------------------------
@@ -403,17 +585,24 @@ def eval_rowlevel(
     """Evaluate ``expr`` pointwise.
 
     ``columns`` maps column name -> (N,) array; ``wagg_values`` maps a
-    WindowAgg structural key -> already-computed (N,) result (phase 2 of the
-    engine).  WindowAgg nodes MUST appear in ``wagg_values``.
+    WindowAgg *or LastJoin* structural key -> already-computed (N,) result
+    (phase 2 of the engine).  WindowAgg/LastJoin nodes MUST appear in
+    ``wagg_values``.
     """
     from repro.core.hashing import mix64  # local import to avoid cycle
 
     def ev(e: Expr) -> jnp.ndarray:
-        if isinstance(e, WindowAgg):
+        if isinstance(e, (WindowAgg, LastJoin)):
             return wagg_values[e.key]
         if isinstance(e, Col):
             if e.name not in columns:
                 raise KeyError(f"unknown column {e.name!r}")
+            return columns[e.name]
+        if isinstance(e, TableCol):
+            if e.name not in columns:
+                raise KeyError(
+                    f"unknown column {e.table}.{e.name} in current table"
+                )
             return columns[e.name]
         if isinstance(e, Lit):
             return jnp.asarray(e.value, jnp.float32)

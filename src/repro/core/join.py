@@ -1,0 +1,133 @@
+"""Point-in-time multi-table primitives: LAST JOIN + WINDOW UNION.
+
+OpenMLDB (FeatInsight's execution engine) gets its multi-table
+expressiveness from two constructs, both reproduced here as dense
+data-parallel TPU primitives over (key, ts)-sorted arrays:
+
+* **LAST JOIN** — for each primary row, the most recent secondary row with
+  a matching key and ``ts <= primary ts``.  On CPU OpenMLDB walks the
+  secondary skiplist; here the secondary table is (key, ts)-sorted once and
+  every primary row resolves with one vectorized lexicographic binary
+  search (``searchsorted`` semantics, 32 halving steps, fully
+  data-parallel) followed by one gather.
+* **WINDOW UNION** — the per-key window is evaluated over the primary
+  stream *merged by timestamp* with secondary streams.  We materialize the
+  merge: concatenate the streams, stable-sort by (key, ts, stream-rank)
+  (secondary rows sort before primary rows at equal timestamps, so they are
+  visible to the primary row's window — OpenMLDB's union rows enter the
+  window at their own timestamps), run the ordinary segmented window
+  machinery (:func:`repro.core.windows.windowed_aggregate`) over the merged
+  stream, and read results back at the primary rows' positions.
+
+Everything is int32-safe (no int64 composites — JAX's default x32 mode
+silently truncates int64), jit-traceable, and shape-static.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "pit_searchsorted",
+    "last_join_gather",
+    "merge_streams",
+]
+
+
+def pit_searchsorted(
+    skey: jnp.ndarray,  # (M,) int32, sorted by (key, ts)
+    sts: jnp.ndarray,   # (M,) int32
+    qkey: jnp.ndarray,  # (Q,) int32 query join keys
+    qts: jnp.ndarray,   # (Q,) int32 query timestamps
+) -> jnp.ndarray:
+    """Right insertion point of (qkey, qts) in the sorted (skey, sts) pairs.
+
+    Returns (Q,) int32 counts of rows with (skey, sts) <= (qkey, qts)
+    lexicographically — i.e. ``searchsorted(..., side="right")`` over the
+    pair ordering, without materializing an int64 composite (x32-safe).
+    """
+    m = skey.shape[0]
+    lo = jnp.zeros(qkey.shape, jnp.int32)
+    hi = jnp.full(qkey.shape, m, jnp.int32)
+    steps = max(1, int(math.ceil(math.log2(max(m, 2)))) + 1)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        active = lo < hi
+        mid = (lo + hi) // 2
+        midc = jnp.minimum(mid, m - 1)
+        k_m, t_m = skey[midc], sts[midc]
+        le = (k_m < qkey) | ((k_m == qkey) & (t_m <= qts))
+        lo = jnp.where(active & le, mid + 1, lo)
+        hi = jnp.where(active & ~le, mid, hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def last_join_gather(
+    skey: jnp.ndarray,   # (M,) int32, secondary sorted by (key, ts)
+    sts: jnp.ndarray,    # (M,) int32
+    svals: jnp.ndarray,  # (M,) f32 pre-evaluated join expression values
+    qkey: jnp.ndarray,   # (Q,) int32 primary join-key column
+    qts: jnp.ndarray,    # (Q,) int32 primary timestamps
+    default: float = 0.0,
+) -> jnp.ndarray:
+    """Point-in-time LAST JOIN gather.
+
+    For each query row: the value of the newest secondary row with
+    ``skey == qkey`` and ``sts <= qts``; ``default`` when no row matches
+    (including the empty-secondary-table case).
+    """
+    m = skey.shape[0]
+    if m == 0:
+        return jnp.full(qkey.shape, jnp.float32(default))
+    j = pit_searchsorted(skey, sts, qkey, qts) - 1
+    jc = jnp.maximum(j, 0)
+    found = (j >= 0) & (skey[jc] == qkey)
+    return jnp.where(found, svals[jc], jnp.float32(default))
+
+
+def _stable_argsort_by(vals: jnp.ndarray, perm: jnp.ndarray) -> jnp.ndarray:
+    """Compose ``perm`` with a stable argsort of ``vals[perm]``."""
+    order = jnp.argsort(vals[perm], stable=True)
+    return perm[order]
+
+
+def merge_streams(
+    keys: Sequence[jnp.ndarray],
+    tss: Sequence[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Merge several (key, ts) streams into one (key, ts, rank)-sorted stream.
+
+    ``keys[i]``/``tss[i]`` is stream i; stream order is the tie-rank: at
+    equal (key, ts), rows of an earlier stream sort first.  Callers place
+    secondary (union) streams before the primary stream so union rows are
+    inside the primary row's window at equal timestamps.
+
+    Returns (perm, key_m, ts_m, rank_m): ``perm`` indexes the concatenated
+    arrays (concatenation order = stream order), and key/ts/rank are the
+    merged sorted streams.  LSD radix of three stable argsorts — stability
+    makes rows of one stream keep their relative order, which is what lets
+    the caller map merged positions back to per-stream row order.
+    """
+    rank = jnp.concatenate(
+        [
+            jnp.full(k.shape, jnp.int32(i))
+            for i, k in enumerate(keys)
+        ]
+    )
+    key = jnp.concatenate(list(keys)).astype(jnp.int32)
+    ts = jnp.concatenate(list(tss)).astype(jnp.int32)
+
+    # concatenation order is already (rank, within-stream order): the first
+    # LSD pass (stable sort by rank) is the identity permutation.
+    perm = jnp.arange(key.shape[0], dtype=jnp.int32)
+    perm = _stable_argsort_by(ts, perm)
+    perm = _stable_argsort_by(key, perm)
+    return perm, key[perm], ts[perm], rank[perm]

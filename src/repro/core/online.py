@@ -21,12 +21,19 @@ Window-aggregation *arguments* may be derived expressions; the store
 materializes one lane per distinct argument at ingest (computed columns),
 so pre-aggregation composes for derived args too — mirroring OpenMLDB
 defining pre-aggregates per aggregation spec.
+
+Multi-table views add one ring store per referenced secondary table:
+point-in-time LAST JOIN lookups (newest matching row with ``ts <= request
+ts``) and WINDOW UNION aggregations (primary window combined with the
+union tables' masked rings) are answered from this device state inside the
+same compiled query.  Secondary rows arrive via :meth:`ingest_table`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+import functools
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +44,8 @@ from repro.core.expr import (
     Agg,
     Expr,
     WindowAgg,
+    collect_last_joins,
+    collect_tables,
     collect_window_aggs,
     eval_rowlevel,
 )
@@ -44,17 +53,24 @@ from repro.core.windows import TOPN_TAIL
 
 __all__ = ["OnlineState", "OnlineFeatureStore"]
 
+_TS_MIN = jnp.int32(-2147483648)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class OnlineState:
-    """All device state of one view's online store (a pytree)."""
+    """All device state of one view's online store (a pytree).
+
+    ``sec`` holds one RingStore per secondary table, in the store's
+    ``_sec_names`` order.
+    """
 
     ring: st.RingStore
     bagg: pg.BucketAgg
+    sec: Tuple[st.RingStore, ...] = ()
 
     def tree_flatten(self):
-        return (self.ring, self.bagg), None
+        return (self.ring, self.bagg, self.sec), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -128,6 +144,8 @@ class OnlineFeatureStore:
         capacity: int = 256,
         num_buckets: int = 64,
         bucket_size: int = 64,
+        secondary_num_keys: Optional[Dict[str, int]] = None,
+        secondary_capacity: Optional[int] = None,
     ):
         self.view = view
         self.schema = view.schema
@@ -136,11 +154,12 @@ class OnlineFeatureStore:
         self.num_buckets = num_buckets
         self.bucket_size = bucket_size
 
+        exprs = list(view.features.values())
         # lane plan: one materialized lane per distinct wagg argument
-        self.waggs: Dict[Tuple, WindowAgg] = collect_window_aggs(
-            list(view.features.values())
-        )
+        self.waggs: Dict[Tuple, WindowAgg] = collect_window_aggs(exprs)
         self._wagg_order: List[Tuple] = list(self.waggs.keys())
+        self.ljoins = collect_last_joins(exprs)
+        self._ljoin_order: List[Tuple] = list(self.ljoins.keys())
         self._lane_exprs: List[Expr] = []
         self._lane_of: Dict[Tuple, int] = {}
         for wa in self.waggs.values():
@@ -148,7 +167,7 @@ class OnlineFeatureStore:
             if ak not in self._lane_of:
                 self._lane_of[ak] = len(self._lane_exprs)
                 self._lane_exprs.append(wa.arg)
-            if wa.window.mode == "range":
+            if wa.window.mode == "range" and not wa.union:
                 need = wa.window.size // bucket_size + 2
                 if need > num_buckets:
                     raise ValueError(
@@ -157,12 +176,67 @@ class OnlineFeatureStore:
                     )
         self.num_lanes = max(len(self._lane_exprs), 1)
 
+        # -- secondary-table plane (LAST JOIN + WINDOW UNION sources) --------
+        db = view.database
+        self._sec_names: Tuple[str, ...] = collect_tables(exprs)
+        self._sec_index = {t: i for i, t in enumerate(self._sec_names)}
+        self._sec_schemas = {t: db.table(t) for t in self._sec_names}
+        self._sec_lane_exprs: Dict[str, List[Expr]] = {
+            t: [] for t in self._sec_names
+        }
+        self._sec_lane_of: Dict[str, Dict[Tuple, int]] = {
+            t: {} for t in self._sec_names
+        }
+
+        def sec_lane(table: str, e: Expr) -> None:
+            lanes = self._sec_lane_of[table]
+            if e.key not in lanes:
+                lanes[e.key] = len(self._sec_lane_exprs[table])
+                self._sec_lane_exprs[table].append(e)
+
+        for lj in self.ljoins.values():
+            sec_lane(lj.table, lj.arg)
+        self._union_tables: Tuple[str, ...] = ()
+        for wa in self.waggs.values():
+            for t in wa.union:
+                sec_lane(t, wa.arg)
+                if t not in self._union_tables:
+                    self._union_tables += (t,)
+        # request-time join-key columns (primary columns named by LAST JOINs)
+        self._join_cols: Tuple[str, ...] = ()
+        for lj in self.ljoins.values():
+            if lj.on not in self._join_cols:
+                self._join_cols += (lj.on,)
+        self._join_col_index = {c: i for i, c in enumerate(self._join_cols)}
+
+        sec_nk = secondary_num_keys or {}
+        sec_cap = secondary_capacity or capacity
+        self.secondary_num_keys = {
+            t: int(sec_nk.get(t, num_keys)) for t in self._sec_names
+        }
+        sec_rings = tuple(
+            st.ring_init(
+                self.secondary_num_keys[t],
+                sec_cap,
+                max(len(self._sec_lane_exprs[t]), 1),
+            )
+            for t in self._sec_names
+        )
+
         self.state = OnlineState(
             ring=st.ring_init(num_keys, capacity, self.num_lanes),
             bagg=pg.bucket_init(num_keys, num_buckets, self.num_lanes, bucket_size),
+            sec=sec_rings,
         )
         # jit caches (compiled once per view version)
         self._ingest_fn = jax.jit(self._ingest_pure, donate_argnums=(0,))
+        self._sec_ingest_fns = {
+            t: jax.jit(
+                functools.partial(self._sec_ingest_pure, index=i),
+                donate_argnums=(0,),
+            )
+            for t, i in self._sec_index.items()
+        }
         self._query_naive_fn = jax.jit(self._query_pure_naive)
         self._query_preagg_fn = jax.jit(self._query_pure_preagg)
 
@@ -184,7 +258,7 @@ class OnlineFeatureStore:
     def _ingest_pure(self, state: OnlineState, key, ts, lanes) -> OnlineState:
         ring = st.ring_ingest(state.ring, key, ts, lanes)
         bagg = pg.bucket_ingest(state.bagg, key, ts, lanes)
-        return OnlineState(ring=ring, bagg=bagg)
+        return OnlineState(ring=ring, bagg=bagg, sec=state.sec)
 
     def ingest(self, columns: Dict[str, jnp.ndarray]) -> None:
         """Ingest a batch of raw rows (must be (key, ts)-sorted).
@@ -218,23 +292,69 @@ class OnlineFeatureStore:
             order = idx[_np.lexsort((ts_h[idx], _np.asarray(key)[idx]))]
             self._ingest_padded(key[order], ts[order], lanes[order])
 
-    def _ingest_padded(self, key, ts, lanes) -> None:
-        """Pad the fused batch to a power-of-two shape bucket so one compiled
-        executable serves every batch size (the paper's compilation caching).
-        Padding rows carry the sentinel key == num_keys: gathers clip
-        (harmless) and every state scatter drops out-of-bounds rows."""
+    @staticmethod
+    def _pad_batch(key, ts, lanes, sentinel: int):
+        """Pad a fused ingest batch to a power-of-two shape bucket so one
+        compiled executable serves every batch size (the paper's compilation
+        caching).  Padding rows carry an out-of-range ``sentinel`` key:
+        gathers clip (harmless) and every state scatter drops them."""
         n = int(key.shape[0])
         m = max(64, 1 << (n - 1).bit_length())
         if m != n:
             pad = m - n
             key = jnp.concatenate(
-                [key, jnp.full((pad,), self.num_keys, jnp.int32)]
+                [key, jnp.full((pad,), sentinel, jnp.int32)]
             )
             ts = jnp.concatenate([ts, jnp.broadcast_to(ts[-1], (pad,))])
             lanes = jnp.concatenate(
                 [lanes, jnp.zeros((pad, lanes.shape[1]), lanes.dtype)]
             )
+        return key, ts, lanes
+
+    def _ingest_padded(self, key, ts, lanes) -> None:
+        key, ts, lanes = self._pad_batch(key, ts, lanes, self.num_keys)
         self.state = self._ingest_fn(self.state, key, ts, lanes)
+
+    # -- secondary-table ingest ----------------------------------------------
+
+    def _sec_ingest_pure(
+        self, state: OnlineState, key, ts, lanes, *, index: int
+    ) -> OnlineState:
+        sec = list(state.sec)
+        sec[index] = st.ring_ingest(sec[index], key, ts, lanes)
+        return OnlineState(ring=state.ring, bagg=state.bagg, sec=tuple(sec))
+
+    def ingest_table(self, table: str, columns: Dict[str, jnp.ndarray]) -> None:
+        """Ingest a (key, ts)-sorted batch of rows into a secondary table's
+        ring (no pre-aggregates: secondary state serves LAST JOIN lookups
+        and union windows, both answered from raw rings)."""
+        if table == self.schema.name:
+            return self.ingest(columns)
+        if table not in self._sec_index:
+            raise KeyError(
+                f"view {self.view.name!r} does not reference table {table!r}"
+            )
+        sch = self._sec_schemas[table]
+        key = jnp.asarray(columns[sch.key], jnp.int32)
+        n = int(key.shape[0])
+        if n == 0:
+            return
+        ts = jnp.asarray(columns[sch.ts], jnp.int32)
+        exprs = self._sec_lane_exprs[table]
+        if exprs:
+            lanes = jnp.stack(
+                [
+                    eval_rowlevel(e, columns, {}).astype(jnp.float32)
+                    for e in exprs
+                ],
+                axis=-1,
+            )
+        else:
+            lanes = jnp.zeros((n, 1), jnp.float32)
+        key, ts, lanes = self._pad_batch(
+            key, ts, lanes, self.secondary_num_keys[table]
+        )
+        self.state = self._sec_ingest_fns[table](self.state, key, ts, lanes)
 
     # -- window masks -------------------------------------------------------------
 
@@ -250,18 +370,121 @@ class OnlineFeatureStore:
         rank_from_new = newer - eligible.astype(jnp.int32)  # 0 == newest
         return eligible & (rank_from_new < wa.window.size - 1)
 
+    # -- secondary-state lookups ---------------------------------------------
+
+    def _union_gathers(self, state, key):
+        """Gather each union table's ring at the request key (shared across
+        every union wagg touching that table)."""
+        return {
+            t: st.ring_gather(state.sec[self._sec_index[t]], key)
+            for t in self._union_tables
+        }
+
+    def _last_join_vals(self, state, ts_q, join_keys) -> List[jnp.ndarray]:
+        """Point-in-time LAST JOIN answers, one (Q,) vector per join.
+
+        Newest secondary row with key == request's join key and
+        ``ts <= request ts``; ties on ts resolve to the latest-ingested row
+        (matching the offline stable (key, ts) sort).
+        """
+        out = []
+        gathers = {}
+        for lk in self._ljoin_order:
+            lj = self.ljoins[lk]
+            jk = join_keys[self._join_col_index[lj.on]]
+            gk = (lj.table, lj.on)
+            if gk not in gathers:
+                gathers[gk] = st.ring_gather(
+                    state.sec[self._sec_index[lj.table]], jk
+                )
+            ts_t, lanes_t, valid_t = gathers[gk]
+            g = lanes_t[..., self._sec_lane_of[lj.table][lj.arg.key]]
+            m = valid_t & (ts_t <= ts_q[:, None])
+            ts_m = jnp.where(m, ts_t, _TS_MIN)
+            mx = jnp.max(ts_m, axis=1)
+            cand = m & (ts_t == mx[:, None])
+            C = ts_t.shape[1]
+            pos = C - 1 - jnp.argmax(cand[:, ::-1], axis=1)
+            val = jnp.take_along_axis(g, pos[:, None], axis=1)[:, 0]
+            found = m.any(axis=1)
+            out.append(jnp.where(found, val, jnp.float32(lj.default)))
+        return out
+
+    def _agg_union(self, wa: WindowAgg, parts, r) -> jnp.ndarray:
+        """Combine a RANGE window across the primary and union-table rings.
+
+        ``parts``: [(g, m), ...] masked buffers (primary first); ``r`` the
+        request row's arg value (the newest in-window row by the merge
+        tie-rule, so LAST == r).
+        """
+        if wa.agg == Agg.LAST:
+            return r
+        if wa.agg == Agg.DISTINCT_APPROX:
+            acc = pg.row_bitmap(r)
+            for g, m in parts:
+                bits = jnp.where(m, pg.row_bitmap(g), jnp.int32(0))
+                acc = acc | _or_reduce(bits, 1)
+            return _bitmap_estimate(acc)
+        s = r
+        cnt = jnp.ones_like(r)
+        s2 = r * r
+        mn = r
+        mx = r
+        for g, m in parts:
+            mf = m.astype(jnp.float32)
+            s = s + jnp.sum(g * mf, axis=1)
+            cnt = cnt + jnp.sum(mf, axis=1)
+            s2 = s2 + jnp.sum(g * g * mf, axis=1)
+            mn = jnp.minimum(mn, jnp.min(jnp.where(m, g, pg.POS_INF), axis=1))
+            mx = jnp.maximum(mx, jnp.max(jnp.where(m, g, pg.NEG_INF), axis=1))
+        if wa.agg == Agg.SUM:
+            return s
+        if wa.agg == Agg.COUNT:
+            return cnt
+        if wa.agg == Agg.MEAN:
+            return s / cnt
+        if wa.agg == Agg.STD:
+            mean = s / cnt
+            return jnp.sqrt(jnp.maximum(s2 / cnt - mean * mean, 0.0))
+        if wa.agg == Agg.MIN:
+            return mn
+        if wa.agg == Agg.MAX:
+            return mx
+        raise ValueError(wa.agg)
+
+    def _union_parts(self, wa, ts_buf, valid, ts_q, g, sec_gathers):
+        """Masked (g, m) buffers for a union RANGE window: primary ring
+        first, then each union table's ring, all masked by the same
+        ``_window_mask`` range rule."""
+        parts = [(g, self._window_mask(wa, ts_buf, valid, ts_q))]
+        for t in wa.union:
+            ts_t, lanes_t, valid_t = sec_gathers[t]
+            g_t = lanes_t[..., self._sec_lane_of[t][wa.arg.key]]
+            parts.append(
+                (g_t, self._window_mask(wa, ts_t, valid_t, ts_q))
+            )
+        return parts
+
     # -- naive path ------------------------------------------------------------------
 
-    def _query_pure_naive(self, state, key, ts_q, req_lanes):
+    def _query_pure_naive(self, state, key, ts_q, req_lanes, join_keys):
         ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
+        sec_gathers = self._union_gathers(state, key)
         out = []
         for wk in self._wagg_order:
             wa = self.waggs[wk]
             lane = self._lane_of[wa.arg.key]
             g = lanes_buf[..., lane]
             r = req_lanes[:, lane]
+            if wa.union:
+                parts = self._union_parts(
+                    wa, ts_buf, valid, ts_q, g, sec_gathers
+                )
+                out.append(self._agg_union(wa, parts, r))
+                continue
             m = self._window_mask(wa, ts_buf, valid, ts_q)
             out.append(self._agg_masked(wa, g, m, r))
+        out.extend(self._last_join_vals(state, ts_q, join_keys))
         return tuple(out)
 
     def _agg_masked(self, wa: WindowAgg, g, m, r) -> jnp.ndarray:
@@ -308,10 +531,11 @@ class OnlineFeatureStore:
 
     _COMPOSABLE = (Agg.SUM, Agg.COUNT, Agg.MEAN, Agg.MIN, Agg.MAX, Agg.STD)
 
-    def _query_pure_preagg(self, state, key, ts_q, req_lanes):
+    def _query_pure_preagg(self, state, key, ts_q, req_lanes, join_keys):
         """Two-level composition for RANGE windows with composable aggs;
-        everything else falls back to the naive path inline."""
+        everything else (incl. union windows) falls back inline."""
         ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
+        sec_gathers = self._union_gathers(state, key)
         B = jnp.int32(self.bucket_size)
         nb = self.num_buckets
         bucket_buf = ts_buf // B
@@ -322,6 +546,12 @@ class OnlineFeatureStore:
             lane = self._lane_of[wa.arg.key]
             g = lanes_buf[..., lane]
             r = req_lanes[:, lane]
+            if wa.union:
+                parts = self._union_parts(
+                    wa, ts_buf, valid, ts_q, g, sec_gathers
+                )
+                out.append(self._agg_union(wa, parts, r))
+                continue
             composable = wa.agg in self._COMPOSABLE or (
                 wa.agg == Agg.DISTINCT_APPROX
             )
@@ -379,6 +609,7 @@ class OnlineFeatureStore:
             ms = jnp.where(ok[..., None], ms, ident)
             s_all = pg.combine_stats(s_raw, _fold_stats(ms))
             out.append(_finalize(wa.agg, s_all))
+        out.extend(self._last_join_vals(state, ts_q, join_keys))
         return tuple(out)
 
     def _max_mid(self, wa: WindowAgg) -> int:
@@ -392,12 +623,21 @@ class OnlineFeatureStore:
     ) -> Dict[str, jnp.ndarray]:
         """Compute all view features for a batch of request rows.
 
-        columns: raw request columns incl. key and ts; (Q,) each.
-        Returns {feature_name: (Q,) f32}.
+        columns: raw request columns incl. key, ts, and any LAST JOIN key
+        columns; (Q,) each.  Returns {feature_name: (Q,) f32}.
         """
         key = jnp.asarray(columns[self.schema.key], jnp.int32)
         ts_q = jnp.asarray(columns[self.schema.ts], jnp.int32)
         req_lanes = self._lanes(columns)
+        for c in self._join_cols:
+            if c not in columns:
+                raise KeyError(
+                    f"request rows must carry join-key column {c!r} "
+                    f"(LAST JOIN on {c!r} in view {self.view.name!r})"
+                )
+        join_keys = tuple(
+            jnp.asarray(columns[c], jnp.int32) for c in self._join_cols
+        )
         fn = self._query_naive_fn if mode == "naive" else self._query_preagg_fn
         # pad the request to a power-of-two shape bucket (compilation
         # caching: one executable per bucket, not per request size)
@@ -411,14 +651,20 @@ class OnlineFeatureStore:
                 [req_lanes,
                  jnp.broadcast_to(req_lanes[-1:], (pad, req_lanes.shape[1]))]
             )
-            vals = fn(self.state, key_p, ts_p, lanes_p)
+            jk_p = tuple(
+                jnp.concatenate([j, jnp.broadcast_to(j[-1], (pad,))])
+                for j in join_keys
+            )
+            vals = fn(self.state, key_p, ts_p, lanes_p, jk_p)
             vals = tuple(v[:q] for v in vals)
         else:
-            vals = fn(self.state, key, ts_q, req_lanes)
-        wagg_values = dict(zip(self._wagg_order, vals))
+            vals = fn(self.state, key, ts_q, req_lanes, join_keys)
+        pre_values = dict(
+            zip(self._wagg_order + self._ljoin_order, vals)
+        )
         out: Dict[str, jnp.ndarray] = {}
         for fname, fexpr in self.view.features.items():
-            out[fname] = eval_rowlevel(fexpr, columns, wagg_values)
+            out[fname] = eval_rowlevel(fexpr, columns, pre_values)
         return out
 
 

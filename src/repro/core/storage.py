@@ -35,7 +35,10 @@ import numpy as np
 
 from repro.core.hashing import fold_hash
 
-__all__ = ["TableSchema", "RowCodec", "RingStore", "ring_init", "ring_ingest"]
+__all__ = [
+    "TableSchema", "Database", "RowCodec", "RingStore",
+    "ring_init", "ring_ingest",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +65,44 @@ class TableSchema:
     @property
     def width(self) -> int:
         return len(self.numeric) + len(self.categorical)
+
+
+@dataclasses.dataclass(frozen=True)
+class Database:
+    """A primary table plus named secondary tables — the multi-table plane.
+
+    Mirrors FeatInsight's database grouping (the 2018 PHM dataset's 17
+    tables live in one database): the *primary* table drives feature
+    computation row-by-row; *secondary* tables feed point-in-time LAST
+    JOINs (their ``key`` column is matched against a primary join column)
+    and WINDOW UNION streams (their ``key`` column shares the primary
+    key's id space).
+    """
+
+    name: str
+    primary: TableSchema
+    secondary: Tuple[TableSchema, ...] = ()
+
+    def __post_init__(self) -> None:
+        names = [self.primary.name] + [t.name for t in self.secondary]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate table names in database: {names}")
+
+    @property
+    def tables(self) -> Tuple[TableSchema, ...]:
+        return (self.primary,) + self.secondary
+
+    def table(self, name: str) -> TableSchema:
+        for t in self.tables:
+            if t.name == name:
+                return t
+        raise KeyError(
+            f"table {name!r} not in database {self.name!r} "
+            f"(has {[t.name for t in self.tables]})"
+        )
+
+    def is_secondary(self, name: str) -> bool:
+        return any(t.name == name for t in self.secondary)
 
 
 class RowCodec:

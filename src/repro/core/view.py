@@ -24,24 +24,41 @@ from repro.core.expr import (
     Col,
     Expr,
     Hash,
+    LastJoin,
     Lit,
     Signature,
+    TableCol,
     UnOp,
     WindowAgg,
     collect_columns,
+    collect_last_joins,
+    collect_tables,
     collect_window_aggs,
 )
-from repro.core.storage import TableSchema
+from repro.core.storage import Database, TableSchema
 
 __all__ = ["FeatureView", "FeatureRegistry", "render_sql"]
 
 
-def render_sql(name: str, expr: Expr, schema: TableSchema) -> str:
-    """Render one feature's defining expression as OpenMLDB-flavoured SQL."""
+def render_sql(
+    name: str,
+    expr: Expr,
+    schema: TableSchema,
+    database: Optional[Database] = None,
+) -> str:
+    """Render one feature's defining expression as OpenMLDB-flavoured SQL.
 
-    def r(e: Expr) -> str:
+    Multi-table features render OpenMLDB's two cross-table clauses: LAST
+    JOINs appear as a ``FROM ... LAST JOIN ... ORDER BY ... ON ...`` clause
+    (with the joined expression's columns table-qualified), and union
+    windows carry the ``UNION table`` prefix inside ``OVER (...)``.
+    """
+
+    def r(e: Expr, table: Optional[str] = None) -> str:
         if isinstance(e, Col):
-            return e.name
+            return f"{table}.{e.name}" if table else e.name
+        if isinstance(e, TableCol):
+            return f"{e.table}.{e.name}"
         if isinstance(e, Lit):
             return repr(e.value)
         if isinstance(e, BinOp):
@@ -49,17 +66,19 @@ def render_sql(name: str, expr: Expr, schema: TableSchema) -> str:
                 "add": "+", "sub": "-", "mul": "*", "div": "/",
                 "gt": ">", "lt": "<", "ge": ">=", "le": "<=", "eq": "=",
             }[e.op]
-            return f"({r(e.lhs)} {sym} {r(e.rhs)})"
+            return f"({r(e.lhs, table)} {sym} {r(e.rhs, table)})"
         if isinstance(e, UnOp):
             if e.op == "clip":
                 lo, hi = e.params
-                return f"clip({r(e.arg)}, {lo}, {hi})"
-            return f"{e.op}({r(e.arg)})"
+                return f"clip({r(e.arg, table)}, {lo}, {hi})"
+            return f"{e.op}({r(e.arg, table)})"
         if isinstance(e, Hash):
-            return f"hash{e.bits}({r(e.arg)})"
+            return f"hash{e.bits}({r(e.arg, table)})"
         if isinstance(e, Signature):
-            args = ", ".join(r(a) for a in e.args)
+            args = ", ".join(r(a, table) for a in e.args)
             return f"signature{e.bits}({args})"
+        if isinstance(e, LastJoin):
+            return r(e.arg, e.table)
         if isinstance(e, WindowAgg):
             w = e.window
             bound = (
@@ -70,44 +89,133 @@ def render_sql(name: str, expr: Expr, schema: TableSchema) -> str:
             fn = e.agg.value
             if e.agg == Agg.TOPN_FREQ:
                 fn = f"top{e.n + 1}_freq"
+            union = "".join(f"UNION {t} " for t in e.union)
             return (
-                f"{fn}({r(e.arg)}) OVER (PARTITION BY {schema.key} "
-                f"ORDER BY {schema.ts} RANGE BETWEEN {bound} AND CURRENT ROW)"
+                f"{fn}({r(e.arg, table)}) OVER ({union}PARTITION BY "
+                f"{schema.key} ORDER BY {schema.ts} "
+                f"RANGE BETWEEN {bound} AND CURRENT ROW)"
             )
         raise TypeError(type(e))
 
-    return f"SELECT {r(expr)} AS {name}"
+    sql = f"SELECT {r(expr)} AS {name}"
+    joins = collect_last_joins([expr])
+    if joins:
+        clauses = [f"FROM {schema.name}"]
+        seen = set()
+        for lj in joins.values():
+            if (lj.table, lj.on) in seen:
+                continue
+            seen.add((lj.table, lj.on))
+            jkey = (
+                database.table(lj.table).key if database is not None else "key"
+            )
+            jts = (
+                database.table(lj.table).ts if database is not None else "ts"
+            )
+            clauses.append(
+                f"LAST JOIN {lj.table} ORDER BY {lj.table}.{jts} ON "
+                f"{schema.name}.{lj.on} = {lj.table}.{jkey} AND "
+                f"{lj.table}.{jts} <= {schema.name}.{schema.ts}"
+            )
+        sql += " " + " ".join(clauses)
+    return sql
+
+
+def _reject_stray_tablecols(e: Expr, fname: str) -> None:
+    """Raise if a TableCol appears outside a LastJoin argument."""
+    if isinstance(e, TableCol):
+        raise ValueError(
+            f"feature {fname!r}: TableCol({e.table!r}, {e.name!r}) outside a "
+            "LAST JOIN argument — qualified columns only resolve inside "
+            "last_join(...)"
+        )
+    if isinstance(e, LastJoin):
+        return  # LastJoin.__post_init__ already validated its subtree
+    for c in e.children():
+        _reject_stray_tablecols(c, fname)
 
 
 @dataclasses.dataclass
 class FeatureView:
-    """A named, versioned set of features over one table schema."""
+    """A named, versioned set of features over one table schema — or, when
+    ``database`` is given, over a primary table plus secondary tables
+    (point-in-time LAST JOINs and WINDOW UNION streams).
+
+    ``schema`` remains the primary table's schema in both cases; for
+    single-table views a one-table :class:`Database` is synthesized so every
+    consumer can treat views uniformly.
+    """
 
     name: str
-    schema: TableSchema
-    features: Dict[str, Expr]
+    schema: Optional[TableSchema] = None
+    features: Dict[str, Expr] = dataclasses.field(default_factory=dict)
     version: int = 1
     description: str = ""
+    database: Optional[Database] = None
+
+    def __post_init__(self) -> None:
+        if self.schema is None and self.database is None:
+            raise ValueError("FeatureView needs a schema or a database")
+        if self.database is None:
+            self.database = Database(
+                name=self.schema.name, primary=self.schema
+            )
+        if self.schema is None:
+            self.schema = self.database.primary
+        if self.schema != self.database.primary:
+            raise ValueError(
+                f"schema {self.schema.name!r} must equal the database's "
+                f"primary table {self.database.primary.name!r}"
+            )
+        # every referenced table must be a *secondary* table of the database:
+        # a LAST JOIN / WINDOW UNION naming the primary table would be
+        # silently unanswerable online (primary rows never reach a secondary
+        # ring), so reject it here rather than diverge at serve time
+        for t in collect_tables(list(self.features.values())):
+            self.database.table(t)
+            if not self.database.is_secondary(t):
+                raise ValueError(
+                    f"LAST JOIN / WINDOW UNION over the primary table "
+                    f"{t!r} is not supported; register a secondary table"
+                )
+        # TableCol is only resolvable inside a LAST JOIN argument (it has no
+        # table context elsewhere and would silently read the primary table)
+        for fname, expr in self.features.items():
+            _reject_stray_tablecols(expr, fname)
+
+    @property
+    def tables(self) -> List[str]:
+        """All source tables actually referenced (primary first)."""
+        return [self.schema.name] + list(
+            collect_tables(list(self.features.values()))
+        )
 
     def lineage(self) -> Dict[str, Dict]:
-        """feature -> {view, version, source columns, window specs, sql}."""
+        """feature -> {view, version, source tables/columns, windows, joins, sql}."""
         out = {}
         for fname, expr in self.features.items():
             waggs = collect_window_aggs([expr])
+            joins = collect_last_joins([expr])
             out[fname] = {
                 "view": self.name,
                 "version": self.version,
                 "table": self.schema.name,
+                "tables": [self.schema.name] + list(collect_tables([expr])),
                 "columns": list(collect_columns([expr])),
                 "windows": [
                     {
                         "agg": w.agg.value,
                         "mode": w.window.mode,
                         "size": w.window.size,
+                        "union": list(w.union),
                     }
                     for w in waggs.values()
                 ],
-                "sql": render_sql(fname, expr, self.schema),
+                "joins": [
+                    {"table": j.table, "on": j.on, "default": j.default}
+                    for j in joins.values()
+                ],
+                "sql": render_sql(fname, expr, self.schema, self.database),
             }
         return out
 
@@ -122,6 +230,7 @@ class FeatureView:
             features=merged,
             version=self.version + 1,
             description=description or self.description,
+            database=self.database,
         )
 
 
@@ -174,7 +283,7 @@ class FeatureRegistry:
             "view": view.name,
             "version": view.version,
             "features": list(view.features),
-            "tables": [view.schema.name],
+            "tables": view.tables,
             "description": description,
             "deployed_at": time.time(),
         }
@@ -198,8 +307,9 @@ class FeatureRegistry:
                         "name": v.name,
                         "version": v.version,
                         "table": v.schema.name,
+                        "tables": v.tables,
                         "features": {
-                            f: render_sql(f, e, v.schema)
+                            f: render_sql(f, e, v.schema, v.database)
                             for f, e in v.features.items()
                         },
                     }

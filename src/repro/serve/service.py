@@ -61,17 +61,34 @@ class FeatureService:
     def request(self, rows: Dict[str, np.ndarray],
                 ingest: bool = True) -> Dict[str, np.ndarray]:
         """Compute features for a batch of request rows; optionally ingest
-        them afterwards (the online-learning pattern of the paper)."""
+        them afterwards (the online-learning pattern of the paper).
+
+        Batches from :class:`BatchScheduler` carry a ``__valid__`` mask over
+        padding rows (the last real row repeated up to the shape bucket).
+        The mask is stripped before querying and honored on ingest — padding
+        rows are duplicates of a real row, so ingesting them would corrupt
+        window state (double-counted sums, inflated counts).
+        """
         t0 = time.perf_counter()
+        valid = rows.get("__valid__")
+        rows = {c: v for c, v in rows.items() if c != "__valid__"}
         out = self.store.query(rows, mode=self.mode)
         out = {k: np.asarray(v) for k, v in out.items()}
         if ingest:
-            key = np.asarray(rows[self.view.schema.key])
-            ts = np.asarray(rows[self.view.schema.ts])
-            order = np.lexsort((ts, key))
-            self.store.ingest({c: np.asarray(v)[order] for c, v in rows.items()})
+            real = rows
+            if valid is not None:
+                valid = np.asarray(valid, bool)
+                real = {c: np.asarray(v)[valid] for c, v in rows.items()}
+            if len(next(iter(real.values()))):
+                key = np.asarray(real[self.view.schema.key])
+                ts = np.asarray(real[self.view.schema.ts])
+                order = np.lexsort((ts, key))
+                self.store.ingest(
+                    {c: np.asarray(v)[order] for c, v in real.items()}
+                )
         dt = time.perf_counter() - t0
-        self.stats.requests += len(next(iter(rows.values())))
+        n = len(next(iter(rows.values())))
+        self.stats.requests += int(valid.sum()) if valid is not None else n
         self.stats.batches += 1
         self.stats.total_latency_s += dt
         return out

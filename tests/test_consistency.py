@@ -8,6 +8,8 @@ both the naive and pre-aggregated query paths.
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import (

@@ -1,0 +1,324 @@
+"""Multi-table feature plane: LAST JOIN + WINDOW UNION.
+
+Offline engines are checked against brute-force numpy oracles; the
+offline↔online guarantee is checked via consistency.verify_view on a
+4-table view (both query paths) with interleaved multi-table replay.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Col,
+    Database,
+    FeatureView,
+    OfflineEngine,
+    OnlineFeatureStore,
+    TableCol,
+    TableSchema,
+    last_join,
+    range_window,
+    rows_window,
+    w_count,
+    w_mean,
+    w_std,
+    w_sum,
+    w_topn_freq,
+)
+from repro.core.consistency import verify_view
+from repro.core.expr import LastJoin, WindowAgg, Agg
+
+K = 8
+NM = 4
+
+DB = Database(
+    name="mt",
+    primary=TableSchema(
+        "tx", key="acct", ts="ts", numeric=("amount", "merchant")
+    ),
+    secondary=(
+        TableSchema("wires", key="acct", ts="ts", numeric=("amount",)),
+        TableSchema("accounts", key="acct", ts="ts", numeric=("limit",)),
+        TableSchema("merchants", key="merchant", ts="ts", numeric=("risk",)),
+    ),
+)
+
+
+def make_tables(rng, n=300, t_max=2_000):
+    # unique primary timestamps: window/join tie-semantics are positional at
+    # equal (key, ts); unique ts keeps the numpy oracles unambiguous
+    ts = np.sort(rng.choice(t_max, size=n, replace=False)).astype(np.int32)
+    tx = dict(
+        acct=rng.integers(0, K, n).astype(np.int32),
+        ts=ts,
+        amount=rng.gamma(2.0, 10.0, n).astype(np.float32),
+        merchant=rng.integers(0, NM, n).astype(np.int32),
+    )
+    m = n // 2
+    wires = dict(
+        acct=rng.integers(0, K, m).astype(np.int32),
+        ts=np.sort(rng.integers(0, t_max, m)).astype(np.int32),
+        amount=rng.gamma(2.0, 10.0, m).astype(np.float32),
+    )
+    accounts = dict(
+        acct=np.concatenate([np.arange(K), rng.integers(0, K, K)]).astype(
+            np.int32
+        ),
+        ts=np.concatenate([np.zeros(K), rng.integers(1, t_max, K)]).astype(
+            np.int32
+        ),
+        limit=rng.uniform(100.0, 1000.0, 2 * K).astype(np.float32),
+    )
+    merchants = dict(
+        merchant=np.concatenate(
+            [np.arange(NM), rng.integers(0, NM, NM)]
+        ).astype(np.int32),
+        ts=np.concatenate([np.zeros(NM), rng.integers(1, t_max, NM)]).astype(
+            np.int32
+        ),
+        risk=rng.random(2 * NM).astype(np.float32),
+    )
+    sec = {"wires": wires, "accounts": accounts, "merchants": merchants}
+    return tx, sec
+
+
+def test_last_join_offline_matches_numpy():
+    rng = np.random.default_rng(0)
+    tx, sec = make_tables(rng)
+    view = FeatureView(
+        "lj",
+        features={
+            "risk": last_join(
+                Col("risk"), "merchants", on="merchant", default=-1.0
+            ),
+            "limit": last_join(Col("limit"), "accounts", on="acct"),
+        },
+        database=DB,
+    )
+    res = OfflineEngine().compute(view, tx, sec)
+
+    for fname, table, on, vcol, default in (
+        ("risk", "merchants", "merchant", "risk", -1.0),
+        ("limit", "accounts", "acct", "limit", 0.0),
+    ):
+        t = sec[table]
+        kcol = DB.table(table).key
+        ref = np.full(len(tx["ts"]), default, np.float32)
+        for i in range(len(tx["ts"])):
+            m = (t[kcol] == tx[on][i]) & (t["ts"] <= tx["ts"][i])
+            if m.any():
+                js = np.nonzero(m)[0]
+                # newest ts; ties -> last in original order (stable sort)
+                j = js[np.lexsort((js, t["ts"][js]))][-1]
+                ref[i] = t[vcol][j]
+        np.testing.assert_allclose(np.asarray(res[fname]), ref, rtol=1e-6)
+
+
+def test_window_union_offline_matches_numpy():
+    rng = np.random.default_rng(1)
+    tx, sec = make_tables(rng)
+    W = 300
+    view = FeatureView(
+        "wu",
+        features={
+            "s": w_sum(Col("amount"), range_window(W), union=("wires",)),
+            "c": w_count(Col("amount"), range_window(W), union=("wires",)),
+            "m": w_mean(Col("amount"), range_window(W), union=("wires",)),
+        },
+        database=DB,
+    )
+    res = OfflineEngine().compute(view, tx, sec)
+    w = sec["wires"]
+    n = len(tx["ts"])
+    s_ref = np.zeros(n)
+    c_ref = np.zeros(n)
+    for i in range(n):
+        lo = tx["ts"][i] - W + 1
+        mp = (
+            (tx["acct"] == tx["acct"][i])
+            & (tx["ts"] >= lo)
+            & (tx["ts"] <= tx["ts"][i])
+        )
+        mw = (
+            (w["acct"] == tx["acct"][i])
+            & (w["ts"] >= lo)
+            & (w["ts"] <= tx["ts"][i])
+        )
+        s_ref[i] = tx["amount"][mp].sum() + w["amount"][mw].sum()
+        c_ref[i] = mp.sum() + mw.sum()
+    np.testing.assert_allclose(np.asarray(res["s"]), s_ref, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(res["c"]), c_ref, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(res["m"]), s_ref / np.maximum(c_ref, 1.0), rtol=1e-4
+    )
+
+
+@pytest.mark.parametrize("mode", ["naive", "preagg"])
+def test_multitable_consistency(mode):
+    """Acceptance: verify_view passes on a >=3-table view using both a
+    LAST JOIN feature and WINDOW UNION aggregations."""
+    rng = np.random.default_rng(2)
+    tx, sec = make_tables(rng, n=400)
+    w1 = range_window(300, bucket=64)
+    amt = Col("amount")
+    credit = last_join(Col("limit"), "accounts", on="acct", default=500.0)
+    view = FeatureView(
+        "mtv",
+        features={
+            "limit": credit,
+            "mrisk": last_join(
+                Col("risk"), "merchants", on="merchant", default=0.5
+            ),
+            "out_sum": w_sum(amt, w1, union=("wires",)),
+            "out_cnt": w_count(amt, w1, union=("wires",)),
+            "out_std": w_std(amt, w1, union=("wires",)),
+            "util": w_sum(amt, w1, union=("wires",)) / credit,
+            "plain": w_mean(amt, w1),
+        },
+        database=DB,
+    )
+    rep = verify_view(
+        view,
+        tx,
+        num_keys=K,
+        secondary=sec,
+        secondary_num_keys={"merchants": NM},
+        mode=mode,
+    )
+    assert rep.passed, rep.summary()
+
+
+def test_online_last_join_default_when_no_match():
+    view = FeatureView(
+        "d",
+        features={
+            "risk": last_join(
+                Col("risk"), "merchants", on="merchant", default=-7.0
+            )
+        },
+        database=DB,
+    )
+    store = OnlineFeatureStore(
+        view, num_keys=K, secondary_num_keys={"merchants": NM}
+    )
+    req = dict(
+        acct=np.zeros(3, np.int32),
+        ts=np.full(3, 100, np.int32),
+        amount=np.ones(3, np.float32),
+        merchant=np.arange(3, dtype=np.int32),
+    )
+    out = store.query(req)
+    np.testing.assert_allclose(np.asarray(out["risk"]), -7.0)
+    # after ingesting one matching merchant row (ts below request ts),
+    # that merchant resolves and the others keep the default
+    store.ingest_table(
+        "merchants",
+        dict(
+            merchant=np.array([1], np.int32),
+            ts=np.array([50], np.int32),
+            risk=np.array([0.25], np.float32),
+        ),
+    )
+    out = store.query(req)
+    np.testing.assert_allclose(
+        np.asarray(out["risk"]), [-7.0, 0.25, -7.0]
+    )
+    # rows newer than the request ts stay invisible (point-in-time)
+    store.ingest_table(
+        "merchants",
+        dict(
+            merchant=np.array([2], np.int32),
+            ts=np.array([500], np.int32),
+            risk=np.array([0.9], np.float32),
+        ),
+    )
+    out = store.query(req)
+    np.testing.assert_allclose(
+        np.asarray(out["risk"]), [-7.0, 0.25, -7.0]
+    )
+
+
+def test_lineage_sql_and_tables():
+    credit = last_join(Col("limit"), "accounts", on="acct")
+    view = FeatureView(
+        "lin",
+        features={
+            "util": w_sum(Col("amount"), range_window(100), union=("wires",))
+            / credit,
+            "tc": last_join(TableCol("accounts", "limit"), "accounts", on="acct"),
+        },
+        database=DB,
+    )
+    assert view.tables == ["tx", "wires", "accounts"]
+    lin = view.lineage()["util"]
+    assert lin["tables"] == ["tx", "wires", "accounts"]
+    assert "accounts.limit" in lin["columns"]
+    assert lin["joins"] == [
+        {"table": "accounts", "on": "acct", "default": 0.0}
+    ]
+    assert lin["windows"][0]["union"] == ["wires"]
+    sql = lin["sql"]
+    assert "UNION wires" in sql
+    assert "LAST JOIN accounts" in sql
+    assert "accounts.limit" in sql
+
+
+def test_validation_errors():
+    # union windows must be RANGE
+    with pytest.raises(ValueError, match="RANGE"):
+        w_sum(Col("a"), rows_window(10), union=("wires",))
+    # non-composable agg over a union
+    with pytest.raises(ValueError, match="not supported over WINDOW UNION"):
+        WindowAgg(
+            Agg.TOPN_FREQ, Col("a"), range_window(10), union=("wires",)
+        )
+    # no windows inside join args, no joins inside window args
+    with pytest.raises(ValueError, match="row-level"):
+        last_join(w_sum(Col("a"), range_window(10)), "wires", on="acct")
+    with pytest.raises(ValueError, match="LAST JOIN"):
+        w_sum(last_join(Col("a"), "wires", on="acct"), range_window(10))
+    # views must only reference tables present in their database
+    with pytest.raises(KeyError):
+        FeatureView(
+            "bad",
+            features={"f": last_join(Col("x"), "nope", on="acct")},
+            database=DB,
+        )
+    # a TableCol naming a different table inside a LAST JOIN arg
+    with pytest.raises(ValueError, match="joined table only"):
+        last_join(TableCol("accounts", "limit"), "merchants", on="merchant")
+    # a TableCol outside any LAST JOIN has no table context
+    with pytest.raises(ValueError, match="outside a LAST JOIN"):
+        FeatureView(
+            "stray",
+            features={"f": TableCol("wires", "amount") + 1.0},
+            database=DB,
+        )
+    # joining/unioning the primary table itself is unanswerable online
+    with pytest.raises(ValueError, match="primary table"):
+        FeatureView(
+            "selfjoin",
+            features={"f": last_join(Col("amount"), "tx", on="acct")},
+            database=DB,
+        )
+    with pytest.raises(ValueError, match="primary table"):
+        FeatureView(
+            "selfunion",
+            features={"f": w_sum(Col("amount"), range_window(10), union=("tx",))},
+            database=DB,
+        )
+    # schema-only views still work and synthesize a database
+    v = FeatureView("ok", DB.primary, {"f": Col("amount")})
+    assert v.database.primary is DB.primary
+    assert v.tables == ["tx"]
+    # an equal-but-distinct schema object is accepted alongside a database
+    schema_copy = TableSchema(
+        "tx", key="acct", ts="ts", numeric=("amount", "merchant")
+    )
+    v2 = FeatureView("ok2", schema_copy, {"f": Col("amount")}, database=DB)
+    assert v2.database is DB
+    # a genuinely different schema is rejected
+    with pytest.raises(ValueError, match="must equal"):
+        FeatureView(
+            "bad2", TableSchema("other", key="k", ts="ts"), {}, database=DB
+        )

@@ -1,0 +1,150 @@
+"""FeatureRegistry (version history, deploy records, JSON export) and the
+serving layer's padding-mask handling."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Col,
+    FeatureRegistry,
+    FeatureView,
+    OnlineFeatureStore,
+    TableSchema,
+    range_window,
+    w_count,
+    w_mean,
+    w_sum,
+)
+from repro.serve.service import BatchScheduler, FeatureService
+
+SCHEMA = TableSchema(
+    name="tx", key="uid", ts="ts", numeric=("amount",)
+)
+
+
+def make_view(version_features=None):
+    feats = {"s": w_sum(Col("amount"), range_window(600))}
+    feats.update(version_features or {})
+    return FeatureView("fraud", SCHEMA, feats)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_version_history_evolve_and_versions():
+    reg = FeatureRegistry()
+    v1 = reg.register(make_view())
+    v2 = reg.register(
+        v1.evolve({"m": w_mean(Col("amount"), range_window(600))}, "add mean")
+    )
+    v3 = reg.register(v2.evolve({"c": w_count(Col("amount"), range_window(60))}))
+    assert reg.versions("fraud") == [1, 2, 3]
+    # every historical version stays retrievable, unmutated
+    assert set(reg.get("fraud", 1).features) == {"s"}
+    assert set(reg.get("fraud", 2).features) == {"s", "m"}
+    assert set(reg.get("fraud").features) == {"s", "m", "c"}  # latest
+    assert reg.get("fraud", 2).description == "add mean"
+    assert v3.version == 3
+    # re-registering an existing (name, version) is an error
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(make_view())
+
+
+def test_deploy_records():
+    reg = FeatureRegistry()
+    reg.register(make_view())
+    reg.register(
+        reg.get("fraud").evolve(
+            {"m": w_mean(Col("amount"), range_window(600))}
+        )
+    )
+    rec = reg.deploy("svc_a", "fraud", description="canary")
+    assert rec["view"] == "fraud"
+    assert rec["version"] == 2  # defaults to latest
+    assert rec["features"] == ["s", "m"]
+    assert rec["tables"] == ["tx"]
+    assert rec["description"] == "canary"
+    assert rec["deployed_at"] > 0
+    # pinned deployment of an older version
+    rec1 = reg.deploy("svc_b", "fraud", version=1)
+    assert rec1["version"] == 1
+    assert reg.service("svc_b")["features"] == ["s"]
+    # deploy events are logged
+    kinds = [e["kind"] for e in reg._events]
+    assert kinds.count("deploy") == 2
+    assert kinds.count("register_view") == 2
+
+
+def test_to_json_roundtrip():
+    reg = FeatureRegistry()
+    reg.register(make_view())
+    reg.register(
+        reg.get("fraud").evolve(
+            {"m": w_mean(Col("amount"), range_window(600))}
+        )
+    )
+    reg.deploy("svc", "fraud")
+    doc = json.loads(reg.to_json())
+    assert {v["version"] for v in doc["views"]} == {1, 2}
+    v2 = next(v for v in doc["views"] if v["version"] == 2)
+    assert v2["name"] == "fraud"
+    assert v2["table"] == "tx"
+    assert v2["tables"] == ["tx"]
+    assert set(v2["features"]) == {"s", "m"}
+    assert v2["features"]["s"].startswith("SELECT sum(amount) OVER")
+    assert doc["services"]["svc"]["view"] == "fraud"
+    assert doc["services"]["svc"]["version"] == 2
+
+
+# ---------------------------------------------------------------------------
+# serving: BatchScheduler padding mask
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_pads_and_masks():
+    sched = BatchScheduler(buckets=(1, 4, 16))
+    for i in range(3):
+        sched.submit({"uid": i, "ts": 10 + i, "amount": 1.0})
+    batch = sched.next_batch()
+    assert len(batch["uid"]) == 4  # padded to the bucket
+    assert batch["__valid__"].tolist() == [True, True, True, False]
+    # padding repeats the last real row
+    assert batch["uid"][3] == batch["uid"][2]
+    assert sched.next_batch() is None
+
+
+def test_service_does_not_ingest_padding_rows():
+    view = FeatureView(
+        "svc_view", SCHEMA,
+        {"cnt": w_count(Col("amount"), range_window(600))},
+    )
+    store = OnlineFeatureStore(view, num_keys=8)
+    svc = FeatureService("svc", view, store)
+
+    sched = BatchScheduler(buckets=(4,))
+    for i in range(3):
+        sched.submit({"uid": i, "ts": 100, "amount": 10.0})
+    batch = sched.next_batch()
+    out = svc.request(batch)
+    assert len(out["cnt"]) == 4  # full padded batch is answered
+    assert svc.stats.requests == 3  # but only real rows are counted
+
+    # the padding row duplicated uid=2; with the mask honored, uid=2 must
+    # have exactly ONE ingested row => a later query counts 1 (+ request)
+    probe = {
+        "uid": np.array([2], np.int32),
+        "ts": np.array([200], np.int32),
+        "amount": np.array([1.0], np.float32),
+    }
+    res = svc.request(probe, ingest=False)
+    assert float(res["cnt"][0]) == 2.0  # 1 stored + the request row
+
+    # stripping __valid__ must also happen when ingest=False
+    sched.submit({"uid": 5, "ts": 300, "amount": 2.0})
+    b2 = sched.next_batch()
+    res2 = svc.request(b2, ingest=False)
+    assert len(res2["cnt"]) == 4
