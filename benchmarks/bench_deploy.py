@@ -19,6 +19,7 @@ import time
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit
 from repro.core import (
     Col, FeatureRegistry, FeatureView, OfflineEngine, OnlineFeatureStore,
@@ -33,7 +34,8 @@ NUM_CARDS = 64
 
 def run() -> None:
     rng = np.random.default_rng(3)
-    cols, _ = fraud_stream(rng, ROWS, num_cards=NUM_CARDS, t_max=100_000)
+    cols, _ = fraud_stream(rng, common.scaled(ROWS, 400), num_cards=NUM_CARDS,
+                           t_max=100_000)
     registry = FeatureRegistry()
     engine = OfflineEngine()
 

@@ -15,15 +15,17 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, timeit
 from repro.core import Col, FeatureView, OnlineFeatureStore, range_window, w_sum
 from repro.data.synthetic import RECO_SCHEMA, reco_stream
 
-N = 4096
 NUM_USERS = 256
 
 
 def run() -> None:
+    N = common.scaled(4096, 512)
+    rows_single = common.scaled(64, 8)
     rng = np.random.default_rng(1)
     view = FeatureView(
         name="reco_min",
@@ -53,12 +55,13 @@ def run() -> None:
     one = {c: v[:1] for c, v in rows.items()}
 
     def row_at_a_time():
-        for i in range(64):
+        for i in range(rows_single):
             store2.ingest({c: v[i:i + 1] for c, v in rows.items()})
         return store2.state.ring.cursor
 
     t2 = timeit(row_at_a_time, warmup=1, iters=3)
-    emit("ingest", "row_at_a_time_rows_per_s", 64 / t2["median_s"], "rows/s")
+    emit("ingest", "row_at_a_time_rows_per_s", rows_single / t2["median_s"],
+         "rows/s")
     emit(
         "ingest", "vipshop_required_rows_per_s", 720e6 / 86400, "rows/s",
         "720M orders/day sustained",

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, timeit
 from repro.core import (
     Col, FeatureView, OfflineEngine, OnlineFeatureStore,
@@ -75,9 +76,10 @@ def single_table_view() -> FeatureView:
 
 
 def run() -> None:
+    hist_rows = common.scaled(HIST_ROWS, 800)
     rng = np.random.default_rng(7)
     tables = multitable_stream(
-        rng, HIST_ROWS, num_accounts=NUM_ACCOUNTS,
+        rng, hist_rows, num_accounts=NUM_ACCOUNTS,
         num_merchants=NUM_MERCHANTS, t_max=T_MAX,
     )
     tx = tables["transactions"]
@@ -89,11 +91,11 @@ def run() -> None:
     # -- offline throughput ---------------------------------------------------
     engine.compute(view, tx, secondary)  # warm/compile
     r = timeit(lambda: engine.compute(view, tx, secondary))
-    emit("join", "offline_rows_per_s", HIST_ROWS / r["median_s"], "rows/s",
+    emit("join", "offline_rows_per_s", hist_rows / r["median_s"], "rows/s",
          "4-table view: 2 LAST JOIN + 2 WINDOW UNION")
     engine.compute(base, tx, secondary)
     rb = timeit(lambda: engine.compute(base, tx, secondary))
-    emit("join", "offline_rows_per_s_single_table", HIST_ROWS / rb["median_s"],
+    emit("join", "offline_rows_per_s_single_table", hist_rows / rb["median_s"],
          "rows/s", "same windows; no joins/unions")
     emit("join", "offline_multitable_overhead",
          r["median_s"] / rb["median_s"], "x")

@@ -1,0 +1,108 @@
+"""Sharded serving plane: throughput + tail latency vs shard count.
+
+The paper's serving claims (<20 ms at QPS > 1000) scale in production by
+partitioning online state across nodes (OpenMLDB's partitioned tables).
+This bench measures the reproduction's :class:`ShardedOnlineStore` on the
+8-feature fraud view at shard counts {1, 2, 4, 8}: request throughput and
+p50/p95/p99 batch latency from the service's tail-latency stats, plus an
+exactness gate (every shard count must answer bit-identically to S=1).
+
+True multi-device CPU numbers need forced host devices *before* jax
+initializes:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m benchmarks.bench_shard
+
+With fewer devices the mesh falls back (several shards per device) and
+the bench still runs — throughput then measures routing overhead, not
+parallel speedup; the emitted ``devices`` note says which one you got.
+"""
+
+from __future__ import annotations
+
+import sys
+
+if __name__ == "__main__":
+    from repro.hostdevices import force_host_devices
+
+    force_host_devices(8)
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit
+from benchmarks.bench_feature_latency import fraud_view
+from repro.core import ShardedOnlineStore
+from repro.data.synthetic import fraud_stream
+from repro.serve.service import FeatureService, ServiceStats
+
+SHARD_COUNTS = (1, 2, 4, 8)
+NUM_CARDS = 256
+T_MAX = 200_000
+
+
+def run() -> None:
+    hist_rows = common.scaled(20_000, 1_500)
+    q = common.scaled(256, 32)
+    n_batches = common.scaled(48, 3)
+
+    rng = np.random.default_rng(0)
+    hist, _ = fraud_stream(rng, hist_rows, num_cards=NUM_CARDS, t_max=T_MAX)
+    order = np.lexsort((hist["ts"], hist["card"]))
+    hist_sorted = {c: v[order] for c, v in hist.items()}
+    view = fraud_view()
+
+    def req_batch(r):
+        return {
+            "card": r.integers(0, NUM_CARDS, q).astype(np.int32),
+            "ts": np.full(q, T_MAX + 1, np.int32),
+            "amount": r.gamma(1.5, 60.0, q).astype(np.float32),
+            "mcc": r.integers(0, 32, q).astype(np.int32),
+            "device": r.integers(0, 8, q).astype(np.int32),
+            "geo": r.integers(0, 16, q).astype(np.int32),
+        }
+
+    probe = req_batch(np.random.default_rng(1))
+    ref = None
+    emit("shard", "devices", len(jax.devices()), "devices")
+    for s_count in SHARD_COUNTS:
+        store = ShardedOnlineStore(
+            view,
+            num_keys=NUM_CARDS,
+            num_shards=s_count,
+            capacity=256,
+            num_buckets=512,
+            bucket_size=64,
+        )
+        store.ingest(hist_sorted)
+        svc = FeatureService(f"fraud_s{s_count}", view, store)
+
+        # exactness gate: all shard counts agree bit-for-bit
+        out = svc.request(probe, ingest=False)
+        if ref is None:
+            ref = out
+        else:
+            for f in view.features:
+                np.testing.assert_array_equal(out[f], ref[f])
+
+        svc.stats = ServiceStats()  # drop the compile-latency sample
+        r = np.random.default_rng(2)
+        for _ in range(n_batches):
+            svc.request(req_batch(r), ingest=False)
+        st = svc.stats
+        qps = st.requests / max(st.total_latency_s, 1e-9)
+        mesh = store.mesh.devices.size
+        emit("shard", f"s{s_count}_qps", qps, "req/s", f"mesh={mesh}dev")
+        emit("shard", f"s{s_count}_p50_ms", st.p50_ms, "ms")
+        emit("shard", f"s{s_count}_p95_ms", st.p95_ms, "ms")
+        emit("shard", f"s{s_count}_p99_ms", st.p99_ms, "ms")
+    emit(
+        "shard", "batch_size", q, "rows",
+        "exactness gate: all shard counts bit-identical",
+    )
+
+
+if __name__ == "__main__":
+    run()
+    print("bench_shard done", file=sys.stderr)

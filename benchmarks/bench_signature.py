@@ -13,14 +13,17 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import emit, timeit
 from repro.core.signature import multi_hash_ids, signature_ids
 from repro.kernels.signature.ops import signature_embed
 
-N = 1 << 14
+N = 1 << 14  # full size; smoke shrinks in run()
 
 
 def run() -> None:
+    global N
+    N = common.scaled(1 << 14, 1 << 11)
     rng = np.random.default_rng(6)
     cols2 = [rng.integers(0, 1 << 20, N).astype(np.int32) for _ in range(2)]
     cols3 = [rng.integers(0, 1 << 20, N).astype(np.int32) for _ in range(3)]

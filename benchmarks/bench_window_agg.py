@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, timeit
 from repro.core import Col, FeatureView, OnlineFeatureStore, range_window, w_sum
 from repro.data.synthetic import FRAUD_SCHEMA, fraud_stream
@@ -25,7 +26,10 @@ Q = 64
 
 def run() -> None:
     rng = np.random.default_rng(5)
-    for w_size, n_hist in [(1_000, 4_000), (10_000, 8_000), (100_000, 16_000)]:
+    sweep = [(1_000, 4_000), (10_000, 8_000), (100_000, 16_000)]
+    if common.SMOKE:
+        sweep = [(1_000, 600)]
+    for w_size, n_hist in sweep:
         # pre-agg granularity scales with the window (the paper's long-
         # window insight): ~128 partials per window keeps the merge O(1)-ish
         bucket = max(64, w_size // 128)
@@ -61,14 +65,14 @@ def run() -> None:
     )
     from repro.core.expr import Agg, rows_window as _rw
 
-    N = 8192
+    N = common.scaled(8192, 1024)
     cols, _ = fraud_stream(rng, N, num_cards=NUM_CARDS, t_max=1 << 20)
     skey, sts, samt, _ = sort_by_key_ts(
         jnp.asarray(cols["card"], jnp.int32), jnp.asarray(cols["ts"], jnp.int32),
         jnp.asarray(cols["amount"]),
     )
 
-    for W in (16, 128, 1024):
+    for W in (16,) if common.SMOKE else (16, 128, 1024):
         @jax.jit
         def naive_w(k, x):
             # per row, gather the previous W rows and mask same-key window
@@ -99,7 +103,8 @@ def run() -> None:
         name="wagg_k", schema=FRAUD_SCHEMA,
         features={"s": w_sum(Col("amount"), range_window(2048, bucket=64))},
     )
-    cols, _ = fraud_stream(rng, 2_000, num_cards=32, t_max=8_192)
+    cols, _ = fraud_stream(rng, common.scaled(2_000, 600), num_cards=32,
+                           t_max=8_192)
     order = np.lexsort((cols["ts"], cols["card"]))
     store = OnlineFeatureStore(view, num_keys=32, capacity=256,
                                num_buckets=64, bucket_size=64)

@@ -1,4 +1,10 @@
-"""Shared benchmark plumbing: timing, CSV row emission, result registry."""
+"""Shared benchmark plumbing: timing, CSV row emission, result registry.
+
+``--smoke`` mode (set by benchmarks.run, used by scripts/ci.sh): every
+bench runs at tiny N with one timing rep — numbers are meaningless, but
+the scripts execute end to end on every CI run so they cannot silently
+rot.  Benches opt their sizes in via :func:`scaled`.
+"""
 
 from __future__ import annotations
 
@@ -10,6 +16,19 @@ import numpy as np
 
 RESULTS: List[Dict] = []
 
+SMOKE = False
+
+
+def set_smoke(on: bool = True) -> None:
+    """Enable smoke mode (tiny sizes, single rep) process-wide."""
+    global SMOKE
+    SMOKE = bool(on)
+
+
+def scaled(full: int, smoke: int) -> int:
+    """Pick a problem size: ``full`` normally, ``smoke`` under --smoke."""
+    return smoke if SMOKE else full
+
 
 def block(x):
     return jax.tree.map(
@@ -20,6 +39,8 @@ def block(x):
 
 def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> Dict[str, float]:
     """Median wall time of ``fn()`` (which must block on its own result)."""
+    if SMOKE:
+        warmup, iters = min(warmup, 1), 1
     for _ in range(warmup):
         block(fn())
     ts = []

@@ -2,6 +2,10 @@
 
   python -m benchmarks.run            # all feature/system benches + roofline
   python -m benchmarks.run --only feature_latency
+  python -m benchmarks.run --smoke    # CI: tiny N, one rep, no roofline
+
+Multi-device CPU (the shard bench wants 8 shards = 8 devices):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m benchmarks.run
 """
 
 from __future__ import annotations
@@ -10,6 +14,7 @@ import argparse
 import time
 import traceback
 
+from benchmarks import common
 from benchmarks.common import emit, header
 
 BENCHES = [
@@ -21,6 +26,7 @@ BENCHES = [
     "consistency",       # §2 offline/online verification
     "signature",         # §1 trillion-dim signatures
     "join",              # §1 multi-table plane: LAST JOIN + WINDOW UNION
+    "shard",             # sharded serving plane: throughput vs shard count
 ]
 
 
@@ -28,7 +34,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI mode: tiny sizes, one rep per timing, skip roofline",
+    )
     args = ap.parse_args()
+    if args.smoke:
+        common.set_smoke(True)
 
     header()
     failures = []
@@ -45,7 +57,7 @@ def main() -> None:
             emit(name, "FAILED", 0, "", str(e)[:120].replace(",", ";"))
             traceback.print_exc()
 
-    if not args.skip_roofline and not args.only:
+    if not args.skip_roofline and not args.only and not args.smoke:
         from benchmarks import roofline
         roofline.run()
 

@@ -1,7 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verification entrypoint: run the repo's test suite exactly as the
-# roadmap specifies.  Usage: scripts/ci.sh [extra pytest args]
+# roadmap specifies, then the benchmark suite in --smoke mode (tiny N, one
+# rep) so benchmark scripts cannot silently rot.
+# Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+# the sharded serving plane (tests + bench_shard) wants a multi-device CPU
+# platform; respect an explicit user-provided device count
+if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ ${XLA_FLAGS}}"
+fi
+python -m pytest -x -q "$@"
+python -m benchmarks.run --smoke

@@ -30,4 +30,5 @@ from repro.core.storage import Database, RowCodec, TableSchema  # noqa: F401
 from repro.core.view import FeatureRegistry, FeatureView, render_sql  # noqa: F401
 from repro.core.engine import OfflineEngine  # noqa: F401
 from repro.core.online import OnlineFeatureStore  # noqa: F401
+from repro.core.shard import ShardedOnlineStore, make_shard_mesh  # noqa: F401
 from repro.core.consistency import ConsistencyReport, verify_view  # noqa: F401

@@ -86,8 +86,15 @@ def verify_view(
     engine: Optional[OfflineEngine] = None,
     secondary: Optional[Dict[str, Dict[str, np.ndarray]]] = None,
     secondary_num_keys: Optional[Dict[str, int]] = None,
+    num_shards: Optional[int] = None,
 ) -> ConsistencyReport:
     """Run the full offline-vs-online verification for one view.
+
+    ``num_shards`` replays against a
+    :class:`~repro.core.shard.ShardedOnlineStore` of that many shards
+    instead of the single-device store — the sharded serving plane must
+    satisfy the *same* offline↔online contract, and its answers are
+    bit-identical to the single store's, so one tolerance serves both.
 
     Multi-table views pass their secondary tables via ``secondary``
     ({table: {col: (M,) array}}).  The replay then interleaves ingest
@@ -110,9 +117,10 @@ def verify_view(
         for k, v in engine.compute(view, columns, secondary).items()
     }
 
-    store = OnlineFeatureStore(
+    store = OnlineFeatureStore.create(
         view,
         num_keys=num_keys,
+        num_shards=num_shards,
         capacity=capacity,
         num_buckets=num_buckets,
         bucket_size=bucket_size,
@@ -187,5 +195,5 @@ def verify_view(
         max_rel_err=max_rel,
         per_feature=per_feature,
         passed=ok,
-        mode=mode,
+        mode=mode if num_shards is None else f"{mode}/shards={num_shards}",
     )

@@ -162,18 +162,29 @@ class OnlineFeatureStore:
         self._ljoin_order: List[Tuple] = list(self.ljoins.keys())
         self._lane_exprs: List[Expr] = []
         self._lane_of: Dict[Tuple, int] = {}
-        for wa in self.waggs.values():
+        # union waggs whose *primary-stream* part can compose from bucket
+        # pre-aggregates (secondary parts always answer from raw rings)
+        self._union_preagg: Dict[Tuple, bool] = {}
+        for wk, wa in self.waggs.items():
             ak = wa.arg.key
             if ak not in self._lane_of:
                 self._lane_of[ak] = len(self._lane_exprs)
                 self._lane_exprs.append(wa.arg)
-            if wa.window.mode == "range" and not wa.union:
+            if wa.window.mode == "range":
                 need = wa.window.size // bucket_size + 2
-                if need > num_buckets:
+                if not wa.union and need > num_buckets:
                     raise ValueError(
                         f"window {wa.window.size} needs {need} buckets of "
                         f"{bucket_size}, store has {num_buckets}"
                     )
+                self._union_preagg[wk] = bool(
+                    wa.union
+                    and need <= num_buckets
+                    and (
+                        wa.agg in self._COMPOSABLE
+                        or wa.agg == Agg.DISTINCT_APPROX
+                    )
+                )
         self.num_lanes = max(len(self._lane_exprs), 1)
 
         # -- secondary-table plane (LAST JOIN + WINDOW UNION sources) --------
@@ -202,6 +213,10 @@ class OnlineFeatureStore:
                 sec_lane(t, wa.arg)
                 if t not in self._union_tables:
                     self._union_tables += (t,)
+        # which secondary tables are key-partitioned (set by ShardedOnlineStore
+        # before first trace); partitioned union rings are gathered at the
+        # shard-local request key, replicated ones at the global key
+        self._sec_sharded: Dict[str, bool] = {t: False for t in self._sec_names}
         # request-time join-key columns (primary columns named by LAST JOINs)
         self._join_cols: Tuple[str, ...] = ()
         for lj in self.ljoins.values():
@@ -351,6 +366,9 @@ class OnlineFeatureStore:
             )
         else:
             lanes = jnp.zeros((n, 1), jnp.float32)
+        self._sec_ingest_padded(table, key, ts, lanes)
+
+    def _sec_ingest_padded(self, table: str, key, ts, lanes) -> None:
         key, ts, lanes = self._pad_batch(
             key, ts, lanes, self.secondary_num_keys[table]
         )
@@ -372,11 +390,20 @@ class OnlineFeatureStore:
 
     # -- secondary-state lookups ---------------------------------------------
 
-    def _union_gathers(self, state, key):
+    def _union_gathers(self, state, key, gkey):
         """Gather each union table's ring at the request key (shared across
-        every union wagg touching that table)."""
+        every union wagg touching that table).
+
+        ``key`` is the primary-store key (shard-local in a
+        :class:`~repro.core.shard.ShardedOnlineStore`), ``gkey`` the global
+        key: key-partitioned union rings hold local ids, replicated ones
+        global ids.  For the single-device store both are the same array.
+        """
         return {
-            t: st.ring_gather(state.sec[self._sec_index[t]], key)
+            t: st.ring_gather(
+                state.sec[self._sec_index[t]],
+                key if self._sec_sharded.get(t) else gkey,
+            )
             for t in self._union_tables
         }
 
@@ -457,19 +484,14 @@ class OnlineFeatureStore:
         first, then each union table's ring, all masked by the same
         ``_window_mask`` range rule."""
         parts = [(g, self._window_mask(wa, ts_buf, valid, ts_q))]
-        for t in wa.union:
-            ts_t, lanes_t, valid_t = sec_gathers[t]
-            g_t = lanes_t[..., self._sec_lane_of[t][wa.arg.key]]
-            parts.append(
-                (g_t, self._window_mask(wa, ts_t, valid_t, ts_q))
-            )
+        parts.extend(self._union_sec_parts(wa, ts_q, sec_gathers))
         return parts
 
     # -- naive path ------------------------------------------------------------------
 
-    def _query_pure_naive(self, state, key, ts_q, req_lanes, join_keys):
+    def _query_pure_naive(self, state, key, ts_q, req_lanes, join_keys, gkey):
         ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
-        sec_gathers = self._union_gathers(state, key)
+        sec_gathers = self._union_gathers(state, key, gkey)
         out = []
         for wk in self._wagg_order:
             wa = self.waggs[wk]
@@ -531,11 +553,16 @@ class OnlineFeatureStore:
 
     _COMPOSABLE = (Agg.SUM, Agg.COUNT, Agg.MEAN, Agg.MIN, Agg.MAX, Agg.STD)
 
-    def _query_pure_preagg(self, state, key, ts_q, req_lanes, join_keys):
-        """Two-level composition for RANGE windows with composable aggs;
-        everything else (incl. union windows) falls back inline."""
+    def _query_pure_preagg(self, state, key, ts_q, req_lanes, join_keys, gkey):
+        """Two-level composition for RANGE windows with composable aggs.
+
+        Union windows with a materialized primary lane compose their
+        *primary-stream* part from the same bucket pre-aggregates; only the
+        union tables' parts come from raw secondary rings.  ROWS windows and
+        non-composable aggs fall back inline.
+        """
         ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
-        sec_gathers = self._union_gathers(state, key)
+        sec_gathers = self._union_gathers(state, key, gkey)
         B = jnp.int32(self.bucket_size)
         nb = self.num_buckets
         bucket_buf = ts_buf // B
@@ -546,7 +573,7 @@ class OnlineFeatureStore:
             lane = self._lane_of[wa.arg.key]
             g = lanes_buf[..., lane]
             r = req_lanes[:, lane]
-            if wa.union:
+            if wa.union and not self._union_preagg.get(wk):
                 parts = self._union_parts(
                     wa, ts_buf, valid, ts_q, g, sec_gathers
                 )
@@ -587,7 +614,13 @@ class OnlineFeatureStore:
                 acc = _or_reduce(bits, 1) | pg.row_bitmap(r)
                 mb = state.bagg.bitmap[key[:, None], slots, lane]
                 mb = jnp.where(ok, mb, jnp.int32(0))
-                out.append(_bitmap_estimate(acc | _or_reduce(mb, 1)))
+                acc = acc | _or_reduce(mb, 1)
+                for g_t, m_t in self._union_sec_parts(
+                    wa, ts_q, sec_gathers
+                ):
+                    bt = jnp.where(m_t, pg.row_bitmap(g_t), jnp.int32(0))
+                    acc = acc | _or_reduce(bt, 1)
+                out.append(_bitmap_estimate(acc))
                 continue
 
             s_raw = jnp.stack(
@@ -608,15 +641,88 @@ class OnlineFeatureStore:
             ident = pg.stats_identity(ms.shape[:-1])
             ms = jnp.where(ok[..., None], ms, ident)
             s_all = pg.combine_stats(s_raw, _fold_stats(ms))
+            for g_t, m_t in self._union_sec_parts(wa, ts_q, sec_gathers):
+                mf = m_t.astype(jnp.float32)
+                s_t = jnp.stack(
+                    [
+                        jnp.sum(g_t * mf, axis=1),
+                        jnp.sum(mf, axis=1),
+                        jnp.min(jnp.where(m_t, g_t, pg.POS_INF), axis=1),
+                        jnp.max(jnp.where(m_t, g_t, pg.NEG_INF), axis=1),
+                        jnp.sum(g_t * g_t * mf, axis=1),
+                    ],
+                    axis=-1,
+                )
+                s_all = pg.combine_stats(s_all, s_t)
             out.append(_finalize(wa.agg, s_all))
         out.extend(self._last_join_vals(state, ts_q, join_keys))
         return tuple(out)
+
+    def _union_sec_parts(self, wa, ts_q, sec_gathers):
+        """Masked (g, m) buffers for a union window's *secondary* parts."""
+        parts = []
+        for t in wa.union:
+            ts_t, lanes_t, valid_t = sec_gathers[t]
+            g_t = lanes_t[..., self._sec_lane_of[t][wa.arg.key]]
+            parts.append((g_t, self._window_mask(wa, ts_t, valid_t, ts_q)))
+        return parts
 
     def _max_mid(self, wa: WindowAgg) -> int:
         """Static bound on middle-bucket count for a window."""
         return max(1, min(self.num_buckets, wa.window.size // self.bucket_size + 1))
 
     # -- public query ---------------------------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        view,
+        *,
+        num_keys: int,
+        num_shards: Optional[int] = None,
+        **store_kwargs,
+    ) -> "OnlineFeatureStore":
+        """Factory shared by every deployment path (services, verify_view):
+        a single-device store, or a :class:`~repro.core.shard.
+        ShardedOnlineStore` when ``num_shards`` is given."""
+        if num_shards is not None:
+            from repro.core.shard import ShardedOnlineStore
+
+            return ShardedOnlineStore(
+                view, num_keys=num_keys, num_shards=num_shards, **store_kwargs
+            )
+        return OnlineFeatureStore(view, num_keys=num_keys, **store_kwargs)
+
+    def _validate_join_cols(self, columns: Dict[str, jnp.ndarray]) -> None:
+        for c in self._join_cols:
+            if c not in columns:
+                raise KeyError(
+                    f"request rows must carry join-key column {c!r} "
+                    f"(LAST JOIN on {c!r} in view {self.view.name!r})"
+                )
+
+    def _request_arrays(self, columns: Dict[str, jnp.ndarray]):
+        """(key, ts, lanes, join_keys) request tensors, join cols validated."""
+        self._validate_join_cols(columns)
+        key = jnp.asarray(columns[self.schema.key], jnp.int32)
+        ts_q = jnp.asarray(columns[self.schema.ts], jnp.int32)
+        req_lanes = self._lanes(columns)
+        join_keys = tuple(
+            jnp.asarray(columns[c], jnp.int32) for c in self._join_cols
+        )
+        return key, ts_q, req_lanes, join_keys
+
+    def _finish_query(
+        self, columns, vals
+    ) -> Dict[str, jnp.ndarray]:
+        """Pre-agg answers -> named features via row-level post-expressions."""
+        pre_values = dict(
+            zip(self._wagg_order + self._ljoin_order, vals)
+        )
+        out: Dict[str, jnp.ndarray] = {}
+        for fname, fexpr in self.view.features.items():
+            out[fname] = eval_rowlevel(fexpr, columns, pre_values)
+        return out
 
     def query(
         self, columns: Dict[str, jnp.ndarray], mode: str = "preagg"
@@ -626,18 +732,7 @@ class OnlineFeatureStore:
         columns: raw request columns incl. key, ts, and any LAST JOIN key
         columns; (Q,) each.  Returns {feature_name: (Q,) f32}.
         """
-        key = jnp.asarray(columns[self.schema.key], jnp.int32)
-        ts_q = jnp.asarray(columns[self.schema.ts], jnp.int32)
-        req_lanes = self._lanes(columns)
-        for c in self._join_cols:
-            if c not in columns:
-                raise KeyError(
-                    f"request rows must carry join-key column {c!r} "
-                    f"(LAST JOIN on {c!r} in view {self.view.name!r})"
-                )
-        join_keys = tuple(
-            jnp.asarray(columns[c], jnp.int32) for c in self._join_cols
-        )
+        key, ts_q, req_lanes, join_keys = self._request_arrays(columns)
         fn = self._query_naive_fn if mode == "naive" else self._query_preagg_fn
         # pad the request to a power-of-two shape bucket (compilation
         # caching: one executable per bucket, not per request size)
@@ -655,17 +750,11 @@ class OnlineFeatureStore:
                 jnp.concatenate([j, jnp.broadcast_to(j[-1], (pad,))])
                 for j in join_keys
             )
-            vals = fn(self.state, key_p, ts_p, lanes_p, jk_p)
+            vals = fn(self.state, key_p, ts_p, lanes_p, jk_p, key_p)
             vals = tuple(v[:q] for v in vals)
         else:
-            vals = fn(self.state, key, ts_q, req_lanes, join_keys)
-        pre_values = dict(
-            zip(self._wagg_order + self._ljoin_order, vals)
-        )
-        out: Dict[str, jnp.ndarray] = {}
-        for fname, fexpr in self.view.features.items():
-            out[fname] = eval_rowlevel(fexpr, columns, pre_values)
-        return out
+            vals = fn(self.state, key, ts_q, req_lanes, join_keys, key)
+        return self._finish_query(columns, vals)
 
 
 def _fold_stats(ms: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,362 @@
+"""Sharded online serving plane — key-partitioned feature state on a mesh.
+
+FeatInsight's production numbers (100+ scenarios, trillion-dimensional
+feature spaces, millisecond updates) rest on OpenMLDB partitioning online
+table state across nodes; managed feature stores make the same
+partitioned-online-store split their core architecture.  This module is
+that layer for the JAX reproduction: a :class:`ShardedOnlineStore` holds
+one :class:`~repro.core.online.OnlineState` *per shard* — ring + bucket
+pre-aggregates + secondary rings, stacked on a leading ``shard`` axis and
+laid out over a 1-D device mesh with ``NamedSharding`` — and answers
+batched requests with one compiled program vmapped over shards (GSPMD
+partitions it; per-shard compute never crosses devices).
+
+Partitioning scheme
+-------------------
+* **Primary state** is partitioned by deterministic key routing:
+  ``shard = key % S``, ``local = key // S``.  Modulo routing keeps the
+  local id space dense (ring tables stay ``ceil(K/S)`` keys per shard),
+  is invertible, and balances contiguous id spaces.
+* **Union-stream tables** share the primary key space (see
+  :class:`~repro.core.storage.Database`), so tables referenced *only* by
+  WINDOW UNIONs are partitioned the same way — their rows live on the
+  shard that answers their key's requests.
+* **LAST JOIN targets** are *replicated* on every shard (the classic
+  dimension-table strategy): join keys are arbitrary request columns, so
+  a lookup must succeed locally on whichever shard owns the request row.
+  A table used both as a join target and a union stream is replicated.
+
+Request path (the router's dataflow; see :mod:`repro.serve.router`):
+rows are bucketed by shard on the host, padded to a shared power-of-two
+per-shard shape bucket (compilation caching: one executable per bucket),
+executed as one fused sharded query, and scattered back to request order.
+
+Equality contract: every answer is **bit-identical** to the single-device
+:class:`~repro.core.online.OnlineFeatureStore` under the same ingest
+stream — per-key ring and bucket state depend only on that key's rows
+and their order, both of which routing preserves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.expr import (
+    collect_last_joins,
+    collect_tables,
+    collect_window_aggs,
+)
+from repro.core.online import OnlineFeatureStore
+
+__all__ = [
+    "RoutePlan",
+    "build_route",
+    "make_shard_mesh",
+    "ShardedOnlineStore",
+]
+
+
+def make_shard_mesh(num_shards: int, devices=None) -> Mesh:
+    """1-D ``('shard',)`` mesh over the largest divisor of ``num_shards``
+    that the platform can supply (falls back to fewer devices — a 2-device
+    box still runs an 8-shard store, two shards per device; one device
+    runs everything, which is also the CI path without forced devices)."""
+    devices = list(devices) if devices is not None else jax.devices()
+    n = 1
+    for d in range(min(num_shards, len(devices)), 0, -1):
+        if num_shards % d == 0:
+            n = d
+            break
+    return Mesh(np.array(devices[:n]), ("shard",))
+
+
+@dataclasses.dataclass
+class RoutePlan:
+    """Host-side routing of one request/ingest batch across shards.
+
+    ``idx[s]`` holds the batch row indices owned by shard ``s`` (in batch
+    order, so per-key row order is preserved); ``bucket`` is the padded
+    per-shard batch size (shared power-of-two shape bucket).
+    """
+
+    idx: List[np.ndarray]
+    bucket: int
+
+    @property
+    def counts(self) -> np.ndarray:
+        return np.array([len(ix) for ix in self.idx], np.int64)
+
+
+def build_route(
+    shard: np.ndarray, num_shards: int, min_bucket: int = 16
+) -> RoutePlan:
+    """Bucket batch rows by shard id and pick the padded shape bucket."""
+    shard = np.asarray(shard)
+    idx = [np.nonzero(shard == s)[0] for s in range(num_shards)]
+    longest = max((len(ix) for ix in idx), default=0)
+    bucket = max(min_bucket, 1 << max(longest - 1, 0).bit_length())
+    return RoutePlan(idx=idx, bucket=bucket)
+
+
+class ShardedOnlineStore(OnlineFeatureStore):
+    """Drop-in :class:`OnlineFeatureStore` whose state is key-partitioned
+    across ``num_shards`` shards on a JAX device mesh.
+
+    Same public API (``ingest`` / ``ingest_table`` / ``query``), same
+    answers bit-for-bit; ``FeatureService`` and ``verify_view`` accept it
+    unchanged.  ``num_keys`` / ``secondary_num_keys`` are *global* key
+    counts; per-shard tables are sized ``ceil(K/S)``.
+    """
+
+    def __init__(
+        self,
+        view,  # repro.core.view.FeatureView
+        num_keys: int,
+        num_shards: int = 1,
+        capacity: int = 256,
+        num_buckets: int = 64,
+        bucket_size: int = 64,
+        secondary_num_keys: Optional[Dict[str, int]] = None,
+        secondary_capacity: Optional[int] = None,
+        mesh: Optional[Mesh] = None,
+    ):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        S = int(num_shards)
+        self.num_shards = S
+        self.global_num_keys = int(num_keys)
+
+        # table placement (must precede super().__init__, which sizes rings):
+        # union-only tables are key-partitioned like the primary, join
+        # targets (incl. dual-use tables) are replicated on every shard
+        exprs = list(view.features.values())
+        join_tables = {
+            lj.table for lj in collect_last_joins(exprs).values()
+        }
+        union_tables = set()
+        for wa in collect_window_aggs(exprs).values():
+            union_tables.update(wa.union)
+        sharded_sec = union_tables - join_tables
+
+        g_nk = dict(secondary_num_keys or {})
+        self.global_secondary_num_keys = {
+            t: int(g_nk.get(t, num_keys)) for t in collect_tables(exprs)
+        }
+        eff_sec_nk = {
+            t: -(-g // S) if t in sharded_sec else g
+            for t, g in self.global_secondary_num_keys.items()
+        }
+
+        super().__init__(
+            view,
+            num_keys=-(-int(num_keys) // S),
+            capacity=capacity,
+            num_buckets=num_buckets,
+            bucket_size=bucket_size,
+            secondary_num_keys=eff_sec_nk,
+            secondary_capacity=secondary_capacity,
+        )
+        for t in sharded_sec:
+            self._sec_sharded[t] = True
+
+        self.mesh = mesh if mesh is not None else make_shard_mesh(S)
+        self.sharding = NamedSharding(self.mesh, P("shard"))
+        # stack S identical fresh per-shard states, partition over the mesh
+        self.state = jax.device_put(
+            jax.tree.map(lambda x: jnp.stack([x] * S), self.state),
+            self.sharding,
+        )
+        # one compiled executable per path, vmapped over the shard axis;
+        # GSPMD splits it across mesh devices (no cross-shard collectives
+        # in the body — results gather only when fetched to host)
+        self._ingest_fn = jax.jit(
+            jax.vmap(self._ingest_pure), donate_argnums=(0,)
+        )
+        self._sec_ingest_fns = {
+            t: jax.jit(
+                jax.vmap(functools.partial(self._sec_ingest_pure, index=i)),
+                donate_argnums=(0,),
+            )
+            for t, i in self._sec_index.items()
+        }
+        self._query_naive_fn = jax.jit(jax.vmap(self._query_pure_naive))
+        self._query_preagg_fn = jax.jit(jax.vmap(self._query_pure_preagg))
+
+    # -- routing ---------------------------------------------------------------
+
+    def shard_of(
+        self, key: np.ndarray, upper: Optional[int] = None
+    ) -> np.ndarray:
+        """Deterministic key -> shard id (host-side).
+
+        Out-of-range keys are rejected: the single-device store clamps
+        them (gather semantics), the sharded store would land on a
+        *different* key's state after `% S` routing — silently breaking
+        the bit-identical contract — so fail loudly instead.
+        """
+        key = np.asarray(key)
+        upper = self.global_num_keys if upper is None else upper
+        if key.size and (key.min() < 0 or key.max() >= upper):
+            raise ValueError(
+                f"key out of range [0, {upper}): "
+                f"[{key.min()}, {key.max()}] (sharded stores cannot clamp "
+                "without routing to another key's shard)"
+            )
+        return key % self.num_shards
+
+    def _put(self, x: np.ndarray) -> jnp.ndarray:
+        return jax.device_put(jnp.asarray(x), self.sharding)
+
+    def _route_rows(
+        self,
+        plan: RoutePlan,
+        arr: np.ndarray,
+        pad: str = "repeat",
+        sentinel: int = 0,
+    ) -> np.ndarray:
+        """Scatter (N, ...) batch rows into a padded (S, bucket, ...) grid.
+
+        ``pad='repeat'`` repeats the shard's last real row (query padding:
+        harmless read-only recompute, sliced off on scatter-back);
+        ``pad='sentinel'`` fills the key column with an out-of-range id so
+        every state scatter drops the padding (ingest padding).
+        """
+        arr = np.asarray(arr)
+        S, B = self.num_shards, plan.bucket
+        out = np.zeros((S, B) + arr.shape[1:], arr.dtype)
+        if pad == "sentinel":
+            out[...] = sentinel
+        for s, ix in enumerate(plan.idx):
+            n = len(ix)
+            if not n:
+                continue
+            out[s, :n] = arr[ix]
+            if n < B and pad == "repeat":
+                out[s, n:] = arr[ix[-1]]
+        return out
+
+    def _scatter_back(
+        self, plan: RoutePlan, vals: Tuple[jnp.ndarray, ...], q: int
+    ) -> Tuple[np.ndarray, ...]:
+        """(S, bucket) per-shard answers -> (Q,) in request order."""
+        outs = []
+        for v in vals:
+            vh = np.asarray(v)
+            o = np.zeros((q,), vh.dtype)
+            for s, ix in enumerate(plan.idx):
+                o[ix] = vh[s, : len(ix)]
+            outs.append(o)
+        return tuple(outs)
+
+    # -- ingest ----------------------------------------------------------------
+
+    def _ingest_padded(self, key, ts, lanes) -> None:
+        """Route one fused (key, ts)-sorted chunk across shards.
+
+        Per-shard subsets of a sorted batch stay sorted (k1 < k2 with
+        k1 == k2 (mod S) implies k1//S < k2//S), and a chunk satisfying the
+        bucket-span constraint still satisfies it shard-locally.
+        """
+        key_h, ts_h = np.asarray(key), np.asarray(ts)
+        plan = build_route(
+            self.shard_of(key_h), self.num_shards, min_bucket=64
+        )
+        k = self._route_rows(
+            plan, key_h // self.num_shards, pad="sentinel",
+            sentinel=self.num_keys,
+        )
+        t = self._route_rows(plan, ts_h, pad="repeat")
+        l = self._route_rows(plan, np.asarray(lanes), pad="sentinel")
+        self.state = self._ingest_fn(
+            self.state, self._put(k), self._put(t), self._put(l)
+        )
+
+    def _sec_ingest_padded(self, table: str, key, ts, lanes) -> None:
+        S = self.num_shards
+        if self._sec_sharded[table]:
+            key_h = np.asarray(key)
+            plan = build_route(
+                self.shard_of(
+                    key_h, upper=self.global_secondary_num_keys[table]
+                ),
+                S,
+                min_bucket=64,
+            )
+            k = self._route_rows(
+                plan, key_h // S, pad="sentinel",
+                sentinel=self.secondary_num_keys[table],
+            )
+            t = self._route_rows(plan, np.asarray(ts), pad="repeat")
+            l = self._route_rows(plan, np.asarray(lanes), pad="sentinel")
+        else:
+            # replicated dimension table: identical fused scatter on every
+            # shard keeps each replica bit-identical to the single store
+            key, ts, lanes = self._pad_batch(
+                key, ts, lanes, self.secondary_num_keys[table]
+            )
+            k, t, l = (
+                np.broadcast_to(np.asarray(x), (S,) + x.shape)
+                for x in (key, ts, lanes)
+            )
+        self.state = self._sec_ingest_fns[table](
+            self.state, self._put(k), self._put(t), self._put(l)
+        )
+
+    # -- query -----------------------------------------------------------------
+
+    def query(
+        self, columns: Dict[str, jnp.ndarray], mode: str = "preagg"
+    ) -> Dict[str, jnp.ndarray]:
+        """Route the request across shards, answer with the fused sharded
+        query, scatter back to request order (same contract as the base
+        store: {feature_name: (Q,) f32} in input row order).
+
+        Routing happens on the host straight from the request columns
+        (normally numpy already); only the routed (S, bucket) grids are
+        uploaded — no device round-trip on the latency-critical path.
+        """
+        self._validate_join_cols(columns)
+        key_h = np.asarray(columns[self.schema.key]).astype(
+            np.int32, copy=False
+        )
+        ts_h = np.asarray(columns[self.schema.ts]).astype(np.int32, copy=False)
+        lanes_h = np.asarray(self._lanes(columns))
+        q = int(key_h.shape[0])
+        plan = build_route(
+            self.shard_of(key_h), self.num_shards, min_bucket=16
+        )
+        gkey_r = self._route_rows(plan, key_h, pad="repeat")
+        fn = self._query_naive_fn if mode == "naive" else self._query_preagg_fn
+        vals = fn(
+            self.state,
+            self._put(gkey_r // self.num_shards),           # local key
+            self._put(self._route_rows(plan, ts_h, pad="repeat")),
+            self._put(self._route_rows(plan, lanes_h, pad="repeat")),
+            tuple(
+                self._put(
+                    self._route_rows(
+                        plan,
+                        np.asarray(columns[c]).astype(np.int32, copy=False),
+                        pad="repeat",
+                    )
+                )
+                for c in self._join_cols
+            ),
+            self._put(gkey_r),                              # global key
+        )
+        return self._finish_query(
+            columns, self._scatter_back(plan, vals, q)
+        )
+
+    # -- observability ---------------------------------------------------------
+
+    def shard_row_counts(self) -> np.ndarray:
+        """Total primary rows ever ingested per shard (from ring cursors)."""
+        return np.asarray(self.state.ring.cursor).sum(axis=1)

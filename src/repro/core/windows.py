@@ -110,40 +110,81 @@ def window_start_range(
 # ---------------------------------------------------------------------------
 
 
-def _segment_prefix_sum(x: jnp.ndarray, seg_start: jnp.ndarray) -> jnp.ndarray:
+def _two_sum(a: jnp.ndarray, b: jnp.ndarray):
+    """Knuth TwoSum: s + err == a + b exactly (err is the rounding error)."""
+    s = a + b
+    bb = s - a
+    err = (a - (s - bb)) + (b - bb)
+    return s, err
+
+
+def _df_add(a_hi, a_lo, b_hi, b_lo):
+    """Double-float (hi, lo) addition — associative to O(eps^2)."""
+    s, err = _two_sum(a_hi, b_hi)
+    lo = err + a_lo + b_lo
+    hi, lo = _two_sum(s, lo)
+    return hi, lo
+
+
+def _segment_prefix_sum(
+    x: jnp.ndarray, seg_start: jnp.ndarray, compensated: bool = True
+):
     """Inclusive prefix sum restarting at each key segment.
 
-    Restarting bounds f32 accumulation error by per-key magnitudes rather
-    than whole-table magnitudes.  Residual contract: windowed SUM/STD carry
-    absolute error ~ eps * (per-key prefix magnitude); STD additionally
-    sqrt-amplifies near zero (single-row windows may read as ~1e-1 instead
-    of 0 for value scales ~1e2).  The online engine's direct masked sums
-    are tighter; consistency comparisons are therefore scale-aware
-    (see consistency.verify_view).
+    Restarting bounds accumulation error by per-key magnitudes rather than
+    whole-table magnitudes, and each prefix is carried as an unevaluated
+    compensated (hi, lo) double-float pair combined with TwoSum, so the
+    residual error is O(eps^2 * per-key prefix magnitude) — small enough
+    that STD's sqrt near zero no longer amplifies prefix noise into
+    visible error (plain f32 prefixes put single-row windows at ~1e-1
+    instead of 0 for value scales ~1e2).  Returns the (hi, lo) pair;
+    consume with :func:`_range_sum`.
+
+    ``compensated=False`` skips the second scan lane for inputs whose
+    prefixes are exact in f32 anyway (COUNT: small integers), returning
+    (prefix, zeros).
     """
     n = x.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
     is_start = idx == seg_start
+    xf = x.astype(jnp.float32)
+
+    if not compensated:
+        def comb1(a, b):
+            flag_a, val_a = a
+            flag_b, val_b = b
+            return flag_a | flag_b, jnp.where(flag_b, val_b, val_a + val_b)
+
+        _, out = jax.lax.associative_scan(comb1, (is_start, xf))
+        return out, jnp.zeros_like(out)
 
     def comb(a, b):
-        flag_a, val_a = a
-        flag_b, val_b = b
-        return flag_a | flag_b, jnp.where(flag_b, val_b, val_a + val_b)
+        flag_a, hi_a, lo_a = a
+        flag_b, hi_b, lo_b = b
+        hi, lo = _df_add(hi_a, lo_a, hi_b, lo_b)
+        return (
+            flag_a | flag_b,
+            jnp.where(flag_b, hi_b, hi),
+            jnp.where(flag_b, lo_b, lo),
+        )
 
-    _, out = jax.lax.associative_scan(
-        comb, (is_start, x.astype(jnp.float32))
+    _, hi, lo = jax.lax.associative_scan(
+        comb, (is_start, xf, jnp.zeros_like(xf))
     )
-    return out
+    return hi, lo
 
 
 def _range_sum(
-    ps: jnp.ndarray, j: jnp.ndarray, i: jnp.ndarray, seg_start: jnp.ndarray
+    ps, j: jnp.ndarray, i: jnp.ndarray, seg_start: jnp.ndarray
 ) -> jnp.ndarray:
-    """sum over rows [j, i] given segment-restarted inclusive prefix sums."""
-    left = jnp.where(
-        j > seg_start, ps[jnp.maximum(j - 1, 0)], 0.0
-    )
-    return ps[i] - left
+    """sum over rows [j, i] given segment-restarted compensated prefixes."""
+    hi, lo = ps
+    take = j > seg_start
+    jm = jnp.maximum(j - 1, 0)
+    left_hi = jnp.where(take, hi[jm], 0.0)
+    left_lo = jnp.where(take, lo[jm], 0.0)
+    # subtract hi parts first (they cancel), then fold in the compensations
+    return (hi[i] - left_hi) + (lo[i] - left_lo)
 
 
 class _SparseTable:
@@ -297,7 +338,9 @@ def windowed_aggregate(
         return table_cache[ck]
 
     out: Dict[Tuple, jnp.ndarray] = {}
-    count_ps = _segment_prefix_sum(jnp.ones((n_rows,), jnp.float32), seg)
+    count_ps = _segment_prefix_sum(
+        jnp.ones((n_rows,), jnp.float32), seg, compensated=False
+    )
 
     for rk, (agg, arr, w, nth) in requests.items():
         j = start_of(w)

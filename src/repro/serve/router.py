@@ -1,0 +1,100 @@
+"""Sharded serving front-end — routing + micro-batching over shard meshes.
+
+The serving plane's request dataflow (FeatInsight's online engine, scaled
+out the way OpenMLDB partitions online table state across nodes):
+
+    submit(row) ──> BatchScheduler          (coalesce: max_batch / max_wait_us)
+        │
+        ▼ next_batch()  — padded shape bucket + __valid__ mask
+    FeatureService.request
+        │
+        ▼ ShardedOnlineStore.query          (one fused program on the mesh)
+        │     host: bucket rows by shard = key % S, pad each shard's rows
+        │     to a shared power-of-two bucket, device_put with
+        │     NamedSharding('shard'); device: vmapped per-shard query
+        │     (ring + bucket pre-agg + secondary rings, zero cross-shard
+        │     collectives); host: scatter answers back to request order
+        ▼
+    per-request feature rows (submission order)
+
+:class:`ShardRouter` owns that loop and the serving-side observability:
+per-shard request occupancy (skew monitoring) and the service's latency
+percentiles.  It is store-agnostic — a single-device store degrades to
+S=1 — so services opt into sharding purely via
+``FeatureService.build(..., sharded=True)``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.service import BatchScheduler, FeatureService
+
+__all__ = ["ShardRouter"]
+
+
+class ShardRouter:
+    """Micro-batching front-end for a (sharded) feature service.
+
+    ``pump()`` moves one batch through the pipeline; ``drain()`` pumps
+    until the queue is empty (flushing any open coalescing window).
+    Responses come back as per-request feature rows in submission order.
+    """
+
+    def __init__(
+        self,
+        service: FeatureService,
+        scheduler: Optional[BatchScheduler] = None,
+        ingest: bool = True,
+    ):
+        self.service = service
+        self.scheduler = scheduler if scheduler is not None else BatchScheduler()
+        self.ingest = ingest
+        self.num_shards = int(getattr(service.store, "num_shards", 1))
+        # per-shard request counts — the serving-skew histogram
+        self.shard_requests = np.zeros(self.num_shards, np.int64)
+
+    def submit(self, row: Dict, now_us: Optional[int] = None) -> None:
+        self.scheduler.submit(row, now_us=now_us)
+
+    def pump(
+        self, now_us: Optional[int] = None, flush: bool = False
+    ) -> Optional[Dict[str, np.ndarray]]:
+        """Serve one coalesced batch; None if nothing is ready yet."""
+        batch = self.scheduler.next_batch(now_us=now_us, flush=flush)
+        if batch is None:
+            return None
+        valid = np.asarray(batch["__valid__"], bool)
+        out = self.service.request(batch, ingest=self.ingest)
+        key_col = self.service.view.schema.key
+        store = self.service.store
+        if hasattr(store, "shard_of"):
+            shard = store.shard_of(np.asarray(batch[key_col])[valid])
+            self.shard_requests += np.bincount(
+                shard, minlength=self.num_shards
+            )
+        else:
+            self.shard_requests[0] += int(valid.sum())
+        return {k: np.asarray(v)[valid] for k, v in out.items()}
+
+    def drain(
+        self, now_us: Optional[int] = None
+    ) -> Optional[Dict[str, np.ndarray]]:
+        """Flush everything queued; concatenated rows in submission order."""
+        outs: List[Dict[str, np.ndarray]] = []
+        while True:
+            got = self.pump(now_us=now_us, flush=True)
+            if got is None:
+                break
+            outs.append(got)
+        if not outs:
+            return None
+        return {
+            k: np.concatenate([o[k] for o in outs]) for k in outs[0]
+        }
+
+    def shard_histogram(self) -> np.ndarray:
+        """Requests served per shard (copy)."""
+        return self.shard_requests.copy()

@@ -1,0 +1,12 @@
+"""Force a multi-device CPU platform for the whole suite.
+
+The sharded serving plane (repro.core.shard) partitions online state over
+a ('shard',) device mesh; its tests must see several devices to exercise
+real NamedSharding layouts.  conftest imports before any test module, so
+this is the one place early enough to set the flag (a user-supplied
+XLA_FLAGS with an explicit device count is respected).
+"""
+
+from repro.hostdevices import force_host_devices
+
+force_host_devices(8)

@@ -188,6 +188,56 @@ def test_multitable_consistency(mode):
     assert rep.passed, rep.summary()
 
 
+def test_union_window_uses_bucket_preagg():
+    """Union windows with a materialized primary lane must route their
+    primary-stream part through the bucket pre-agg path (ROADMAP known
+    limit closed) and still verify against the offline engine; oversized
+    windows fall back to raw rings instead of raising."""
+    rng = np.random.default_rng(5)
+    tx, sec = make_tables(rng, n=400)
+    amt = Col("amount")
+    w1 = range_window(300, bucket=64)
+    view = FeatureView(
+        "upa",
+        features={
+            "s": w_sum(amt, w1, union=("wires",)),
+            "m": w_mean(amt, w1, union=("wires",)),
+            "sd": w_std(amt, w1, union=("wires",)),
+        },
+        database=DB,
+    )
+    store = OnlineFeatureStore(
+        view, num_keys=K, num_buckets=64, bucket_size=64
+    )
+    # every union wagg of this view composes its primary part from buckets
+    assert store._union_preagg and all(store._union_preagg.values())
+
+    rep = verify_view(
+        view, tx, num_keys=K, secondary=sec, mode="preagg",
+        num_buckets=64, bucket_size=64,
+    )
+    assert rep.passed, rep.summary()
+
+    # a window too long for the bucket ring falls back (no capacity error)
+    wide = FeatureView(
+        "upa_wide",
+        features={
+            "s": w_sum(amt, range_window(64 * 64 * 2, bucket=64),
+                       union=("wires",)),
+        },
+        database=DB,
+    )
+    wide_store = OnlineFeatureStore(
+        wide, num_keys=K, num_buckets=64, bucket_size=64
+    )
+    assert not any(wide_store._union_preagg.values())
+    rep = verify_view(
+        wide, tx, num_keys=K, secondary=sec, mode="preagg",
+        num_buckets=64, bucket_size=64,
+    )
+    assert rep.passed, rep.summary()
+
+
 def test_online_last_join_default_when_no_match():
     view = FeatureView(
         "d",

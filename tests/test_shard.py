@@ -1,0 +1,309 @@
+"""Sharded online serving plane: routing invariance + consistency.
+
+The contract under test (ISSUE 2 acceptance): for random multi-table
+streams, a ShardedOnlineStore's answers — any shard count, any ingest
+interleaving — are **exactly** equal (bit-for-bit, not approximately) to
+the single-device OnlineFeatureStore's under the same stream, and the
+sharded replay passes the offline↔online verification.  Runs multi-device
+via conftest's ``--xla_force_host_platform_device_count=8``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    Col,
+    Database,
+    FeatureView,
+    OnlineFeatureStore,
+    ShardedOnlineStore,
+    TableSchema,
+    last_join,
+    range_window,
+    rows_window,
+    w_count,
+    w_distinct_approx,
+    w_max,
+    w_mean,
+    w_std,
+    w_sum,
+)
+from repro.core.consistency import replay_rounds, verify_view
+from repro.core.shard import build_route, make_shard_mesh
+
+K = 16
+NM = 4
+
+DB = Database(
+    name="mt",
+    primary=TableSchema(
+        "tx", key="acct", ts="ts", numeric=("amount", "merchant")
+    ),
+    secondary=(
+        TableSchema("wires", key="acct", ts="ts", numeric=("amount",)),
+        TableSchema("accounts", key="acct", ts="ts", numeric=("limit",)),
+        TableSchema("merchants", key="merchant", ts="ts", numeric=("risk",)),
+    ),
+)
+
+
+def multi_table_view() -> FeatureView:
+    amt = Col("amount")
+    w1 = range_window(300, bucket=64)
+    credit = last_join(Col("limit"), "accounts", on="acct", default=500.0)
+    return FeatureView(
+        "sharded_mtv",
+        features={
+            "limit": credit,
+            "mrisk": last_join(
+                Col("risk"), "merchants", on="merchant", default=0.5
+            ),
+            "out_sum": w_sum(amt, w1, union=("wires",)),
+            "out_cnt": w_count(amt, w1, union=("wires",)),
+            "out_std": w_std(amt, w1, union=("wires",)),
+            "util": w_sum(amt, w1, union=("wires",)) / credit,
+            "plain": w_mean(amt, w1),
+            "mx": w_max(amt, w1),
+            "r5": w_count(amt, rows_window(5)),
+            "uniq": w_distinct_approx(Col("merchant"), w1),
+        },
+        database=DB,
+    )
+
+
+def make_tables(rng, n=240, t_max=2_000):
+    ts = np.sort(rng.choice(t_max, size=n, replace=False)).astype(np.int32)
+    tx = dict(
+        acct=rng.integers(0, K, n).astype(np.int32),
+        ts=ts,
+        amount=rng.gamma(2.0, 10.0, n).astype(np.float32),
+        merchant=rng.integers(0, NM, n).astype(np.int32),
+    )
+    m = n // 2
+    wires = dict(
+        acct=rng.integers(0, K, m).astype(np.int32),
+        ts=np.sort(rng.integers(0, t_max, m)).astype(np.int32),
+        amount=rng.gamma(2.0, 10.0, m).astype(np.float32),
+    )
+    accounts = dict(
+        acct=np.concatenate([np.arange(K), rng.integers(0, K, K)]).astype(
+            np.int32
+        ),
+        ts=np.concatenate([np.zeros(K), rng.integers(1, t_max, K)]).astype(
+            np.int32
+        ),
+        limit=rng.uniform(100.0, 1000.0, 2 * K).astype(np.float32),
+    )
+    merchants = dict(
+        merchant=np.arange(NM).astype(np.int32),
+        ts=np.zeros(NM, np.int32),
+        risk=rng.random(NM).astype(np.float32),
+    )
+    return tx, {"wires": wires, "accounts": accounts, "merchants": merchants}
+
+
+def _bykey(d, kc):
+    o = np.lexsort((d["ts"], d[kc]))
+    return {c: v[o] for c, v in d.items()}
+
+
+def _ingest_stream(store, tx, sec, chunks):
+    """Interleave primary/secondary ingest in ``chunks`` pieces each."""
+    for piece in np.array_split(np.arange(len(sec["wires"]["ts"])), chunks):
+        if len(piece):
+            store.ingest_table(
+                "wires",
+                _bykey({c: v[piece] for c, v in sec["wires"].items()}, "acct"),
+            )
+    store.ingest_table("accounts", _bykey(sec["accounts"], "acct"))
+    store.ingest_table("merchants", _bykey(sec["merchants"], "merchant"))
+    for piece in np.array_split(np.arange(len(tx["ts"])), chunks):
+        if len(piece):
+            store.ingest(_bykey({c: v[piece] for c, v in tx.items()}, "acct"))
+
+
+def test_multiple_devices_available():
+    """conftest must have forced the multi-device CPU platform."""
+    assert len(jax.devices()) >= 8
+
+
+def test_build_route_shapes():
+    shard = np.array([0, 1, 0, 2, 0, 1])
+    plan = build_route(shard, 4, min_bucket=2)
+    assert [list(ix) for ix in plan.idx] == [[0, 2, 4], [1, 5], [3], []]
+    assert plan.bucket == 4  # longest=3 -> pow2 -> 4
+    assert list(plan.counts) == [3, 2, 1, 0]
+
+
+def test_mesh_divisor_fallback():
+    # 8 devices: 8 shards -> 8-way mesh; 3 shards -> 3-way; 5 -> 5-way
+    assert make_shard_mesh(8).devices.size == 8
+    assert make_shard_mesh(3).devices.size == 3
+    assert make_shard_mesh(16).devices.size == 8  # 16 % 8 == 0
+
+
+@pytest.mark.parametrize(
+    "mode,num_shards",
+    [("naive", 1), ("preagg", 1), ("naive", 3), ("preagg", 8)],
+)
+def test_shard_invariance_multitable(mode, num_shards):
+    """Property: sharded answers == single-device answers, bit-for-bit,
+    for a 4-table view (LAST JOIN + WINDOW UNION), replayed round by
+    round with interleaved ingest."""
+    rng = np.random.default_rng(100 + num_shards)
+    tx, sec = make_tables(rng)
+    view = multi_table_view()
+    kw = dict(num_keys=K, capacity=128, secondary_num_keys={"merchants": NM})
+    single = OnlineFeatureStore(view, **kw)
+    shard = ShardedOnlineStore(view, num_shards=num_shards, **kw)
+
+    # preload the secondary tables, then replay the primary stream in
+    # query-then-ingest rounds (the live-service pattern)
+    for t in ("wires", "accounts", "merchants"):
+        kc = DB.table(t).key
+        for s in (single, shard):
+            s.ingest_table(t, _bykey(sec[t], kc))
+
+    key, ts = tx["acct"], tx["ts"]
+    for idx in replay_rounds(key, ts):
+        batch = {c: v[idx] for c, v in tx.items()}
+        a = single.query(batch, mode=mode)
+        b = shard.query(batch, mode=mode)
+        for f in view.features:
+            np.testing.assert_array_equal(
+                np.asarray(a[f]),
+                np.asarray(b[f]),
+                err_msg=f"shards={num_shards} mode={mode} feature={f}",
+            )
+        srt = _bykey(batch, "acct")
+        single.ingest(srt)
+        shard.ingest(srt)
+
+
+@pytest.mark.parametrize("chunks_a,chunks_b", [(1, 5)])
+def test_shard_invariance_ingest_interleaving(chunks_a, chunks_b):
+    """Property: for the SAME ingest interleaving, sharded == single
+    exactly — under several different chunkings of the same stream."""
+    rng = np.random.default_rng(42)
+    tx, sec = make_tables(rng, n=200)
+    view = multi_table_view()
+    kw = dict(num_keys=K, capacity=128, secondary_num_keys={"merchants": NM})
+    req = dict(
+        acct=rng.integers(0, K, 33).astype(np.int32),
+        ts=np.full(33, 3_000, np.int32),
+        amount=rng.gamma(2.0, 10.0, 33).astype(np.float32),
+        merchant=rng.integers(0, NM, 33).astype(np.int32),
+    )
+    for chunks in (chunks_a, chunks_b):
+        single = OnlineFeatureStore(view, **kw)
+        shard = ShardedOnlineStore(view, num_shards=4, **kw)
+        _ingest_stream(single, tx, sec, chunks)
+        _ingest_stream(shard, tx, sec, chunks)
+        for mode in ("naive", "preagg"):
+            a = single.query(req, mode=mode)
+            b = shard.query(req, mode=mode)
+            for f in view.features:
+                np.testing.assert_array_equal(
+                    np.asarray(a[f]),
+                    np.asarray(b[f]),
+                    err_msg=f"chunks={chunks} mode={mode} feature={f}",
+                )
+
+
+@pytest.mark.parametrize("mode", ["naive", "preagg"])
+def test_verify_view_sharded(mode):
+    """Acceptance: the sharded replay passes offline↔online verification
+    on a multi-table view (LAST JOIN + WINDOW UNION included)."""
+    rng = np.random.default_rng(3)
+    tx, sec = make_tables(rng, n=320)
+    rep = verify_view(
+        multi_table_view(),
+        tx,
+        num_keys=K,
+        secondary=sec,
+        secondary_num_keys={"merchants": NM},
+        mode=mode,
+        num_shards=4,
+    )
+    assert rep.passed, rep.summary()
+    assert "shards=4" in rep.mode
+
+
+def test_secondary_table_placement():
+    """Union-only tables are key-partitioned; join targets replicated."""
+    view = multi_table_view()
+    store = ShardedOnlineStore(
+        view, num_keys=K, num_shards=4,
+        secondary_num_keys={"merchants": NM},
+    )
+    assert store._sec_sharded == {
+        "wires": True, "accounts": False, "merchants": False
+    }
+    # partitioned ring is ceil(K/S) keys per shard, replicated keeps K
+    iw = store._sec_index["wires"]
+    ia = store._sec_index["accounts"]
+    assert store.state.sec[iw].ts.shape[:2] == (4, K // 4)
+    assert store.state.sec[ia].ts.shape[:2] == (4, K)
+
+
+def test_dual_use_table_is_replicated():
+    """A table that is both a union stream and a join target must be
+    replicated (join keys are arbitrary request columns)."""
+    db = Database(
+        name="d",
+        primary=TableSchema("tx", key="k", ts="ts", numeric=("a",)),
+        secondary=(TableSchema("w", key="k", ts="ts", numeric=("a",)),),
+    )
+    view = FeatureView(
+        "dual",
+        features={
+            "u": w_sum(Col("a"), range_window(100), union=("w",)),
+            "j": last_join(Col("a"), "w", on="k"),
+        },
+        database=db,
+    )
+    store = ShardedOnlineStore(view, num_keys=8, num_shards=4)
+    assert store._sec_sharded == {"w": False}
+
+
+def test_out_of_range_key_rejected():
+    """The single store clamps out-of-range keys; the sharded store would
+    route them to a different key's shard, so it must reject them."""
+    view = FeatureView(
+        "oor", DB.primary,
+        {"s": w_sum(Col("amount"), range_window(100))},
+    )
+    store = ShardedOnlineStore(view, num_keys=K, num_shards=4, capacity=64)
+    req = dict(
+        acct=np.array([K], np.int32),  # one past the key space
+        ts=np.array([10], np.int32),
+        amount=np.ones(1, np.float32),
+        merchant=np.zeros(1, np.int32),
+    )
+    with pytest.raises(ValueError, match="out of range"):
+        store.query(req)
+    with pytest.raises(ValueError, match="out of range"):
+        store.ingest(req)
+
+
+def test_shard_row_counts_balance():
+    rng = np.random.default_rng(9)
+    view = FeatureView(
+        "s", DB.primary,
+        {"s": w_sum(Col("amount"), range_window(100))},
+    )
+    store = ShardedOnlineStore(view, num_keys=K, num_shards=4, capacity=64)
+    n = 400
+    tx = dict(
+        acct=rng.integers(0, K, n).astype(np.int32),
+        ts=np.arange(n, dtype=np.int32),
+        amount=np.ones(n, np.float32),
+        merchant=np.zeros(n, np.int32),
+    )
+    store.ingest(_bykey(tx, "acct"))
+    counts = store.shard_row_counts()
+    assert counts.sum() == n
+    # uniform keys => no shard owns everything
+    assert counts.min() > 0
