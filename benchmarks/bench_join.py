@@ -14,10 +14,10 @@ measures what the multi-table plane costs on both engines:
 
 Offline↔online equality is asserted on a replay prefix before timing.
 
-Aggregations are restricted to the prefix-sum family (sum/count/mean/std):
-MIN/MAX windows route through the offline sparse-table primitive whose XLA
-compile is minutes-slow on CPU hosts (pre-existing, see windows._SparseTable)
-and would swamp the join/union signal this bench isolates.
+Aggregations are restricted to the prefix-sum family (sum/count/mean/std)
+so the bench isolates the join/union machinery from the windowed-fold
+primitives (MIN/MAX now compile fine — see bench_window_agg for their
+compile/run split — but add nothing to the join signal).
 """
 
 from __future__ import annotations

@@ -102,6 +102,31 @@ def run() -> None:
         "exactness gate: all shard counts bit-identical",
     )
 
+    # routing skew under an adversarial strided key pattern (all keys
+    # ≡ 0 mod S): raw modulo routing collapses onto one shard, the default
+    # mix64-Feistel hash routing spreads it (ROADMAP open item)
+    S = 8
+    strided = np.arange(0, NUM_CARDS, S, dtype=np.int32)
+    # routing is pure host-side state: a minimal one-feature store exercises
+    # the real shard_of without allocating the fraud view's device state
+    from repro.core import Col, FeatureView, w_sum, range_window
+
+    tiny = FeatureView(
+        "route_probe", view.schema,
+        {"s": w_sum(Col("amount"), range_window(64, bucket=32))},
+    )
+    for flag, name in ((False, "modulo"), (True, "hash")):
+        store = ShardedOnlineStore(
+            tiny, num_keys=NUM_CARDS, num_shards=S, capacity=16,
+            num_buckets=4, bucket_size=32, hash_routing=flag,
+        )
+        counts = np.bincount(store.shard_of(strided), minlength=S)
+        emit(
+            "shard", f"strided_{name}_max_share",
+            counts.max() / counts.sum(), "frac",
+            f"occupied {int((counts > 0).sum())}/{S} shards",
+        )
+
 
 if __name__ == "__main__":
     run()

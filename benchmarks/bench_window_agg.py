@@ -6,11 +6,20 @@ Sweeps the range-window size W and compares per-query work of
                regardless of W, but capacity must cover W), vs
 * ``preagg`` — bucket-merge (O(W/bucket) partials + O(bucket) tail).
 
-Also validates the Pallas kernel (interpret mode) against the jnp oracle
-at each size — the kernel IS the preagg path on TPU.
+Also validates the Pallas kernels (interpret mode) against the jnp oracles
+at each size — the query kernel IS the preagg path on TPU, and the
+segmented-combine kernel the offline MIN/MAX scan — and measures the
+offline MIN/MAX path at N ∈ {5k, 50k} with compile time reported
+*separately* from run time: the old sparse-table formulation compiled
+minutes-slow at N >~ 5k (its chained dynamic gathers blew up XLA), which
+is why this bench previously avoided MIN/MAX entirely.  The doubling-fold
+formulation holds compile to seconds; :func:`compile_budget_check` is the
+CI gate that keeps it there.
 """
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -98,6 +107,36 @@ def run() -> None:
         emit("window_agg", f"offline_engine_W{W}_ms", te["median_s"] * 1e3, "ms",
              "O(N) segmented prefix sum")
 
+    # offline MIN/MAX at N ∈ {5k, 50k}: compile time vs run time.  These
+    # sizes were unusable before the scan-based fold (sparse-table compile
+    # took ~150 s at N=5k on CPU XLA; now ~2 s).
+    for N_mm in (1_000,) if common.SMOKE else (5_000, 50_000):
+        cols, _ = fraud_stream(rng, N_mm, num_cards=NUM_CARDS, t_max=1 << 20)
+        skey, sts, samt, _ = sort_by_key_ts(
+            jnp.asarray(cols["card"], jnp.int32),
+            jnp.asarray(cols["ts"], jnp.int32),
+            jnp.asarray(cols["amount"]),
+        )
+
+        @jax.jit
+        def minmax_w(k, t, x):
+            req = {
+                "mn": (Agg.MIN, x, range_window(1_000), 0),
+                "mx": (Agg.MAX, x, range_window(1_000), 0),
+            }
+            return windowed_aggregate(k, t, req)
+
+        t0 = time.perf_counter()
+        compiled = minmax_w.lower(skey, sts, samt).compile()
+        t_compile = time.perf_counter() - t0
+        t_run = timeit(
+            lambda: jax.block_until_ready(compiled(skey, sts, samt)), iters=5
+        )
+        emit("window_agg", f"offline_minmax_N{N_mm}_compile_s", t_compile,
+             "s", "doubling fold (was ~150s sparse-table at N=5k)")
+        emit("window_agg", f"offline_minmax_N{N_mm}_run_ms",
+             t_run["median_s"] * 1e3, "ms")
+
     # Pallas kernel correctness at one representative size (interpret=True)
     view = FeatureView(
         name="wagg_k", schema=FRAUD_SCHEMA,
@@ -122,6 +161,46 @@ def run() -> None:
     emit("window_agg", "pallas_vs_ref_max_abs_err", err, "abs",
          "interpret=True on CPU; TPU target")
     assert err < 1e-3, err
+
+
+def compile_budget_check(n: int = 5_000, budget_s: float = 30.0) -> float:
+    """CI gate: offline MIN/MAX at N=``n`` must compile within ``budget_s``.
+
+    The seed's sparse-table formulation took ~150 s here; the scan-based
+    fold takes ~2 s.  Asserting the budget keeps the blowup from silently
+    regressing (run by scripts/ci.sh).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.expr import Agg
+    from repro.core.windows import sort_by_key_ts, windowed_aggregate
+
+    rng = np.random.default_rng(0)
+    cols, _ = fraud_stream(rng, n, num_cards=NUM_CARDS, t_max=1 << 20)
+    skey, sts, samt, _ = sort_by_key_ts(
+        jnp.asarray(cols["card"], jnp.int32),
+        jnp.asarray(cols["ts"], jnp.int32),
+        jnp.asarray(cols["amount"]),
+    )
+
+    @jax.jit
+    def minmax_w(k, t, x):
+        req = {
+            "mn": (Agg.MIN, x, range_window(1_000), 0),
+            "mx": (Agg.MAX, x, range_window(1_000), 0),
+        }
+        return windowed_aggregate(k, t, req)
+
+    t0 = time.perf_counter()
+    minmax_w.lower(skey, sts, samt).compile()
+    elapsed = time.perf_counter() - t0
+    assert elapsed < budget_s, (
+        f"offline MIN/MAX at N={n} compiled in {elapsed:.1f}s "
+        f"(budget {budget_s:.0f}s) — the sparse-table compile blowup is back"
+    )
+    print(f"compile_budget_check: N={n} compiled in {elapsed:.1f}s "
+          f"(budget {budget_s:.0f}s)")
+    return elapsed
 
 
 if __name__ == "__main__":

@@ -13,3 +13,6 @@ if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
 fi
 python -m pytest -x -q "$@"
 python -m benchmarks.run --smoke
+# compile-time budget: offline MIN/MAX at N=5k must compile in < 30 s (the
+# seed's sparse-table formulation took ~150 s; keep the blowup dead)
+python -c "from benchmarks.bench_window_agg import compile_budget_check; compile_budget_check(5000, 30.0)"

@@ -26,6 +26,7 @@ from repro.core.expr import (  # noqa: F401
     w_sum,
     w_topn_freq,
 )
+from repro.core.aggregates import AGG_SPECS, AggSpec, agg_spec  # noqa: F401
 from repro.core.storage import Database, RowCodec, TableSchema  # noqa: F401
 from repro.core.view import FeatureRegistry, FeatureView, render_sql  # noqa: F401
 from repro.core.engine import OfflineEngine  # noqa: F401

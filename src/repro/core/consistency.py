@@ -14,7 +14,12 @@ Protocol (request-mode replay):
   3. compare per-feature with fp tolerance (both engines are f32; the
      offline engine uses prefix-sum differences, the online engine direct
      masked sums, so exact bit-equality is not the contract — bounded
-     relative error is).
+     relative error is).  Both sides evaluate the *same* aggregator algebra
+     (one (init, lift, combine, finalize) per Agg in
+     :mod:`repro.core.aggregates`), so the only divergence left is fp
+     association order; aggregates that return raw row values (FIRST, LAST,
+     MIN, MAX, TOPN_FREQ) agree exactly, which the algebra test-suite
+     asserts for the union-composable cases.
 
 The replay is batched by "rounds": rows are grouped so that no key appears
 twice in a round; within a round every query is answered against state that

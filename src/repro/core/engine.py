@@ -17,6 +17,14 @@ distribution".  The TPU/XLA reading of that:
   data mesh axis at key boundaries for multi-host export.
 * *compilation caching* — one jit-compiled executable per (view, version),
   reused across export batches.
+
+Aggregate *semantics* are not defined here: every window aggregation is a
+fold of its :mod:`repro.core.aggregates` monoid spec, evaluated by
+:func:`repro.core.windows.windowed_aggregate`'s scan strategies — the same
+(init, lift, combine, finalize) the online store composes at request time,
+which is what makes the offline export and the serving path provably agree
+(including FIRST/TOPN_FREQ over WINDOW UNION, which fold per-stream
+partial states by merge order).
 """
 
 from __future__ import annotations

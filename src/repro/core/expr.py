@@ -327,11 +327,15 @@ class Signature(Expr):
 
 
 # Aggregations whose union-window composition is implemented by both
-# engines.  FIRST needs a cross-stream oldest-row tie-break and TOPN_FREQ a
-# cross-stream merged tail — neither is supported over unions yet.
+# engines.  Since the unified aggregator algebra (repro.core.aggregates)
+# every registered Agg is union-composable: FIRST carries an argmin-by-
+# merge-order state and TOPN_FREQ a mergeable tail sketch, so per-stream
+# partial states combine across WINDOW UNION streams.  (Kept as an explicit
+# tuple so a future non-composable aggregate fails loudly at construction;
+# tests cross-check it against the registry's union_composable flags.)
 UNION_AGGS = (
     Agg.SUM, Agg.COUNT, Agg.MEAN, Agg.MIN, Agg.MAX, Agg.STD,
-    Agg.DISTINCT_APPROX, Agg.LAST,
+    Agg.DISTINCT_APPROX, Agg.LAST, Agg.FIRST, Agg.TOPN_FREQ,
 )
 
 
@@ -463,8 +467,8 @@ def w_std(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg
     return WindowAgg(Agg.STD, arg, window, union=tuple(union))
 
 
-def w_first(arg: Expr, window: WindowSpec) -> WindowAgg:
-    return WindowAgg(Agg.FIRST, arg, window)
+def w_first(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg:
+    return WindowAgg(Agg.FIRST, arg, window, union=tuple(union))
 
 
 def w_last(arg: Expr, window: WindowSpec, union: Sequence[str] = ()) -> WindowAgg:
@@ -477,10 +481,12 @@ def w_distinct_approx(
     return WindowAgg(Agg.DISTINCT_APPROX, arg, window, union=tuple(union))
 
 
-def w_topn_freq(arg: Expr, window: WindowSpec, n: int = 0) -> WindowAgg:
+def w_topn_freq(
+    arg: Expr, window: WindowSpec, n: int = 0, union: Sequence[str] = ()
+) -> WindowAgg:
     """Approximate top-N frequency: value of the n-th most frequent item in
     the window tail (ties broken by value)."""
-    return WindowAgg(Agg.TOPN_FREQ, arg, window, n=n)
+    return WindowAgg(Agg.TOPN_FREQ, arg, window, n=n, union=tuple(union))
 
 
 # ---------------------------------------------------------------------------

@@ -11,8 +11,9 @@ same signature in both pipelines).
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["mix32", "mix64", "fold_hash"]
+__all__ = ["mix32", "mix64", "fold_hash", "mix32_np", "KeyPermutation"]
 
 _M1 = jnp.int32(-2048144789)   # 0x85ebca6b
 _M2 = jnp.int32(-1028477387)   # 0xc2b2ae35
@@ -62,3 +63,77 @@ def fold_hash(parts, salt: int = 0, bits: int = 20) -> jnp.ndarray:
         acc = h if acc is None else mix64(acc * 31 + h, salt=salt, bits=32)
     assert acc is not None
     return jnp.mod(acc, 2 ** bits).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side mirrors (numpy) — the sharded plane's routing runs on the host
+# straight from request columns, so it must not pay a device dispatch.
+# ---------------------------------------------------------------------------
+
+
+def _np_i32(v: np.ndarray) -> np.ndarray:
+    """Wrap int64 intermediates to signed 32-bit (int32 overflow semantics)."""
+    return ((v + 2**31) % 2**32) - 2**31
+
+
+def mix32_np(x, salt: int = 0) -> np.ndarray:
+    """Bit-exact numpy mirror of :func:`mix32` for int inputs.
+
+    Computed in int64 with explicit 32-bit wrapping — numpy's int32 ops
+    would warn (or differ by platform) on overflow, and jnp dispatch on the
+    serving host's routing path costs more than the hash itself.
+    """
+    h = _np_i32(np.asarray(x, np.int64) ^ (salt & 0x7FFFFFFF))
+    h = _np_i32(h ^ (h >> 16))
+    h = _np_i32(h * -2048144789)            # 0x85ebca6b
+    h = _np_i32(h ^ ((h >> 13) & 0x0007FFFF))
+    h = _np_i32(h * -1028477387)            # 0xc2b2ae35
+    h = _np_i32(h ^ ((h >> 16) & 0x0000FFFF))
+    return h
+
+
+class KeyPermutation:
+    """Deterministic bijection on ``[0, upper)`` — Feistel rounds of the
+    module's mixer, with cycle-walking down to the exact domain.
+
+    The sharded serving plane routes ``shard = perm(key) % S`` so that
+    adversarial or strided key patterns (every key ≡ 0 mod S — the classic
+    failure of raw modulo routing) still spread across shards, while
+    ``local = perm(key) // S`` remains dense and collision-free per shard
+    *because* the map is a bijection: two keys can only share a local id if
+    they land on different shards.
+
+    Stateless and host-side (pure numpy): routing never needs a lookup
+    table, so any router replica — or a recovering one — maps keys
+    identically.
+    """
+
+    def __init__(self, upper: int, rounds: int = 4, salt: int = 0):
+        if upper < 1:
+            raise ValueError(f"permutation domain must be >= 1, got {upper}")
+        self.upper = int(upper)
+        bits = max(2, (self.upper - 1).bit_length())
+        bits += bits & 1  # even split -> balanced Feistel halves
+        self.half = bits // 2
+        self.mask = (1 << self.half) - 1
+        self.size = 1 << bits
+        self.rounds = int(rounds)
+        self.salt = int(salt)
+
+    def _once(self, x: np.ndarray) -> np.ndarray:
+        left = x >> self.half
+        right = x & self.mask
+        for r in range(self.rounds):
+            f = mix32_np(right, salt=self.salt + 0x9E37 * (r + 1)) & self.mask
+            left, right = right, left ^ f
+        return (left << self.half) | right
+
+    def __call__(self, key) -> np.ndarray:
+        """Vectorized permuted ids; walks cycles until back in [0, upper)."""
+        x = np.atleast_1d(np.asarray(key)).astype(np.int64)
+        out = self._once(x)
+        bad = out >= self.upper
+        while bad.any():
+            out[bad] = self._once(out[bad])
+            bad = out >= self.upper
+        return out.reshape(np.shape(key))

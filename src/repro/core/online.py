@@ -7,15 +7,32 @@ then be ingested (deployment-configurable).  Offline↔online consistency
 means: the online answer for row i after ingesting rows 0..i-1 equals the
 offline batch answer at row i.
 
+Every aggregate's semantics come from the one registry in
+:mod:`repro.core.aggregates`; a query is a single generic dataflow:
+
+    lift(request row)
+      ⊕ fold(primary window rows)            [raw ring, or raw boundary
+                                              rows ⊕ bucket states on the
+                                              pre-agg path]
+      ⊕ fold(each union table's window rows) [raw secondary rings]
+    → finalize
+
+where ⊕ is the spec's associative ``combine``.  Because FIRST carries an
+argmin-by-merge-order state and TOPN_FREQ a mergeable tail sketch, *every*
+aggregate composes across WINDOW UNION streams — there are no per-agg
+branches left in this module.
+
 Two query paths (both pure functions, jit-compiled once per view version —
 the paper's "compilation caching"):
 
-* ``naive``  — masked reduction over the raw ring (O(C) per query); the
+* ``naive``  — masked fold over the raw ring (O(C) per query); the
   reproduction of the paper's un-preaggregated baseline.
-* ``preagg`` — two-level composition: raw boundary rows + per-bucket partial
-  aggregates (O(C_boundary + NB)); the paper's long-window optimization.
-  The Pallas kernel in ``repro.kernels.window_agg`` implements this same
-  path with explicit VMEM tiling.
+* ``preagg`` — two-level composition: raw boundary rows + per-bucket
+  partial states (O(C_boundary + NB)); the paper's long-window
+  optimization.  Applies to every spec the bucket store persists
+  (``bucket_composable``).  The Pallas kernel in
+  ``repro.kernels.window_agg`` implements this same path with explicit
+  VMEM tiling.
 
 Window-aggregation *arguments* may be derived expressions; the store
 materializes one lane per distinct argument at ingest (computed columns),
@@ -40,8 +57,8 @@ import jax.numpy as jnp
 
 from repro.core import preagg as pg
 from repro.core import storage as st
+from repro.core.aggregates import agg_spec
 from repro.core.expr import (
-    Agg,
     Expr,
     WindowAgg,
     collect_last_joins,
@@ -49,11 +66,11 @@ from repro.core.expr import (
     collect_window_aggs,
     eval_rowlevel,
 )
-from repro.core.windows import TOPN_TAIL
 
 __all__ = ["OnlineState", "OnlineFeatureStore"]
 
 _TS_MIN = jnp.int32(-2147483648)
+_POS_MAX = jnp.int32(2147483647)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -75,59 +92,6 @@ class OnlineState:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
-
-
-def _or_reduce(x: jnp.ndarray, axis: int) -> jnp.ndarray:
-    return jax.lax.reduce(x, jnp.int32(0), jax.lax.bitwise_or, (axis,))
-
-
-def _finalize(agg: Agg, s: jnp.ndarray) -> jnp.ndarray:
-    """stat vector (..., NUM_STATS) -> scalar feature value."""
-    if agg == Agg.SUM:
-        return s[..., 0]
-    if agg == Agg.COUNT:
-        return s[..., 1]
-    if agg == Agg.MEAN:
-        return s[..., 0] / jnp.maximum(s[..., 1], 1.0)
-    if agg == Agg.MIN:
-        return s[..., 2]
-    if agg == Agg.MAX:
-        return s[..., 3]
-    if agg == Agg.STD:
-        cnt = jnp.maximum(s[..., 1], 1.0)
-        m = s[..., 0] / cnt
-        return jnp.sqrt(jnp.maximum(s[..., 4] / cnt - m * m, 0.0))
-    raise ValueError(agg)
-
-
-def _bitmap_estimate(bits: jnp.ndarray) -> jnp.ndarray:
-    ones = jax.lax.population_count(bits).astype(jnp.float32)
-    frac = jnp.clip(ones / 32.0, 0.0, 1.0 - 1e-6)
-    return -32.0 * jnp.log1p(-frac)
-
-
-def _topn_masked(g: jnp.ndarray, valid: jnp.ndarray, nth: int) -> jnp.ndarray:
-    """n-th most frequent value over masked tail rows.
-
-    g, valid: (Q, T) with slot 0 = most recent.  Identical ranking rule to
-    ``windows._topn_tail`` (freq desc, value asc, first-occurrence dedupe)
-    so offline and online agree on the selected value.
-    """
-    tail = g.shape[1]
-    eq = (g[:, :, None] == g[:, None, :]) & valid[:, :, None] & valid[:, None, :]
-    freq = eq.sum(-1).astype(jnp.float32)
-    freq = jnp.where(valid, freq, -1.0)
-    earlier = jnp.tril(jnp.ones((tail, tail), bool), -1)
-    same_as_earlier = (eq & earlier[None, :, :]).any(-1)
-    is_first = valid & ~same_as_earlier
-    score = jnp.where(is_first, freq, -1.0)
-    vmax = jnp.max(jnp.abs(g), initial=1.0)
-    composite = score * (2.0 * vmax + 1.0) - g
-    order = jnp.argsort(-composite, axis=-1)
-    pick = order[:, nth]
-    picked_score = jnp.take_along_axis(score, pick[:, None], axis=1)[:, 0]
-    val = jnp.take_along_axis(g, pick[:, None], axis=1)[:, 0]
-    return jnp.where(picked_score >= 0.0, val, 0.0)
 
 
 class OnlineFeatureStore:
@@ -180,10 +144,7 @@ class OnlineFeatureStore:
                 self._union_preagg[wk] = bool(
                     wa.union
                     and need <= num_buckets
-                    and (
-                        wa.agg in self._COMPOSABLE
-                        or wa.agg == Agg.DISTINCT_APPROX
-                    )
+                    and agg_spec(wa.agg).bucket_composable
                 )
         self.num_lanes = max(len(self._lane_exprs), 1)
 
@@ -437,235 +398,106 @@ class OnlineFeatureStore:
             out.append(jnp.where(found, val, jnp.float32(lj.default)))
         return out
 
-    def _agg_union(self, wa: WindowAgg, parts, r) -> jnp.ndarray:
-        """Combine a RANGE window across the primary and union-table rings.
+    # -- the one query path ---------------------------------------------------
 
-        ``parts``: [(g, m), ...] masked buffers (primary first); ``r`` the
-        request row's arg value (the newest in-window row by the merge
-        tie-rule, so LAST == r).
+    def _preagg_parts(self, wa, state, key, ts_q, ts_buf, valid, lane):
+        """Raw boundary-row mask + gathered middle-bucket states for a RANGE
+        window on the pre-agg path.
+
+        The window decomposes into [raw head rows in the oldest partial
+        bucket] + [full buckets strictly inside] + [raw tail rows in the
+        request's bucket]; middles come back as persisted aggregate states
+        ready for ``AggSpec.fold_buckets``.
         """
-        if wa.agg == Agg.LAST:
-            return r
-        if wa.agg == Agg.DISTINCT_APPROX:
-            acc = pg.row_bitmap(r)
-            for g, m in parts:
-                bits = jnp.where(m, pg.row_bitmap(g), jnp.int32(0))
-                acc = acc | _or_reduce(bits, 1)
-            return _bitmap_estimate(acc)
-        s = r
-        cnt = jnp.ones_like(r)
-        s2 = r * r
-        mn = r
-        mx = r
-        for g, m in parts:
-            mf = m.astype(jnp.float32)
-            s = s + jnp.sum(g * mf, axis=1)
-            cnt = cnt + jnp.sum(mf, axis=1)
-            s2 = s2 + jnp.sum(g * g * mf, axis=1)
-            mn = jnp.minimum(mn, jnp.min(jnp.where(m, g, pg.POS_INF), axis=1))
-            mx = jnp.maximum(mx, jnp.max(jnp.where(m, g, pg.NEG_INF), axis=1))
-        if wa.agg == Agg.SUM:
-            return s
-        if wa.agg == Agg.COUNT:
-            return cnt
-        if wa.agg == Agg.MEAN:
-            return s / cnt
-        if wa.agg == Agg.STD:
-            mean = s / cnt
-            return jnp.sqrt(jnp.maximum(s2 / cnt - mean * mean, 0.0))
-        if wa.agg == Agg.MIN:
-            return mn
-        if wa.agg == Agg.MAX:
-            return mx
-        raise ValueError(wa.agg)
-
-    def _union_parts(self, wa, ts_buf, valid, ts_q, g, sec_gathers):
-        """Masked (g, m) buffers for a union RANGE window: primary ring
-        first, then each union table's ring, all masked by the same
-        ``_window_mask`` range rule."""
-        parts = [(g, self._window_mask(wa, ts_buf, valid, ts_q))]
-        parts.extend(self._union_sec_parts(wa, ts_q, sec_gathers))
-        return parts
-
-    # -- naive path ------------------------------------------------------------------
-
-    def _query_pure_naive(self, state, key, ts_q, req_lanes, join_keys, gkey):
-        ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
-        sec_gathers = self._union_gathers(state, key, gkey)
-        out = []
-        for wk in self._wagg_order:
-            wa = self.waggs[wk]
-            lane = self._lane_of[wa.arg.key]
-            g = lanes_buf[..., lane]
-            r = req_lanes[:, lane]
-            if wa.union:
-                parts = self._union_parts(
-                    wa, ts_buf, valid, ts_q, g, sec_gathers
-                )
-                out.append(self._agg_union(wa, parts, r))
-                continue
-            m = self._window_mask(wa, ts_buf, valid, ts_q)
-            out.append(self._agg_masked(wa, g, m, r))
-        out.extend(self._last_join_vals(state, ts_q, join_keys))
-        return tuple(out)
-
-    def _agg_masked(self, wa: WindowAgg, g, m, r) -> jnp.ndarray:
-        mf = m.astype(jnp.float32)
-        if wa.agg == Agg.SUM:
-            return jnp.sum(g * mf, axis=1) + r
-        if wa.agg == Agg.COUNT:
-            return jnp.sum(mf, axis=1) + 1.0
-        if wa.agg == Agg.MEAN:
-            c = jnp.sum(mf, axis=1) + 1.0
-            return (jnp.sum(g * mf, axis=1) + r) / c
-        if wa.agg == Agg.STD:
-            c = jnp.sum(mf, axis=1) + 1.0
-            s = jnp.sum(g * mf, axis=1) + r
-            s2 = jnp.sum(g * g * mf, axis=1) + r * r
-            mean = s / c
-            return jnp.sqrt(jnp.maximum(s2 / c - mean * mean, 0.0))
-        if wa.agg == Agg.MIN:
-            return jnp.minimum(jnp.min(jnp.where(m, g, pg.POS_INF), axis=1), r)
-        if wa.agg == Agg.MAX:
-            return jnp.maximum(jnp.max(jnp.where(m, g, pg.NEG_INF), axis=1), r)
-        if wa.agg == Agg.LAST:
-            return r  # request row is the newest in-window row
-        if wa.agg == Agg.FIRST:
-            any_m = m.any(axis=1)
-            first_idx = jnp.argmax(m, axis=1)  # oldest (buf is oldest->newest)
-            fv = jnp.take_along_axis(g, first_idx[:, None], axis=1)[:, 0]
-            return jnp.where(any_m, fv, r)
-        if wa.agg == Agg.DISTINCT_APPROX:
-            bits = jnp.where(m, pg.row_bitmap(g), jnp.int32(0))
-            allbits = _or_reduce(bits, 1) | pg.row_bitmap(r)
-            return _bitmap_estimate(allbits)
-        if wa.agg == Agg.TOPN_FREQ:
-            C = g.shape[1]
-            t = min(TOPN_TAIL - 1, C)
-            g_tail = jnp.concatenate([r[:, None], g[:, ::-1][:, :t]], axis=1)
-            m_tail = jnp.concatenate(
-                [jnp.ones((r.shape[0], 1), bool), m[:, ::-1][:, :t]], axis=1
-            )
-            return _topn_masked(g_tail, m_tail, wa.n)
-        raise ValueError(wa.agg)
-
-    # -- pre-aggregated path ------------------------------------------------------------
-
-    _COMPOSABLE = (Agg.SUM, Agg.COUNT, Agg.MEAN, Agg.MIN, Agg.MAX, Agg.STD)
-
-    def _query_pure_preagg(self, state, key, ts_q, req_lanes, join_keys, gkey):
-        """Two-level composition for RANGE windows with composable aggs.
-
-        Union windows with a materialized primary lane compose their
-        *primary-stream* part from the same bucket pre-aggregates; only the
-        union tables' parts come from raw secondary rings.  ROWS windows and
-        non-composable aggs fall back inline.
-        """
-        ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
-        sec_gathers = self._union_gathers(state, key, gkey)
         B = jnp.int32(self.bucket_size)
         nb = self.num_buckets
         bucket_buf = ts_buf // B
-        out = []
+        T = jnp.int32(wa.window.size)
+        lo = ts_q - T + 1
+        b_q = ts_q // B
+        b_lo = (ts_q - T) // B
+        not_future = ts_buf <= ts_q[:, None]
+        in_lo = ts_buf >= lo[:, None]
+        head_m = (
+            valid & not_future & in_lo
+            & (bucket_buf == b_lo[:, None]) & (b_lo != b_q)[:, None]
+        )
+        tail_m = valid & not_future & in_lo & (bucket_buf == b_q[:, None])
+        raw = head_m | tail_m
 
+        # middle full buckets b_lo+1 .. b_q-1, selected by membership
+        M = self._max_mid(wa)
+        mids = b_lo[:, None] + 1 + jnp.arange(M, dtype=jnp.int32)[None, :]
+        mvalid = mids < b_q[:, None]
+        slots = mids % nb
+        stored = state.bagg.bucket[key[:, None], slots]
+        ok = mvalid & (stored == mids)
+        ms = state.bagg.stats[key[:, None], slots, lane]   # (Q, M, NUM_STATS)
+        mb = state.bagg.bitmap[key[:, None], slots, lane]  # (Q, M)
+        return raw, ms, mb, ok
+
+    def _query_pure(self, state, key, ts_q, req_lanes, join_keys, gkey,
+                    use_preagg: bool):
+        """Generic fold-then-finalize over every window aggregation.
+
+        For each wagg: lift the request row, combine with the primary
+        window's fold (raw ring rows, or boundary rows ⊕ bucket states on
+        the pre-agg path), combine with each union table's fold, finalize.
+        All semantics live in the :mod:`repro.core.aggregates` specs.
+        """
+        ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
+        sec_gathers = self._union_gathers(state, key, gkey)
+        out = []
         for wk in self._wagg_order:
             wa = self.waggs[wk]
+            spec = agg_spec(wa.agg)
             lane = self._lane_of[wa.arg.key]
             g = lanes_buf[..., lane]
             r = req_lanes[:, lane]
-            if wa.union and not self._union_preagg.get(wk):
-                parts = self._union_parts(
-                    wa, ts_buf, valid, ts_q, g, sec_gathers
-                )
-                out.append(self._agg_union(wa, parts, r))
-                continue
-            composable = wa.agg in self._COMPOSABLE or (
-                wa.agg == Agg.DISTINCT_APPROX
+            # merge-order coordinate of the request row: primary stream
+            # (rank = len(union), matching join.merge_streams), newer than
+            # any stored row of the same (ts, stream)
+            prim_rank = jnp.int32(len(wa.union))
+            acc = spec.lift(r, ts_q, prim_rank, _POS_MAX)
+            use_buckets = (
+                use_preagg
+                and spec.bucket_composable
+                and wa.window.mode == "range"
+                and (not wa.union or self._union_preagg.get(wk, False))
             )
-            if wa.window.mode != "range" or not composable:
+            if use_buckets:
+                raw, ms, mb, ok = self._preagg_parts(
+                    wa, state, key, ts_q, ts_buf, valid, lane
+                )
+                acc = spec.combine(
+                    acc, spec.fold_rows(g, ts_buf, raw, prim_rank)
+                )
+                acc = spec.combine(acc, spec.fold_buckets(ms, mb, ok))
+            else:
                 m = self._window_mask(wa, ts_buf, valid, ts_q)
-                out.append(self._agg_masked(wa, g, m, r))
-                continue
-
-            T = jnp.int32(wa.window.size)
-            lo = ts_q - T + 1
-            b_q = ts_q // B
-            b_lo = (ts_q - T) // B
-            not_future = ts_buf <= ts_q[:, None]
-            in_lo = ts_buf >= lo[:, None]
-            head_m = (
-                valid & not_future & in_lo
-                & (bucket_buf == b_lo[:, None]) & (b_lo != b_q)[:, None]
-            )
-            tail_m = valid & not_future & in_lo & (bucket_buf == b_q[:, None])
-            raw = head_m | tail_m
-            rawf = raw.astype(jnp.float32)
-
-            # middle full buckets b_lo+1 .. b_q-1
-            M = self._max_mid(wa)
-            mids = b_lo[:, None] + 1 + jnp.arange(M, dtype=jnp.int32)[None, :]
-            mvalid = mids < b_q[:, None]
-            slots = mids % nb
-            stored = state.bagg.bucket[key[:, None], slots]
-            ok = mvalid & (stored == mids)
-
-            if wa.agg == Agg.DISTINCT_APPROX:
-                bits = jnp.where(raw, pg.row_bitmap(g), jnp.int32(0))
-                acc = _or_reduce(bits, 1) | pg.row_bitmap(r)
-                mb = state.bagg.bitmap[key[:, None], slots, lane]
-                mb = jnp.where(ok, mb, jnp.int32(0))
-                acc = acc | _or_reduce(mb, 1)
-                for g_t, m_t in self._union_sec_parts(
-                    wa, ts_q, sec_gathers
-                ):
-                    bt = jnp.where(m_t, pg.row_bitmap(g_t), jnp.int32(0))
-                    acc = acc | _or_reduce(bt, 1)
-                out.append(_bitmap_estimate(acc))
-                continue
-
-            s_raw = jnp.stack(
-                [
-                    jnp.sum(g * rawf, axis=1) + r,
-                    jnp.sum(rawf, axis=1) + 1.0,
-                    jnp.minimum(
-                        jnp.min(jnp.where(raw, g, pg.POS_INF), axis=1), r
-                    ),
-                    jnp.maximum(
-                        jnp.max(jnp.where(raw, g, pg.NEG_INF), axis=1), r
-                    ),
-                    jnp.sum(g * g * rawf, axis=1) + r * r,
-                ],
-                axis=-1,
-            )
-            ms = state.bagg.stats[key[:, None], slots, lane]  # (Q, M, S)
-            ident = pg.stats_identity(ms.shape[:-1])
-            ms = jnp.where(ok[..., None], ms, ident)
-            s_all = pg.combine_stats(s_raw, _fold_stats(ms))
-            for g_t, m_t in self._union_sec_parts(wa, ts_q, sec_gathers):
-                mf = m_t.astype(jnp.float32)
-                s_t = jnp.stack(
-                    [
-                        jnp.sum(g_t * mf, axis=1),
-                        jnp.sum(mf, axis=1),
-                        jnp.min(jnp.where(m_t, g_t, pg.POS_INF), axis=1),
-                        jnp.max(jnp.where(m_t, g_t, pg.NEG_INF), axis=1),
-                        jnp.sum(g_t * g_t * mf, axis=1),
-                    ],
-                    axis=-1,
+                acc = spec.combine(
+                    acc, spec.fold_rows(g, ts_buf, m, prim_rank)
                 )
-                s_all = pg.combine_stats(s_all, s_t)
-            out.append(_finalize(wa.agg, s_all))
+            for rank, t in enumerate(wa.union):
+                ts_t, lanes_t, valid_t = sec_gathers[t]
+                g_t = lanes_t[..., self._sec_lane_of[t][wa.arg.key]]
+                m_t = self._window_mask(wa, ts_t, valid_t, ts_q)
+                acc = spec.combine(
+                    acc, spec.fold_rows(g_t, ts_t, m_t, jnp.int32(rank))
+                )
+            out.append(spec.finalize(acc, n=wa.n))
         out.extend(self._last_join_vals(state, ts_q, join_keys))
         return tuple(out)
 
-    def _union_sec_parts(self, wa, ts_q, sec_gathers):
-        """Masked (g, m) buffers for a union window's *secondary* parts."""
-        parts = []
-        for t in wa.union:
-            ts_t, lanes_t, valid_t = sec_gathers[t]
-            g_t = lanes_t[..., self._sec_lane_of[t][wa.arg.key]]
-            parts.append((g_t, self._window_mask(wa, ts_t, valid_t, ts_q)))
-        return parts
+    def _query_pure_naive(self, state, key, ts_q, req_lanes, join_keys, gkey):
+        return self._query_pure(
+            state, key, ts_q, req_lanes, join_keys, gkey, use_preagg=False
+        )
+
+    def _query_pure_preagg(self, state, key, ts_q, req_lanes, join_keys, gkey):
+        return self._query_pure(
+            state, key, ts_q, req_lanes, join_keys, gkey, use_preagg=True
+        )
 
     def _max_mid(self, wa: WindowAgg) -> int:
         """Static bound on middle-bucket count for a window."""
@@ -755,17 +587,3 @@ class OnlineFeatureStore:
         else:
             vals = fn(self.state, key, ts_q, req_lanes, join_keys, key)
         return self._finish_query(columns, vals)
-
-
-def _fold_stats(ms: jnp.ndarray) -> jnp.ndarray:
-    """Reduce (Q, M, NUM_STATS) middle-bucket stats over M."""
-    return jnp.stack(
-        [
-            ms[..., 0].sum(axis=1),
-            ms[..., 1].sum(axis=1),
-            ms[..., 2].min(axis=1),
-            ms[..., 3].max(axis=1),
-            ms[..., 4].sum(axis=1),
-        ],
-        axis=-1,
-    )

@@ -5,17 +5,25 @@ for years) or hotspot data".  OpenMLDB materializes per-bucket partial
 aggregates so a long RANGE window composes O(window/bucket) bucket aggs plus
 two raw boundary scans, instead of scanning every raw row.
 
-TPU adaptation: bucket aggregates live in a dense per-key ring
-(`BucketAgg`), maintained by the same fused-scatter ingest as the row store.
+This module is now *only the bucket store*: a dense per-key ring of
+persisted aggregate **states** of the algebra in
+:mod:`repro.core.aggregates` — the full stat-lane vector (sum, count, min,
+max, sumsq) plus the 32-bit distinct bitmap per (key, bucket, field),
+maintained by the same fused-scatter ingest as the row store.  How those
+states compose into window answers lives with the aggregator specs
+(``AggSpec.fold_buckets`` / ``combine`` / ``finalize``), consumed by
+:class:`repro.core.online.OnlineFeatureStore` — there is no aggregate
+semantics here to drift out of sync.
+
 A query composes:
 
     [raw tail rows in the newest partial bucket]      (scan, <= bucket rows)
-  + [full buckets strictly inside the window]         (compose, <= NB aggs)
+  + [full buckets strictly inside the window]         (combine, <= NB aggs)
   + [raw head rows in the oldest partial bucket]      (scan, <= bucket rows)
 
-For exact offline↔online consistency the raw ring must retain the boundary
-buckets' rows; the middle composes losslessly for SUM/COUNT/MIN/MAX/SUMSQ
-and the 32-bit distinct bitmap (all associative, bitmap idempotent).
+For exact offline<->online consistency the raw ring must retain the boundary
+buckets' rows; the middle composes losslessly because bucket rows are
+``combine``-able states (sums associative, min/max/bitmap idempotent).
 """
 
 from __future__ import annotations
@@ -26,31 +34,39 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import mix64
+from repro.core import aggregates as ag
+from repro.core.aggregates import (
+    LANES,
+    NEG_INF,
+    NUM_STATS,
+    POS_INF,
+    row_bitmap,
+)
 
 __all__ = [
     "BucketAgg",
     "bucket_init",
     "bucket_ingest",
+    "row_stats",
+    "stats_identity",
     "row_bitmap",
-    "combine_stats",
     "NUM_STATS",
     "POS_INF",
     "NEG_INF",
 ]
 
-# stat lanes per (key, bucket, field): sum, count, min, max, sumsq
-NUM_STATS = 5
-NEG_INF = jnp.float32(-3.0e38)
-POS_INF = jnp.float32(3.0e38)
+# lift / identity for the persisted full stat vector come straight from the
+# lane monoids — the bucket store stores algebra states, nothing else
+row_stats = ag.lanes_lift_stack
+stats_identity = ag.lanes_identity_stack
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class BucketAgg:
-    """Per-key ring of per-bucket partial aggregates.
+    """Per-key ring of per-bucket partial aggregate states.
 
-    stats  : (K, NB, F, NUM_STATS) f32
+    stats  : (K, NB, F, NUM_STATS) f32  stat-lane states (aggregates.LANES)
     bitmap : (K, NB, F) int32   32-bit linear-counting bitmap per field
     bucket : (K, NB) int32      absolute bucket id held in each slot (-1 empty)
     """
@@ -73,47 +89,12 @@ class BucketAgg:
 
 
 def bucket_init(num_keys: int, num_buckets: int, width: int, size: int) -> BucketAgg:
-    stats = jnp.zeros((num_keys, num_buckets, width, NUM_STATS), jnp.float32)
-    stats = stats.at[..., 2].set(POS_INF)  # min identity
-    stats = stats.at[..., 3].set(NEG_INF)  # max identity
     return BucketAgg(
-        stats=stats,
+        stats=stats_identity((num_keys, num_buckets, width)),
         bitmap=jnp.zeros((num_keys, num_buckets, width), jnp.int32),
         bucket=jnp.full((num_keys, num_buckets), jnp.int32(-1)),
         size=size,
     )
-
-
-def row_stats(vals: jnp.ndarray) -> jnp.ndarray:
-    """(..., F) values -> (..., F, NUM_STATS) single-row stats."""
-    ones = jnp.ones_like(vals)
-    return jnp.stack([vals, ones, vals, vals, vals * vals], axis=-1)
-
-
-def combine_stats(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """Associative combine of stat vectors (..., NUM_STATS)."""
-    return jnp.stack(
-        [
-            a[..., 0] + b[..., 0],
-            a[..., 1] + b[..., 1],
-            jnp.minimum(a[..., 2], b[..., 2]),
-            jnp.maximum(a[..., 3], b[..., 3]),
-            a[..., 4] + b[..., 4],
-        ],
-        axis=-1,
-    )
-
-
-def stats_identity(shape: Tuple[int, ...]) -> jnp.ndarray:
-    z = jnp.zeros(shape + (NUM_STATS,), jnp.float32)
-    z = z.at[..., 2].set(POS_INF)
-    z = z.at[..., 3].set(NEG_INF)
-    return z
-
-
-def row_bitmap(vals: jnp.ndarray) -> jnp.ndarray:
-    """Per-value 32-bit linear-counting bitmap contribution."""
-    return (jnp.int32(1) << mix64(vals, salt=77, bits=5)).astype(jnp.int32)
 
 
 def _segment_or_scan(bm: jnp.ndarray, new_seg: jnp.ndarray) -> jnp.ndarray:
@@ -130,6 +111,18 @@ def _segment_or_scan(bm: jnp.ndarray, new_seg: jnp.ndarray) -> jnp.ndarray:
         flags = jnp.broadcast_to(new_seg[:, None], bm.shape)
     _, out = jax.lax.associative_scan(comb, (flags, bm))
     return out
+
+
+def _lane_scatter(target, index, update, lane_idx: int, lane: str):
+    """Merge lifted lane states into stored states with the lane's own
+    combine flavour (``.add`` / ``.min`` / ``.max``)."""
+    at = target.at[index + (slice(None), lane_idx)]
+    kind = ag.lane_scatter_kind(lane)
+    if kind == "add":
+        return at.add(update, mode="drop")
+    if kind == "min":
+        return at.min(update, mode="drop")
+    return at.max(update, mode="drop")
 
 
 def bucket_ingest(
@@ -154,7 +147,6 @@ def bucket_ingest(
     slot = bucket_id % nb
 
     n = key.shape[0]
-    idx = jnp.arange(n, dtype=jnp.int32)
     new_seg = jnp.concatenate(
         [
             jnp.array([True]),
@@ -163,17 +155,14 @@ def bucket_ingest(
     )
     seg_id = jnp.cumsum(new_seg.astype(jnp.int32)) - 1  # (N,), 0..S-1
 
-    rs = row_stats(vals)   # (N, F, S)
+    rs = row_stats(vals)   # (N, F, NUM_STATS) lifted lane states
     bm = row_bitmap(vals)  # (N, F)
 
     # --- per-(key,bucket) segment reduction into scratch rows -------------
     width = vals.shape[1]
     seg_stats = stats_identity((n, width))
-    seg_stats = seg_stats.at[seg_id, :, 0].add(rs[..., 0])
-    seg_stats = seg_stats.at[seg_id, :, 1].add(rs[..., 1])
-    seg_stats = seg_stats.at[seg_id, :, 2].min(rs[..., 2])
-    seg_stats = seg_stats.at[seg_id, :, 3].max(rs[..., 3])
-    seg_stats = seg_stats.at[seg_id, :, 4].add(rs[..., 4])
+    for i, lane in enumerate(LANES):
+        seg_stats = _lane_scatter(seg_stats, (seg_id,), rs[..., i], i, lane)
     or_scan = _segment_or_scan(bm, new_seg)  # (N, F) inclusive per segment
 
     # one representative (= last) row per segment
@@ -204,11 +193,8 @@ def bucket_ingest(
     )
 
     # --- combine the new segment aggregates --------------------------------
-    stats = stats.at[k_v, s_v, :, 0].add(rep_stats[..., 0], mode="drop")
-    stats = stats.at[k_v, s_v, :, 1].add(rep_stats[..., 1], mode="drop")
-    stats = stats.at[k_v, s_v, :, 2].min(rep_stats[..., 2], mode="drop")
-    stats = stats.at[k_v, s_v, :, 3].max(rep_stats[..., 3], mode="drop")
-    stats = stats.at[k_v, s_v, :, 4].add(rep_stats[..., 4], mode="drop")
+    for i, lane in enumerate(LANES):
+        stats = _lane_scatter(stats, (k_v, s_v), rep_stats[..., i], i, lane)
 
     # bitmap OR: (key, slot) pairs are unique among valid segments within a
     # batch (batch spans < NB buckets), so gather-OR-set is race-free.

@@ -13,10 +13,15 @@ partitions it; per-shard compute never crosses devices).
 
 Partitioning scheme
 -------------------
-* **Primary state** is partitioned by deterministic key routing:
-  ``shard = key % S``, ``local = key // S``.  Modulo routing keeps the
-  local id space dense (ring tables stay ``ceil(K/S)`` keys per shard),
-  is invertible, and balances contiguous id spaces.
+* **Primary state** is partitioned by deterministic key routing.  By
+  default (``hash_routing=True``) keys pass through a
+  :class:`~repro.core.hashing.KeyPermutation` — a mix32-Feistel bijection
+  on the key domain — and route as ``shard = perm(key) % S``,
+  ``local = perm(key) // S``.  The bijection keeps the local id space
+  dense (ring tables stay ``ceil(K/S)`` keys per shard) while breaking up
+  adversarial/strided key patterns (all keys ≡ 0 mod S collapse onto one
+  shard under raw modulo).  ``hash_routing=False`` restores raw
+  ``key % S`` / ``key // S`` routing for id spaces known to be uniform.
 * **Union-stream tables** share the primary key space (see
   :class:`~repro.core.storage.Database`), so tables referenced *only* by
   WINDOW UNIONs are partitioned the same way — their rows live on the
@@ -53,6 +58,7 @@ from repro.core.expr import (
     collect_tables,
     collect_window_aggs,
 )
+from repro.core.hashing import KeyPermutation
 from repro.core.online import OnlineFeatureStore
 
 __all__ = [
@@ -126,12 +132,14 @@ class ShardedOnlineStore(OnlineFeatureStore):
         secondary_num_keys: Optional[Dict[str, int]] = None,
         secondary_capacity: Optional[int] = None,
         mesh: Optional[Mesh] = None,
+        hash_routing: bool = True,
     ):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         S = int(num_shards)
         self.num_shards = S
         self.global_num_keys = int(num_keys)
+        self.hash_routing = bool(hash_routing)
 
         # table placement (must precede super().__init__, which sizes rings):
         # union-only tables are key-partitioned like the primary, join
@@ -149,14 +157,31 @@ class ShardedOnlineStore(OnlineFeatureStore):
         self.global_secondary_num_keys = {
             t: int(g_nk.get(t, num_keys)) for t in collect_tables(exprs)
         }
+
+        if self.hash_routing:
+            # one permutation shared by the primary and every partitioned
+            # union table: union streams share the primary key space, and a
+            # per-table permutation would send a key's union rows to a
+            # different shard than its primary rows.  The domain is padded
+            # to a multiple of S so local = perm // S stays < ceil(U/S).
+            dom = max(
+                [self.global_num_keys]
+                + [self.global_secondary_num_keys[t] for t in sharded_sec]
+            )
+            dom_pad = S * (-(-dom // S))
+            self._perm: Optional[KeyPermutation] = KeyPermutation(dom_pad)
+            per_shard_keys = dom_pad // S
+        else:
+            self._perm = None
+            per_shard_keys = -(-self.global_num_keys // S)
         eff_sec_nk = {
-            t: -(-g // S) if t in sharded_sec else g
+            t: (per_shard_keys if t in sharded_sec else g)
             for t, g in self.global_secondary_num_keys.items()
         }
 
         super().__init__(
             view,
-            num_keys=-(-int(num_keys) // S),
+            num_keys=per_shard_keys,
             capacity=capacity,
             num_buckets=num_buckets,
             bucket_size=bucket_size,
@@ -191,16 +216,11 @@ class ShardedOnlineStore(OnlineFeatureStore):
 
     # -- routing ---------------------------------------------------------------
 
-    def shard_of(
-        self, key: np.ndarray, upper: Optional[int] = None
-    ) -> np.ndarray:
-        """Deterministic key -> shard id (host-side).
-
-        Out-of-range keys are rejected: the single-device store clamps
+    def _check_range(self, key: np.ndarray, upper: Optional[int]) -> np.ndarray:
+        """Out-of-range keys are rejected: the single-device store clamps
         them (gather semantics), the sharded store would land on a
-        *different* key's state after `% S` routing — silently breaking
-        the bit-identical contract — so fail loudly instead.
-        """
+        *different* key's state after routing — silently breaking the
+        bit-identical contract — so fail loudly instead."""
         key = np.asarray(key)
         upper = self.global_num_keys if upper is None else upper
         if key.size and (key.min() < 0 or key.max() >= upper):
@@ -209,7 +229,25 @@ class ShardedOnlineStore(OnlineFeatureStore):
                 f"[{key.min()}, {key.max()}] (sharded stores cannot clamp "
                 "without routing to another key's shard)"
             )
-        return key % self.num_shards
+        return key
+
+    def _route_ids(
+        self, key: np.ndarray, upper: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Deterministic key -> (shard id, shard-local id), host-side.
+
+        With hash routing the key first passes through the shared Feistel
+        permutation; bijectivity keeps local ids collision-free per shard.
+        """
+        key = self._check_range(key, upper)
+        routed = self._perm(key) if self._perm is not None else key
+        return routed % self.num_shards, routed // self.num_shards
+
+    def shard_of(
+        self, key: np.ndarray, upper: Optional[int] = None
+    ) -> np.ndarray:
+        """Deterministic key -> shard id (host-side; range-checked)."""
+        return self._route_ids(key, upper)[0]
 
     def _put(self, x: np.ndarray) -> jnp.ndarray:
         return jax.device_put(jnp.asarray(x), self.sharding)
@@ -257,20 +295,37 @@ class ShardedOnlineStore(OnlineFeatureStore):
 
     # -- ingest ----------------------------------------------------------------
 
-    def _ingest_padded(self, key, ts, lanes) -> None:
-        """Route one fused (key, ts)-sorted chunk across shards.
+    def _sorted_route(
+        self, key_h: np.ndarray, ts_h: np.ndarray, upper: Optional[int]
+    ) -> Tuple[RoutePlan, np.ndarray]:
+        """Routing plan + local ids for one fused ingest chunk, with every
+        shard's rows in (local key, ts) order as ring/bucket ingest requires.
 
-        Per-shard subsets of a sorted batch stay sorted (k1 < k2 with
-        k1 == k2 (mod S) implies k1//S < k2//S), and a chunk satisfying the
-        bucket-span constraint still satisfies it shard-locally.
+        Modulo routing preserves the incoming (key, ts) sort per shard
+        (k1 < k2 with k1 ≡ k2 (mod S) implies k1//S < k2//S); the Feistel
+        permutation scrambles key order, so hash routing stably re-sorts
+        each shard's rows — same-key rows keep their arrival order, so
+        per-key state (the bit-identical contract) is unaffected.  A chunk
+        satisfying the bucket-span constraint still satisfies it
+        shard-locally either way.
         """
+        shard, local = self._route_ids(key_h, upper)
+        plan = build_route(shard, self.num_shards, min_bucket=64)
+        if self.hash_routing:
+            plan = RoutePlan(
+                idx=[
+                    ix[np.lexsort((ts_h[ix], local[ix]))] for ix in plan.idx
+                ],
+                bucket=plan.bucket,
+            )
+        return plan, local
+
+    def _ingest_padded(self, key, ts, lanes) -> None:
+        """Route one fused (key, ts)-sorted chunk across shards."""
         key_h, ts_h = np.asarray(key), np.asarray(ts)
-        plan = build_route(
-            self.shard_of(key_h), self.num_shards, min_bucket=64
-        )
+        plan, local = self._sorted_route(key_h, ts_h, None)
         k = self._route_rows(
-            plan, key_h // self.num_shards, pad="sentinel",
-            sentinel=self.num_keys,
+            plan, local, pad="sentinel", sentinel=self.num_keys
         )
         t = self._route_rows(plan, ts_h, pad="repeat")
         l = self._route_rows(plan, np.asarray(lanes), pad="sentinel")
@@ -281,19 +336,15 @@ class ShardedOnlineStore(OnlineFeatureStore):
     def _sec_ingest_padded(self, table: str, key, ts, lanes) -> None:
         S = self.num_shards
         if self._sec_sharded[table]:
-            key_h = np.asarray(key)
-            plan = build_route(
-                self.shard_of(
-                    key_h, upper=self.global_secondary_num_keys[table]
-                ),
-                S,
-                min_bucket=64,
+            key_h, ts_h = np.asarray(key), np.asarray(ts)
+            plan, local = self._sorted_route(
+                key_h, ts_h, self.global_secondary_num_keys[table]
             )
             k = self._route_rows(
-                plan, key_h // S, pad="sentinel",
+                plan, local, pad="sentinel",
                 sentinel=self.secondary_num_keys[table],
             )
-            t = self._route_rows(plan, np.asarray(ts), pad="repeat")
+            t = self._route_rows(plan, ts_h, pad="repeat")
             l = self._route_rows(plan, np.asarray(lanes), pad="sentinel")
         else:
             # replicated dimension table: identical fused scatter on every
@@ -329,14 +380,13 @@ class ShardedOnlineStore(OnlineFeatureStore):
         ts_h = np.asarray(columns[self.schema.ts]).astype(np.int32, copy=False)
         lanes_h = np.asarray(self._lanes(columns))
         q = int(key_h.shape[0])
-        plan = build_route(
-            self.shard_of(key_h), self.num_shards, min_bucket=16
-        )
+        shard, local = self._route_ids(key_h)
+        plan = build_route(shard, self.num_shards, min_bucket=16)
         gkey_r = self._route_rows(plan, key_h, pad="repeat")
         fn = self._query_naive_fn if mode == "naive" else self._query_preagg_fn
         vals = fn(
             self.state,
-            self._put(gkey_r // self.num_shards),           # local key
+            self._put(self._route_rows(plan, local, pad="repeat")),
             self._put(self._route_rows(plan, ts_h, pad="repeat")),
             self._put(self._route_rows(plan, lanes_h, pad="repeat")),
             tuple(

@@ -4,13 +4,27 @@ This is the *offline* executor's compute core (and the oracle the online
 store is verified against).  FeatInsight/OpenMLDB evaluates, for every row,
 aggregates over a per-key window ending at that row.  On CPU OpenMLDB walks
 a skiplist; on TPU we restructure the whole computation into dense
-data-parallel primitives:
+data-parallel primitives.
 
-* windowed SUM/COUNT/MEAN/STD  -> segmented prefix sums, O(N);
-* windowed MIN/MAX             -> segmented sparse table (doubling), O(N log N);
-* RANGE window starts          -> vectorized lexicographic binary search;
-* DISTINCT_APPROX              -> 32-bit linear-counting bitmap, OR-doubling;
-* TOPN_FREQ                    -> exact tail-window frequency ranking.
+Semantics come from ONE place — the aggregator algebra in
+:mod:`repro.core.aggregates` (each ``Agg``'s (init, lift, combine,
+finalize)).  This module contributes the *evaluation strategies* for folds
+of those monoids over per-row windows ``[j_i, i]``:
+
+* invertible lanes (sum/count/sumsq) -> segmented compensated prefix sums
+  (TwoSum double-float, restarted per key) and a range difference — the
+  group structure makes the fold O(N);
+* idempotent lanes (min/max) and OR-bitmaps -> :func:`segmented_windowed_fold`,
+  a doubling scan of *static* shifted combines (log2 N levels, each a pad +
+  slice — never a gather) plus a two-gather overlapping-span query.  This
+  replaces the old sparse-table formulation whose chained dynamic gathers
+  made XLA compile minutes-slow at N >~ 5k; the level build is also the
+  Pallas segmented-combine kernel in :mod:`repro.kernels.window_agg`;
+* extreme states (FIRST/LAST) -> boundary closed form: the fold of an
+  argmin/argmax-by-merge-order monoid over the contiguous range [j, i] is
+  exactly row j (FIRST) or row i (LAST);
+* tail states (TOPN_FREQ) -> tail closed form: the fold keeps the newest
+  ``TOPN_TAIL`` rows, which are directly gatherable as [max(j, i-T+1), i].
 
 All functions assume rows are sorted by (key, ts) — the invariant the
 paper's storage maintains by construction ("pre-sorting data by key and
@@ -25,19 +39,21 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import aggregates as ag
+from repro.core.aggregates import TOPN_TAIL, agg_spec
 from repro.core.expr import Agg, WindowSpec
-from repro.core.hashing import mix64
+from repro.kernels.window_agg.ops import fold_levels
+from repro.kernels.window_agg.ref import fold_op
 
 __all__ = [
     "sort_by_key_ts",
     "segment_starts",
     "window_start_rows",
     "window_start_range",
+    "segmented_windowed_fold",
     "windowed_aggregate",
+    "TOPN_TAIL",
 ]
-
-_NEG_INF = jnp.float32(-3.0e38)
-_POS_INF = jnp.float32(3.0e38)
 
 
 def sort_by_key_ts(
@@ -106,7 +122,7 @@ def window_start_range(
 
 
 # ---------------------------------------------------------------------------
-# Segmented prefix machinery
+# Segmented prefix machinery (invertible lanes: sum / count / sumsq)
 # ---------------------------------------------------------------------------
 
 
@@ -187,92 +203,50 @@ def _range_sum(
     return (hi[i] - left_hi) + (lo[i] - left_lo)
 
 
-class _SparseTable:
-    """Doubling table for associative idempotent ops (min/max/bitwise-or).
-
-    Level k holds op over [i - 2^k + 1, i], masked so windows never cross
-    the row's key-segment start.
-    """
-
-    def __init__(self, x: jnp.ndarray, seg_start: jnp.ndarray, op, ident):
-        n = x.shape[0]
-        self.levels = [x]
-        self.op = op
-        idx = jnp.arange(n, dtype=jnp.int32)
-        k = 0
-        while (1 << (k + 1)) <= max(n, 1):
-            half = 1 << k
-            prev = self.levels[-1]
-            shifted = jnp.where(
-                (idx - half >= seg_start)[..., None] if prev.ndim > 1 else (idx - half >= seg_start),
-                prev[jnp.maximum(idx - half, 0)],
-                ident,
-            )
-            self.levels.append(op(prev, shifted))
-            k += 1
-
-    def query(self, j: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
-        """op over [j, i] (requires j <= i, same segment)."""
-        length = i - j + 1
-        # floor(log2(length)) via 31 - clz
-        k = 31 - jax.lax.clz(length.astype(jnp.int32))
-        k = jnp.maximum(k, 0)
-        levels = jnp.stack(self.levels, 0)  # (K, N, ...)
-        a = levels[k, i]
-        b = levels[k, j + (jnp.int32(1) << k) - 1]
-        return self.op(a, b)
-
-
 # ---------------------------------------------------------------------------
-# Aggregation dispatch
+# Segmented windowed fold (idempotent lanes: min / max / bitmap-or)
 # ---------------------------------------------------------------------------
 
 
-def _topn_tail(
-    vals: jnp.ndarray,
+def segmented_windowed_fold(
+    x: jnp.ndarray,
+    seg_start: jnp.ndarray,
     j: jnp.ndarray,
-    i: jnp.ndarray,
-    tail: int,
-    n: int,
+    op: str,
+    impl: str = "auto",
 ) -> jnp.ndarray:
-    """Exact n-th most-frequent value over the window tail (<= tail rows).
+    """op over rows ``[j_i, i]`` for every row i (op in min/max/or).
 
-    Gathers the last ``min(window, tail)`` values per row and ranks by
-    (frequency, value).  O(N * tail^2) — tail is small (<=64) by contract.
+    Two phases:
+
+    1. **level build** (the scan hot loop): doubling levels of the
+       segmented combine, each level one static shifted combine — the
+       Pallas segmented-combine kernel on TPU, identically-formulated
+       XLA ops elsewhere (:func:`repro.kernels.window_agg.ops.fold_levels`);
+    2. **query**: the window [j, i] is covered by the two (overlapping)
+       power-of-two spans ending at i and starting at j — valid because
+       these combines are idempotent — costing two gathers total.
     """
-    N = vals.shape[0]
-    idx = jnp.arange(N, dtype=jnp.int32)[:, None]
-    offs = jnp.arange(tail, dtype=jnp.int32)[None, :]
-    pos = i[:, None] - offs  # most-recent first
-    valid = pos >= j[:, None]
-    g = vals[jnp.maximum(pos, 0)]  # (N, tail)
-    # frequency of each tail element within the valid tail
-    eq = (g[:, :, None] == g[:, None, :]) & valid[:, :, None] & valid[:, None, :]
-    freq = eq.sum(-1).astype(jnp.float32)  # (N, tail)
-    freq = jnp.where(valid, freq, -1.0)
-    # dedupe: occurrence j is "first" (most recent) if no earlier slot k<j
-    # in the tail holds the same value
-    earlier = jnp.tril(jnp.ones((tail, tail), bool), -1)  # earlier[a, k] = k < a
-    same_as_earlier = (eq & earlier[None, :, :]).any(-1)
-    is_first = valid & ~same_as_earlier
-    score = jnp.where(is_first, freq, -1.0)
-    # rank by (freq desc, value asc) — compose into one sortable score
-    vmax = jnp.max(jnp.abs(g), initial=1.0)
-    composite = score * (2.0 * vmax + 1.0) - g
-    order = jnp.argsort(-composite, axis=-1)
-    pick = order[:, n]
-    picked_score = jnp.take_along_axis(score, pick[:, None], axis=1)[:, 0]
-    val = jnp.take_along_axis(g, pick[:, None], axis=1)[:, 0]
-    return jnp.where(picked_score >= 0.0, val, 0.0)
+    n = x.shape[0]
+    levels = fold_levels(x, seg_start, op=op, impl=impl)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    length = idx - j + 1
+    k = jnp.maximum(31 - jax.lax.clz(length.astype(jnp.int32)), 0)
+    a = levels[k, idx]
+    b = levels[k, j + (jnp.int32(1) << k) - 1]
+    return fold_op(op)(a, b)
 
 
-TOPN_TAIL = 32  # contract: TOPN_FREQ windows are evaluated over <=32 rows
+# ---------------------------------------------------------------------------
+# Registry-driven aggregation
+# ---------------------------------------------------------------------------
 
 
 def windowed_aggregate(
     key: jnp.ndarray,
     ts: jnp.ndarray,
     requests: Dict[Tuple, Tuple[Agg, jnp.ndarray, WindowSpec, int]],
+    impl: str = "auto",
 ) -> Dict[Tuple, jnp.ndarray]:
     """Evaluate a batch of window aggregations over (key, ts)-sorted rows.
 
@@ -280,8 +254,11 @@ def windowed_aggregate(
     Results are (N,) f32, one value per row (point-in-time correct: row i's
     window ends at and includes row i).
 
-    Shared work (segment starts, window starts, prefix sums per distinct
-    (arg, window)) is CSE'd across requests — the analogue of OpenMLDB
+    Each request is answered by folding its :class:`~repro.core.aggregates.
+    AggSpec` monoid over the window and applying the spec's ``finalize`` —
+    the same definitions the online store composes at request time.  Shared
+    work (segment starts, window starts, prefix sums / fold levels per
+    distinct arg) is CSE'd across requests — the analogue of OpenMLDB
     executing all features of a view in one pass over the window.
     """
     seg = segment_starts(key)
@@ -305,9 +282,9 @@ def windowed_aggregate(
     # shift-invariant (modulo the mu*count term added back), and centering
     # keeps f32 prefix magnitudes at variance scale instead of mean^2 scale
     # (otherwise STD suffers catastrophic cancellation).
-    ps_cache: Dict[int, Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = {}
+    ps_cache: Dict[int, Tuple[jnp.ndarray, Tuple, Tuple]] = {}
 
-    def psums(arr: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    def psums(arr: jnp.ndarray):
         k = id(arr)
         if k not in ps_cache:
             mu = jnp.mean(arr)
@@ -319,63 +296,67 @@ def windowed_aggregate(
             )
         return ps_cache[k]
 
-    table_cache: Dict[Tuple[int, str], _SparseTable] = {}
+    # windowed folds per distinct (arg id, op) — min/max lanes and bitmaps
+    fold_cache: Dict[Tuple[int, str], jnp.ndarray] = {}
 
-    def table_of(arr: jnp.ndarray, kind: str) -> _SparseTable:
-        ck = (id(arr), kind)
-        if ck not in table_cache:
-            if kind == "min":
-                table_cache[ck] = _SparseTable(arr, seg, jnp.minimum, _POS_INF)
-            elif kind == "max":
-                table_cache[ck] = _SparseTable(arr, seg, jnp.maximum, _NEG_INF)
-            else:  # bitmap OR for distinct counting
-                bit = (jnp.int32(1) << (mix64(arr, salt=77, bits=5))).astype(
-                    jnp.int32
-                )
-                table_cache[ck] = _SparseTable(
-                    bit, seg, jnp.bitwise_or, jnp.int32(0)
-                )
-        return table_cache[ck]
+    def fold_of(arr: jnp.ndarray, op: str, j: jnp.ndarray) -> jnp.ndarray:
+        # the level build depends only on (arr, op); the two-gather query is
+        # per window start, so cache on (arr, op, window) via j's id
+        ck = (id(arr), op, id(j))
+        if ck not in fold_cache:
+            x = ag.row_bitmap(arr) if op == "or" else arr
+            fold_cache[ck] = segmented_windowed_fold(x, seg, j, op, impl)
+        return fold_cache[ck]
 
-    out: Dict[Tuple, jnp.ndarray] = {}
     count_ps = _segment_prefix_sum(
         jnp.ones((n_rows,), jnp.float32), seg, compensated=False
     )
 
+    out: Dict[Tuple, jnp.ndarray] = {}
     for rk, (agg, arr, w, nth) in requests.items():
+        spec = agg_spec(agg)
         j = start_of(w)
-        if agg in (Agg.SUM, Agg.MEAN, Agg.STD, Agg.COUNT):
+
+        if spec.state == "lanes":
+            # STD is shift-invariant, so its lanes are evaluated on the
+            # centered values directly (best numerics); SUM/MEAN are not,
+            # so their sum lane is un-centered by adding mu * count back.
+            state: Dict[str, jnp.ndarray] = {}
             cnt = _range_sum(count_ps, j, idx, seg)
-            if agg == Agg.COUNT:
-                out[rk] = cnt
-                continue
-            mu, ps, ps2 = psums(arr)
-            s = _range_sum(ps, j, idx, seg)  # windowed sum of centered values
-            if agg == Agg.SUM:
-                out[rk] = s + mu * cnt
-            elif agg == Agg.MEAN:
-                out[rk] = s / jnp.maximum(cnt, 1.0) + mu
-            else:  # STD (population; shift-invariant)
-                s2 = _range_sum(ps2, j, idx, seg)
-                m = s / jnp.maximum(cnt, 1.0)
-                var = jnp.maximum(s2 / jnp.maximum(cnt, 1.0) - m * m, 0.0)
-                out[rk] = jnp.sqrt(var)
-        elif agg == Agg.MIN:
-            out[rk] = table_of(arr, "min").query(j, idx)
-        elif agg == Agg.MAX:
-            out[rk] = table_of(arr, "max").query(j, idx)
-        elif agg == Agg.LAST:
-            out[rk] = arr
-        elif agg == Agg.FIRST:
-            out[rk] = arr[j]
-        elif agg == Agg.DISTINCT_APPROX:
-            bits = table_of(arr, "or").query(j, idx)
-            ones = jax.lax.population_count(bits).astype(jnp.float32)
-            m = 32.0
-            frac = jnp.clip(ones / m, 0.0, 1.0 - 1e-6)
-            out[rk] = -m * jnp.log1p(-frac)
-        elif agg == Agg.TOPN_FREQ:
-            out[rk] = _topn_tail(arr, j, idx, TOPN_TAIL, nth)
+            centered = agg == Agg.STD
+            for lane in spec.lanes:
+                if lane == "count":
+                    state["count"] = cnt
+                elif lane == "sum":
+                    mu, ps, _ = psums(arr)
+                    s = _range_sum(ps, j, idx, seg)
+                    state["sum"] = s if centered else s + mu * cnt
+                elif lane == "sumsq":
+                    _, _, ps2 = psums(arr)
+                    state["sumsq"] = _range_sum(ps2, j, idx, seg)
+                else:  # min / max: idempotent — doubling fold
+                    state[lane] = fold_of(arr, lane, j)
+            out[rk] = spec.finalize(state, n=nth)
+        elif spec.state == "bitmap":
+            out[rk] = spec.finalize({"bits": fold_of(arr, "or", j)}, n=nth)
+        elif spec.state == "extreme":
+            # boundary closed form: the fold of an argmin/argmax-by-merge-
+            # order monoid over the contiguous range [j, i] is row i (LAST)
+            # or row j (FIRST)
+            val = arr if spec.newest else arr[j]
+            out[rk] = spec.finalize(
+                {"ts": ts, "rank": idx, "pos": idx, "val": val,
+                 "has": jnp.ones_like(val, bool)},
+                n=nth,
+            )
+        elif spec.state == "tail":
+            # tail closed form: the fold keeps the newest TOPN_TAIL rows,
+            # i.e. rows [max(j, i - T + 1), i], gathered newest-first
+            offs = jnp.arange(TOPN_TAIL, dtype=jnp.int32)[None, :]
+            pos = idx[:, None] - offs
+            valid = pos >= j[:, None]
+            vals = arr[jnp.maximum(pos, 0)]
+            out[rk] = spec.finalize({"val": vals, "valid": valid}, n=nth)
         else:
             raise ValueError(f"unhandled agg {agg}")
     return out

@@ -1,10 +1,17 @@
-"""jit'd wrapper for the pre-aggregated window-stats kernel.
+"""jit'd wrappers for the window-aggregation kernels.
 
-``window_stats(...)`` computes (Q, NW, L, 5) stat vectors for a batch of
-request rows against an online store's state, dispatching between the
-Pallas kernel and the jnp reference.  Finalization (mean/std/...) is done
-by the caller (``OnlineFeatureStore`` / benchmarks) — the kernel's contract
-is the composable stat vector, which is what pre-aggregation preserves.
+* ``window_stats(...)`` computes (Q, NW, L, 5) stat vectors for a batch of
+  request rows against an online store's state, dispatching between the
+  Pallas kernel and the jnp reference.  Finalization (mean/std/...) is done
+  by the caller (``OnlineFeatureStore`` / benchmarks) — the kernel's
+  contract is the composable stat vector, which is what pre-aggregation
+  preserves.
+* ``fold_levels(...)`` computes the doubling levels of a segmented
+  idempotent combine (min/max/or) — the hot loop of the offline engine's
+  windowed MIN/MAX/DISTINCT scan (``windows.segmented_windowed_fold``).
+  The Pallas kernel keeps all levels VMEM-resident; the jnp reference is
+  the CPU/XLA fallback and is built from the same static shifts (so both
+  compile in seconds where the old gather-chain formulation took minutes).
 """
 
 from __future__ import annotations
@@ -15,10 +22,23 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.window_agg.ref import window_stats_ref
-from repro.kernels.window_agg.window_agg import window_stats_pallas
+from repro.kernels.window_agg.ref import (
+    fold_identity,
+    fold_levels_ref,
+    fold_num_levels,
+    window_stats_ref,
+)
+from repro.kernels.window_agg.window_agg import (
+    _FOLD_LANE,
+    fold_levels_pallas,
+    window_stats_pallas,
+)
 
-__all__ = ["window_stats"]
+__all__ = ["window_stats", "fold_levels"]
+
+# beyond this many rows the stacked levels outgrow a single core's VMEM
+# budget; fall back to the (identically-formulated) XLA path
+_FOLD_PALLAS_MAX_ROWS = 1 << 17
 
 
 @functools.partial(
@@ -52,3 +72,49 @@ def window_stats(
         windows=tuple(windows), bucket_size=bucket_size,
         interpret=interpret,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("op", "impl", "interpret"))
+def fold_levels(
+    x: jnp.ndarray,    # (N,) f32 (min/max) or int32 (or)
+    seg: jnp.ndarray,  # (N,) int32 segment-start index per row
+    *,
+    op: str,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Doubling levels of the segmented combine: (KL, N).
+
+    Level k row i = op over rows [max(i - 2^k + 1, seg_i), i].  KL =
+    floor(log2(N)) + 1, enough for any in-segment range query via binary
+    decomposition (see ``windows.segmented_windowed_fold``).
+    """
+    n = x.shape[0]
+    levels = fold_num_levels(n)
+    if impl == "auto":
+        impl = (
+            "pallas"
+            if jax.default_backend() == "tpu" and n <= _FOLD_PALLAS_MAX_ROWS
+            else "xla"
+        )
+    if impl == "xla":
+        return fold_levels_ref(x, seg, op)
+
+    # pad the flat rows out to whole (8, 128) f32 tiles; padded rows start
+    # their own segments (seg = own index) so they never leak backwards,
+    # and real rows never look forward — the pad is inert.
+    lane = _FOLD_LANE
+    rows = -(-n // lane)
+    rows += (-rows) % 8
+    m = rows * lane
+    ident = fold_identity(op, x.dtype)
+    xp = jnp.full((m,), ident, x.dtype).at[:n].set(x)
+    segp = jnp.arange(m, dtype=jnp.int32).at[:n].set(seg)
+    out = fold_levels_pallas(
+        xp.reshape(rows, lane),
+        segp.reshape(rows, lane),
+        op=op,
+        levels=levels,
+        interpret=interpret,
+    )
+    return out.reshape(levels, m)[:, :n]

@@ -1,14 +1,23 @@
-"""Pure-jnp oracle for the pre-aggregated window query kernel.
+"""Pure-jnp oracles for the window-aggregation kernels.
 
-Given the online store's ring buffers + bucket pre-aggregates and a batch
-of request rows, compute for every (query, window, lane) the five-stat
-vector (sum, count, min, max, sumsq) over the RANGE window ending at the
-request (inclusive of the request row) — the exact semantics of
-``OnlineFeatureStore._query_pure_preagg``.
+* :func:`window_stats_ref` — the pre-aggregated multi-window query: given
+  the online store's ring buffers + bucket pre-aggregates and a batch of
+  request rows, compute for every (query, window, lane) the five-stat
+  vector (sum, count, min, max, sumsq) over the RANGE window ending at the
+  request (inclusive of the request row) — the exact semantics of
+  ``OnlineFeatureStore``'s pre-agg query path.
+* :func:`fold_levels_ref` — the offline segmented-combine scan: all
+  doubling levels of a segmented idempotent fold (min / max / bitwise-or),
+  the hot loop of ``windows.segmented_windowed_fold``.  Level ``k`` holds
+  the combine over ``[max(i - 2^k + 1, seg_start_i), i]`` for every row;
+  each level is one *static* shift (pad + slice — never a gather, which is
+  what made the old sparse-table formulation compile minutes-slow) plus
+  one elementwise combine.
 """
 
 from __future__ import annotations
 
+import math
 from typing import Sequence, Tuple
 
 import jax.numpy as jnp
@@ -16,7 +25,66 @@ import jax.numpy as jnp
 POS_INF = jnp.float32(3.0e38)
 NEG_INF = jnp.float32(-3.0e38)
 
-__all__ = ["window_stats_ref", "POS_INF", "NEG_INF"]
+__all__ = [
+    "window_stats_ref",
+    "fold_levels_ref",
+    "fold_num_levels",
+    "fold_identity",
+    "fold_op",
+    "POS_INF",
+    "NEG_INF",
+]
+
+
+# segmented idempotent combines the fold kernel supports
+_FOLD_OPS = {
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "or": jnp.bitwise_or,
+}
+
+
+def fold_op(op: str):
+    return _FOLD_OPS[op]
+
+
+def fold_identity(op: str, dtype) -> jnp.ndarray:
+    if op == "min":
+        return POS_INF.astype(dtype)
+    if op == "max":
+        return NEG_INF.astype(dtype)
+    if op == "or":
+        return jnp.zeros((), dtype)
+    raise ValueError(f"unknown fold op {op!r}")
+
+
+def fold_num_levels(n: int) -> int:
+    """Number of doubling levels for ``n`` rows (level 0 = the rows)."""
+    return max(1, int(math.floor(math.log2(max(n, 1)))) + 1)
+
+
+def fold_levels_ref(
+    x: jnp.ndarray,    # (N,) f32 (min/max) or int32 (or)
+    seg: jnp.ndarray,  # (N,) int32 — each row's key-segment start index
+    op: str,
+) -> jnp.ndarray:
+    """Returns (KL, N): level k = op over [max(i - 2^k + 1, seg_i), i]."""
+    n = x.shape[0]
+    ident = fold_identity(op, x.dtype)
+    f = _FOLD_OPS[op]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    levels = [x]
+    k = 0
+    while (1 << (k + 1)) <= max(n, 1):
+        half = 1 << k
+        prev = levels[-1]
+        shifted = jnp.concatenate(
+            [jnp.full((half,), ident, x.dtype), prev[:-half]]
+        )
+        shifted = jnp.where(idx - half >= seg, shifted, ident)
+        levels.append(f(prev, shifted))
+        k += 1
+    return jnp.stack(levels, 0)
 
 
 def window_stats_ref(

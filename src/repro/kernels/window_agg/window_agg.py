@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["window_stats_pallas"]
+__all__ = ["window_stats_pallas", "fold_levels_pallas"]
 
 _TS_EMPTY = -2147483648  # python literal: kernels must not capture device constants
 _POS_INF = 3.0e38
@@ -143,3 +143,92 @@ def window_stats_pallas(
         out_shape=jax.ShapeDtypeStruct((Q, NW, L, 5), jnp.float32),
         interpret=interpret,
     )(q_key, q_ts, ring_ts, ring_lanes, bagg_stats, bagg_bucket, q_lanes)
+
+
+# ---------------------------------------------------------------------------
+# Segmented-combine fold levels (offline scan hot loop)
+# ---------------------------------------------------------------------------
+
+_FOLD_LANE = 128  # TPU lane width; rows are stored flat as (R, 128) tiles
+
+
+def _fold_ident(op: str, dtype):
+    if op == "min":
+        return jnp.asarray(_POS_INF, dtype)
+    if op == "max":
+        return jnp.asarray(_NEG_INF, dtype)
+    return jnp.zeros((), dtype)
+
+
+def _fold_combine(op: str):
+    return {"min": jnp.minimum, "max": jnp.maximum, "or": jnp.bitwise_or}[op]
+
+
+def _flat_shift(a: jnp.ndarray, d: int, fill) -> jnp.ndarray:
+    """Shift a flat row-major (R, LANE) array right by ``d`` positions,
+    filling with ``fill`` — static pads/slices/concats only (Mosaic-
+    friendly; a gather here is what blew up the old XLA formulation)."""
+    rows, lanes = a.shape
+    rshift, lshift = divmod(d, lanes)
+    if rshift:
+        a = jnp.concatenate(
+            [jnp.full((rshift, lanes), fill, a.dtype), a[: rows - rshift]],
+            axis=0,
+        )
+    if lshift:
+        carry = jnp.concatenate(
+            [jnp.full((1, lanes), fill, a.dtype), a[:-1]], axis=0
+        )
+        a = jnp.concatenate(
+            [carry[:, lanes - lshift:], a[:, : lanes - lshift]], axis=1
+        )
+    return a
+
+
+def _fold_levels_kernel(x_ref, seg_ref, out_ref, *, op: str, levels: int):
+    """All doubling levels of the segmented combine, VMEM-resident.
+
+    x/seg are the (R, 128) row-major reshape of the (N,) inputs; level k of
+    the output holds op over [max(i - 2^k + 1, seg_i), i] per flat row i.
+    One static shifted combine per level — the whole scan is log2(N)
+    vector ops over the resident tile, no HBM round-trips between levels.
+    """
+    x = x_ref[...]
+    seg = seg_ref[...]
+    ident = _fold_ident(op, x.dtype)
+    f = _fold_combine(op)
+    row = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    idx = row * _FOLD_LANE + lane
+    cur = x
+    out_ref[0] = cur
+    for k in range(levels - 1):
+        half = 1 << k
+        shifted = jnp.where(
+            idx - half >= seg, _flat_shift(cur, half, ident), ident
+        )
+        cur = f(cur, shifted)
+        out_ref[k + 1] = cur
+
+
+def fold_levels_pallas(
+    x2: jnp.ndarray,    # (R, 128) padded row-major values
+    seg2: jnp.ndarray,  # (R, 128) int32 padded segment starts
+    *,
+    op: str,
+    levels: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (levels, R, 128) doubling-fold levels."""
+    R = x2.shape[0]
+    kernel = functools.partial(_fold_levels_kernel, op=op, levels=levels)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((levels, R, _FOLD_LANE), x2.dtype),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        interpret=interpret,
+    )(x2, seg2)

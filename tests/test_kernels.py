@@ -203,3 +203,55 @@ def test_window_stats_kernel_matches_online_store():
     np.testing.assert_allclose(
         stats[:, 0, 0, 0] / stats[:, 0, 0, 1], res["m"], rtol=1e-4, atol=1e-2
     )
+
+
+# ---------------------------------------------------------------------------
+# segmented-combine fold levels (offline window scan hot loop)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.window_agg.ops import fold_levels
+from repro.kernels.window_agg.ref import fold_levels_ref, fold_num_levels
+
+
+def _seg_starts(key):
+    from repro.core.windows import segment_starts
+
+    return segment_starts(jnp.asarray(key, jnp.int32))
+
+
+@pytest.mark.parametrize("N", [5, 100, 1024, 4097])
+@pytest.mark.parametrize("op", ["min", "max", "or"])
+def test_fold_levels_kernel_matches_ref(N, op):
+    import zlib
+
+    # zlib.crc32, not hash(): str hashing is randomized per process and
+    # would make any parity failure unreproducible
+    rng = np.random.default_rng(zlib.crc32(f"{N}-{op}".encode()) % 2**31)
+    key = np.sort(rng.integers(0, 7, N)).astype(np.int32)
+    seg = _seg_starts(key)
+    if op == "or":
+        x = jnp.asarray(rng.integers(-2**31, 2**31 - 1, N), jnp.int32)
+    else:
+        x = jnp.asarray(rng.normal(size=N).astype(np.float32))
+    ref = fold_levels_ref(x, seg, op)
+    pal = fold_levels(x, seg, op=op, impl="pallas", interpret=True)
+    assert ref.shape == (fold_num_levels(N), N)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_fold_levels_windowed_query_vs_bruteforce():
+    """Levels + the two-gather idempotent query == brute-force window min."""
+    from repro.core.windows import (
+        segment_starts, segmented_windowed_fold, window_start_rows,
+    )
+
+    rng = np.random.default_rng(11)
+    N = 777
+    key = np.sort(rng.integers(0, 5, N)).astype(np.int32)
+    x = jnp.asarray(rng.normal(size=N).astype(np.float32))
+    seg = segment_starts(jnp.asarray(key))
+    j = window_start_rows(seg, 37)
+    out = np.asarray(segmented_windowed_fold(x, seg, j, "min"))
+    xs, jn = np.asarray(x), np.asarray(j)
+    ref = np.array([xs[jn[i]:i + 1].min() for i in range(N)])
+    np.testing.assert_array_equal(out, ref)

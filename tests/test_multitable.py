@@ -317,11 +317,10 @@ def test_validation_errors():
     # union windows must be RANGE
     with pytest.raises(ValueError, match="RANGE"):
         w_sum(Col("a"), rows_window(10), union=("wires",))
-    # non-composable agg over a union
-    with pytest.raises(ValueError, match="not supported over WINDOW UNION"):
-        WindowAgg(
-            Agg.TOPN_FREQ, Col("a"), range_window(10), union=("wires",)
-        )
+    # every registered agg is union-composable since the unified algebra
+    # (FIRST/TOPN_FREQ compose via extreme/tail states)
+    for agg in Agg:
+        WindowAgg(agg, Col("a"), range_window(10), union=("wires",))
     # no windows inside join args, no joins inside window args
     with pytest.raises(ValueError, match="row-level"):
         last_join(w_sum(Col("a"), range_window(10)), "wires", on="acct")

@@ -307,3 +307,76 @@ def test_shard_row_counts_balance():
     assert counts.sum() == n
     # uniform keys => no shard owns everything
     assert counts.min() > 0
+
+
+def test_hash_routing_spreads_strided_keys():
+    """Adversarial key pattern (all keys ≡ 0 mod S): raw modulo routing
+    collapses onto shard 0; the default mix64-Feistel routing spreads the
+    load — visible in ShardRouter's skew histogram."""
+    from repro.serve.router import ShardRouter
+    from repro.serve.service import FeatureService
+
+    S, n_keys = 4, 64
+    view = FeatureView(
+        "skew", DB.primary,
+        {"s": w_sum(Col("amount"), range_window(100))},
+    )
+    strided = np.arange(0, n_keys * S, S, dtype=np.int32)  # all ≡ 0 mod S
+
+    def histogram(hash_routing):
+        store = ShardedOnlineStore(
+            view, num_keys=n_keys * S, num_shards=S, capacity=64,
+            hash_routing=hash_routing,
+        )
+        router = ShardRouter(FeatureService("svc", view, store), ingest=False)
+        for k in strided:
+            router.submit(dict(acct=int(k), ts=10, amount=1.0, merchant=0))
+        router.drain()
+        return router.shard_histogram()
+
+    mod = histogram(False)
+    hashed = histogram(True)
+    assert mod[0] == len(strided) and (mod[1:] == 0).all()  # the collapse
+    assert (hashed > 0).all()                               # the spread
+    assert hashed.max() < len(strided) // 2
+    assert hashed.sum() == mod.sum() == len(strided)
+
+
+@pytest.mark.parametrize("hash_routing", [False, True])
+def test_hash_routing_same_answers(hash_routing):
+    """Routing choice is invisible in answers: both modes match the
+    single-device store bit-for-bit (per-key state is key-local)."""
+    rng = np.random.default_rng(17)
+    view = FeatureView(
+        "hr", DB.primary,
+        {"s": w_sum(Col("amount"), range_window(300, bucket=64)),
+         "m": w_mean(Col("amount"), rows_window(5))},
+    )
+    n = 300
+    tx = dict(
+        acct=(rng.integers(0, K, n) * 8 % K).astype(np.int32),  # strided-ish
+        ts=np.arange(n, dtype=np.int32),
+        amount=rng.gamma(2.0, 10.0, n).astype(np.float32),
+        merchant=np.zeros(n, np.int32),
+    )
+    single = OnlineFeatureStore(view, num_keys=K, capacity=64)
+    sharded = ShardedOnlineStore(
+        view, num_keys=K, num_shards=4, capacity=64,
+        hash_routing=hash_routing,
+    )
+    by_key = _bykey(tx, "acct")
+    single.ingest(by_key)
+    sharded.ingest(by_key)
+    req = dict(
+        acct=np.arange(K, dtype=np.int32),
+        ts=np.full(K, n + 1, np.int32),
+        amount=np.ones(K, np.float32),
+        merchant=np.zeros(K, np.int32),
+    )
+    for mode in ("naive", "preagg"):
+        a = single.query(req, mode=mode)
+        b = sharded.query(req, mode=mode)
+        for f in view.features:
+            np.testing.assert_array_equal(
+                np.asarray(a[f]), np.asarray(b[f]), err_msg=f"{mode}:{f}"
+            )
