@@ -22,35 +22,13 @@ import numpy as np
 
 from benchmarks import common
 from benchmarks.common import emit, timeit
-from repro.core import (
-    Col, FeatureView, OfflineEngine, OnlineFeatureStore,
-    range_window, rows_window, w_count, w_max, w_mean, w_std, w_sum,
-)
-from repro.data.synthetic import FRAUD_SCHEMA, fraud_stream
+from repro.core import OfflineEngine, OnlineFeatureStore
+from repro.data.synthetic import fraud_stream
+from repro.scenarios import fraud_view  # noqa: F401  (also re-exported)
 
 HIST_ROWS = 20_000
 NUM_CARDS = 256
 Q = 64  # request batch
-
-
-def fraud_view() -> FeatureView:
-    amt = Col("amount")
-    w1h, w6h = range_window(3600, bucket=64), range_window(21600, bucket=64)
-    return FeatureView(
-        name="fraud_features",
-        schema=FRAUD_SCHEMA,
-        features={
-            "amt_sum_1h": w_sum(amt, w1h),
-            "amt_mean_1h": w_mean(amt, w1h),
-            "amt_std_1h": w_std(amt, w1h),
-            "tx_count_1h": w_count(amt, w1h),
-            "amt_sum_6h": w_sum(amt, w6h),
-            "amt_max_6h": w_max(amt, w6h),
-            "tx_count_50": w_count(amt, rows_window(50)),
-            "big_ratio_1h": w_count(amt > 100.0, w1h)
-            / (1.0 + w_count(amt, w1h)),
-        },
-    )
 
 
 def run() -> None:

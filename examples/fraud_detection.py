@@ -28,36 +28,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.featinsight_fraud import smoke_config
-from repro.core import (
-    Col, FeatureRegistry, FeatureView, OfflineEngine, OnlineFeatureStore,
-    range_window, rows_window, w_count, w_max, w_mean, w_std, w_sum,
-)
-from repro.data.synthetic import FRAUD_SCHEMA, fraud_stream
+from repro.core import FeatureRegistry, OfflineEngine, OnlineFeatureStore
+from repro.data.synthetic import fraud_stream
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.scenarios import fraud_view
 from repro.serve.service import FeatureService, ScoringService
 
 N_ROWS = 4_000
 NUM_CARDS = 64
 SPLIT = 0.8
 
-
-def fraud_view() -> FeatureView:
-    amt = Col("amount")
-    w1h = range_window(3600, bucket=64)
-    return FeatureView(
-        name="fraud_demo", schema=FRAUD_SCHEMA,
-        features={
-            "amt_sum_1h": w_sum(amt, w1h),
-            "amt_mean_1h": w_mean(amt, w1h),
-            "amt_std_1h": w_std(amt, w1h),
-            "tx_count_1h": w_count(amt, w1h),
-            "amt_max_1h": w_max(amt, w1h),
-            "tx_count_20": w_count(amt, rows_window(20)),
-            "amt_now": amt,
-            "big_now": amt > 100.0,
-        },
-    )
+# the canonical fraud view (repro.scenarios / docs/CATALOG.md) includes a
+# 6h window: the online stores need enough pre-agg buckets to cover it
+STORE_KW = dict(num_keys=NUM_CARDS, num_buckets=512, bucket_size=64)
 
 
 def main() -> None:
@@ -90,8 +74,9 @@ def main() -> None:
                        weight_decay=0.01)
     table = jnp.asarray(rng.normal(0, 0.02, (1 << 12, cfg.d_model)), jnp.float32)
 
-    fs_stub = FeatureService("fraud_svc", view, OnlineFeatureStore(
-        view, num_keys=NUM_CARDS, num_buckets=64, bucket_size=64), registry)
+    fs_stub = FeatureService(
+        "fraud_svc", view, OnlineFeatureStore(view, **STORE_KW), registry
+    )
     svc = ScoringService(fs_stub, model, params, table)
 
     def featvec(Xb):
@@ -125,8 +110,7 @@ def main() -> None:
           f"in {time.perf_counter() - t0:.1f}s")
 
     # ---- 3. online: deploy + replay the unseen tail -------------------------
-    store = OnlineFeatureStore(view, num_keys=NUM_CARDS, num_buckets=64,
-                               bucket_size=64)
+    store = OnlineFeatureStore(view, **STORE_KW)
     order = np.lexsort((train_cols["ts"], train_cols["card"]))
     store.ingest({c: v[order] for c, v in train_cols.items()})
     fsvc = FeatureService("fraud_svc", view, store, registry)

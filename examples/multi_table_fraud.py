@@ -26,55 +26,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (
-    Col,
-    FeatureRegistry,
-    FeatureView,
-    OfflineEngine,
-    OnlineFeatureStore,
-    last_join,
-    range_window,
-    w_count,
-    w_mean,
-    w_sum,
-)
+from repro.core import FeatureRegistry, OfflineEngine, OnlineFeatureStore
 from repro.core.consistency import verify_view
 from repro.data.synthetic import MULTITABLE_DB, multitable_stream
+from repro.scenarios import multi_table_view
 
 N_ROWS = 3_000
 NUM_ACCOUNTS = 64
 NUM_MERCHANTS = 16
 T_MAX = 40_000
-
-
-def multi_table_view() -> FeatureView:
-    amt = Col("amount")
-    w1h = range_window(3600, bucket=64)
-    credit = last_join(
-        Col("credit_limit"), "accounts", on="account", default=1000.0
-    )
-    return FeatureView(
-        name="fraud_multitable",
-        description="cross-table fraud features: profile joins + union windows",
-        features={
-            # point-in-time LAST JOINs
-            "credit_limit": credit,
-            "acct_risk": last_join(
-                Col("risk_score"), "accounts", on="account", default=0.5
-            ),
-            "merchant_reports": last_join(
-                Col("fraud_reports"), "merchants", on="merchant"
-            ),
-            # WINDOW UNION: card spend + wire spend in one trailing window
-            "outflow_sum_1h": w_sum(amt, w1h, union=("wires",)),
-            "outflow_cnt_1h": w_count(amt, w1h, union=("wires",)),
-            "outflow_mean_1h": w_mean(amt, w1h, union=("wires",)),
-            # derived row-level math mixing joins and unions
-            "limit_utilization": w_sum(amt, w1h, union=("wires",)) / credit,
-            "big_vs_limit": (amt / credit) > 0.5,
-        },
-        database=MULTITABLE_DB,
-    )
 
 
 def main() -> None:

@@ -22,11 +22,12 @@ import time
 import numpy as np
 
 from repro.core import (
-    Col, FeatureRegistry, FeatureView, OfflineEngine, OnlineFeatureStore,
-    Signature, range_window, rows_window, w_count, w_mean, w_sum,
+    Col, FeatureRegistry, OfflineEngine, OnlineFeatureStore,
+    range_window, rows_window, w_count, w_sum,
 )
 from repro.core.consistency import verify_view
-from repro.data.synthetic import RECO_SCHEMA, reco_stream
+from repro.data.synthetic import reco_stream
+from repro.scenarios import reco_view
 from repro.serve.service import BatchScheduler, FeatureService
 
 N_ROWS = 6_000
@@ -44,16 +45,7 @@ def main() -> None:
     engine = OfflineEngine()
 
     t0 = time.perf_counter()
-    v1 = FeatureView(
-        name="user_activity", schema=RECO_SCHEMA,
-        features={
-            "spend_1h": w_sum(spend, range_window(3600, bucket=64)),
-            "orders_1h": w_count(spend, range_window(3600, bucket=64)),
-            "avg_price_20": w_mean(Col("price"), rows_window(20)),
-            "cross_user_prod": Signature((Col("user"), Col("product")), bits=20),
-        },
-        description="v1: hourly activity + user-product cross",
-    )
+    v1 = reco_view()  # the canonical scenario view (docs/CATALOG.md)
     registry.register(v1)
     t_design = time.perf_counter() - t0
 

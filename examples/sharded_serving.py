@@ -30,17 +30,9 @@ force_host_devices(8)
 import jax
 import numpy as np
 
-from repro.core import (
-    Col,
-    FeatureView,
-    OnlineFeatureStore,
-    last_join,
-    range_window,
-    w_count,
-    w_mean,
-    w_sum,
-)
+from repro.core import OnlineFeatureStore
 from repro.data.synthetic import MULTITABLE_DB, multitable_stream
+from repro.scenarios import sharded_view as view
 from repro.serve.router import ShardRouter
 from repro.serve.service import BatchScheduler, FeatureService
 
@@ -50,29 +42,6 @@ NUM_MERCHANTS = 16
 HIST_ROWS = 2_000
 T_MAX = 40_000
 N_REQUESTS = 200
-
-
-def view() -> FeatureView:
-    amt = Col("amount")
-    w1h = range_window(3600, bucket=64)
-    credit = last_join(
-        Col("credit_limit"), "accounts", on="account", default=1000.0
-    )
-    return FeatureView(
-        name="fraud_sharded",
-        description="sharded serving of cross-table fraud features",
-        features={
-            "credit_limit": credit,
-            "merchant_ticket": last_join(
-                Col("avg_ticket"), "merchants", on="merchant", default=50.0
-            ),
-            "outflow_1h": w_sum(amt, w1h, union=("wires",)),
-            "outflow_cnt_1h": w_count(amt, w1h, union=("wires",)),
-            "spend_mean_1h": w_mean(amt, w1h),
-            "utilization": w_sum(amt, w1h, union=("wires",)) / credit,
-        },
-        database=MULTITABLE_DB,
-    )
 
 
 def preload(store, tables) -> None:

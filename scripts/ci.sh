@@ -12,7 +12,13 @@ if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
   export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ ${XLA_FLAGS}}"
 fi
 python -m pytest -x -q "$@"
+# benchmark smoke includes bench_shard's multi-scenario row (3 views on one
+# mesh vs isolated stores, bit-exactness gated) so cross-view routing can't
+# silently regress
 python -m benchmarks.run --smoke
 # compile-time budget: offline MIN/MAX at N=5k must compile in < 30 s (the
 # seed's sparse-table formulation took ~150 s; keep the blowup dead)
 python -c "from benchmarks.bench_window_agg import compile_budget_check; compile_budget_check(5000, 30.0)"
+# docs gate: the generated feature catalog must match the live view
+# definitions (regenerate-and-diff; run `python -m repro.catalog` to fix)
+python -m repro.catalog --check

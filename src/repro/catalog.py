@@ -1,0 +1,121 @@
+"""Generated feature catalog — the repo's always-in-sync docs layer.
+
+Feature stores live or die by discoverability: a feature that isn't
+documented gets rebuilt (slightly differently) by the next team, which is
+exactly the drift FeatInsight's lineage/verification machinery exists to
+prevent.  So the catalog is *generated from the code*: every canonical
+scenario view in :mod:`repro.scenarios` renders itself via
+:meth:`~repro.core.view.FeatureView.describe` (source tables, per-column
+window/agg lineage, rendered SQL, deploy history), and CI regenerates and
+diffs so ``docs/CATALOG.md`` cannot go stale.
+
+Usage::
+
+    python -m repro.catalog            # (re)write docs/CATALOG.md
+    python -m repro.catalog --check    # exit 1 if docs/CATALOG.md is stale
+
+Output is deterministic (no wall-clock anywhere) — that's what makes the
+regenerate-and-diff gate possible.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.core.view import FeatureRegistry
+
+CATALOG_PATH = (
+    pathlib.Path(__file__).resolve().parents[2] / "docs" / "CATALOG.md"
+)
+
+_HEADER = """\
+# Feature catalog
+
+> **Generated** by `python -m repro.catalog` from `src/repro/scenarios.py`
+> — do not edit by hand.  CI runs `python -m repro.catalog --check` and
+> fails when this file is stale.
+
+Every canonical scenario deployed by this reproduction, with its feature
+views rendered from the live definitions: source tables and their roles,
+per-feature window/aggregation lineage, the OpenMLDB-flavoured SQL, and
+the services that deploy each view.
+"""
+
+
+def build_catalog() -> str:
+    """Render the full catalog markdown (deterministic)."""
+    from repro.scenarios import SCENARIOS
+
+    registry = FeatureRegistry()
+    sections = [_HEADER]
+    for scen in SCENARIOS.values():
+        views = scen.views()
+        for v in views:
+            registry.register(v)
+            if len(views) == 1:
+                registry.deploy(f"{scen.name}_svc", v.name, v.version)
+            else:
+                # the multi-scenario plane deploys every view under one
+                # service, tagged per scenario (MultiScenarioService)
+                registry.deploy(f"{scen.name}:{v.name}", v.name, v.version)
+        sections += [
+            f"## {scen.title} (`{scen.name}`)",
+            "",
+            scen.description,
+            "",
+            f"Run: `{scen.run}`",
+            "",
+        ]
+        if len(views) > 1:
+            shared = sorted(
+                t
+                for t in {tt for v in views for tt in v.tables}
+                if sum(t in v.tables for v in views) > 1
+            )
+            sections += [
+                f"Deployed together on one `ScenarioPlane` "
+                f"({len(views)} views, one store/mesh); shared tables "
+                f"ingested once: {', '.join(f'`{t}`' for t in shared)}.",
+                "",
+            ]
+        for v in views:
+            sections.append(v.describe(registry))
+    return "\n".join(sections).rstrip() + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="(re)generate or verify docs/CATALOG.md"
+    )
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="regenerate-and-diff: exit 1 if docs/CATALOG.md is stale",
+    )
+    ap.add_argument(
+        "--out", default=str(CATALOG_PATH), help="output path override"
+    )
+    args = ap.parse_args(argv)
+    out = pathlib.Path(args.out)
+    fresh = build_catalog()
+    if args.check:
+        current = out.read_text() if out.exists() else ""
+        if current != fresh:
+            print(
+                f"STALE: {out} does not match the generated catalog; "
+                "run `python -m repro.catalog`",
+                file=sys.stderr,
+            )
+            return 1
+        print(f"catalog up to date: {out}")
+        return 0
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(fresh)
+    print(f"wrote {out} ({len(fresh.splitlines())} lines)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

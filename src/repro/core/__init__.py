@@ -30,6 +30,7 @@ from repro.core.aggregates import AGG_SPECS, AggSpec, agg_spec  # noqa: F401
 from repro.core.storage import Database, RowCodec, TableSchema  # noqa: F401
 from repro.core.view import FeatureRegistry, FeatureView, render_sql  # noqa: F401
 from repro.core.engine import OfflineEngine  # noqa: F401
-from repro.core.online import OnlineFeatureStore  # noqa: F401
+from repro.core.online import OnlineFeatureStore, QueryProgram  # noqa: F401
 from repro.core.shard import ShardedOnlineStore, make_shard_mesh  # noqa: F401
+from repro.core.scenario import ScenarioPlane, merge_views  # noqa: F401
 from repro.core.consistency import ConsistencyReport, verify_view  # noqa: F401

@@ -54,6 +54,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import preagg as pg
 from repro.core import storage as st
@@ -67,7 +68,7 @@ from repro.core.expr import (
     eval_rowlevel,
 )
 
-__all__ = ["OnlineState", "OnlineFeatureStore"]
+__all__ = ["OnlineState", "OnlineFeatureStore", "QueryProgram"]
 
 _TS_MIN = jnp.int32(-2147483648)
 _POS_MAX = jnp.int32(2147483647)
@@ -204,7 +205,10 @@ class OnlineFeatureStore:
             bagg=pg.bucket_init(num_keys, num_buckets, self.num_lanes, bucket_size),
             sec=sec_rings,
         )
-        # jit caches (compiled once per view version)
+        # jit caches (compiled once per view version); the query fns go
+        # through the overridable _jit_query hook so the sharded store gets
+        # its vmapped-over-shards flavour for free — including every
+        # per-scenario QueryProgram compiled later against this store
         self._ingest_fn = jax.jit(self._ingest_pure, donate_argnums=(0,))
         self._sec_ingest_fns = {
             t: jax.jit(
@@ -213,19 +217,28 @@ class OnlineFeatureStore:
             )
             for t, i in self._sec_index.items()
         }
-        self._query_naive_fn = jax.jit(self._query_pure_naive)
-        self._query_preagg_fn = jax.jit(self._query_pure_preagg)
+        self._query_naive_fn = self._jit_query(self._query_pure_naive)
+        self._query_preagg_fn = self._jit_query(self._query_pure_preagg)
 
     # -- lane evaluation ------------------------------------------------------
 
-    def _lanes(self, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
-        """(N, L) materialized window-arg lanes from raw columns."""
-        if not self._lane_exprs:
+    def _lanes(
+        self,
+        columns: Dict[str, jnp.ndarray],
+        exprs: Optional[List[Expr]] = None,
+    ) -> jnp.ndarray:
+        """(N, L) materialized window-arg lanes from raw columns.
+
+        ``exprs`` overrides the lane list (a scenario program's subset, so
+        a request only needs the columns *its* view references).
+        """
+        exprs = self._lane_exprs if exprs is None else exprs
+        if not exprs:
             n = jnp.asarray(columns[self.schema.key]).shape[0]
             return jnp.zeros((n, 1), jnp.float32)
         vals = [
             eval_rowlevel(e, columns, {}).astype(jnp.float32)
-            for e in self._lane_exprs
+            for e in exprs
         ]
         return jnp.stack(vals, axis=-1)
 
@@ -351,7 +364,7 @@ class OnlineFeatureStore:
 
     # -- secondary-state lookups ---------------------------------------------
 
-    def _union_gathers(self, state, key, gkey):
+    def _union_gathers(self, state, key, gkey, tables=None):
         """Gather each union table's ring at the request key (shared across
         every union wagg touching that table).
 
@@ -359,27 +372,37 @@ class OnlineFeatureStore:
         :class:`~repro.core.shard.ShardedOnlineStore`), ``gkey`` the global
         key: key-partitioned union rings hold local ids, replicated ones
         global ids.  For the single-device store both are the same array.
+        ``tables`` restricts the gathers to the union tables a scenario
+        program actually folds.
         """
         return {
             t: st.ring_gather(
                 state.sec[self._sec_index[t]],
                 key if self._sec_sharded.get(t) else gkey,
             )
-            for t in self._union_tables
+            for t in (self._union_tables if tables is None else tables)
         }
 
-    def _last_join_vals(self, state, ts_q, join_keys) -> List[jnp.ndarray]:
+    def _last_join_vals(
+        self, state, ts_q, join_keys, ljoin_order=None, join_col_index=None
+    ) -> List[jnp.ndarray]:
         """Point-in-time LAST JOIN answers, one (Q,) vector per join.
 
         Newest secondary row with key == request's join key and
         ``ts <= request ts``; ties on ts resolve to the latest-ingested row
-        (matching the offline stable (key, ts) sort).
+        (matching the offline stable (key, ts) sort).  ``ljoin_order``
+        restricts the joins computed and ``join_col_index`` maps join
+        columns into the (possibly program-scoped) ``join_keys`` tuple.
         """
         out = []
         gathers = {}
-        for lk in self._ljoin_order:
+        order = self._ljoin_order if ljoin_order is None else ljoin_order
+        col_ix = (
+            self._join_col_index if join_col_index is None else join_col_index
+        )
+        for lk in order:
             lj = self.ljoins[lk]
-            jk = join_keys[self._join_col_index[lj.on]]
+            jk = join_keys[col_ix[lj.on]]
             gk = (lj.table, lj.on)
             if gk not in gathers:
                 gathers[gk] = st.ring_gather(
@@ -437,23 +460,44 @@ class OnlineFeatureStore:
         return raw, ms, mb, ok
 
     def _query_pure(self, state, key, ts_q, req_lanes, join_keys, gkey,
-                    use_preagg: bool):
+                    use_preagg: bool, wagg_order=None, ljoin_order=None,
+                    req_lane_of=None, join_col_index=None):
         """Generic fold-then-finalize over every window aggregation.
 
         For each wagg: lift the request row, combine with the primary
         window's fold (raw ring rows, or boundary rows ⊕ bucket states on
         the pre-agg path), combine with each union table's fold, finalize.
         All semantics live in the :mod:`repro.core.aggregates` specs.
+
+        ``wagg_order`` / ``ljoin_order`` restrict the computation to a
+        subset of this store's aggregations and joins — how a
+        :class:`QueryProgram` serves one scenario's view against state
+        shared by many scenarios.  The subsets are trace-time constants, so
+        each program compiles to an executable that gathers and folds only
+        the lanes its view needs.  ``req_lane_of`` / ``join_col_index``
+        remap window args and join columns into the program-scoped
+        ``req_lanes`` / ``join_keys`` request tensors (requests carry only
+        the columns *their* view references); stored-state lane ids stay
+        global — the shared layout.
         """
+        wagg_order = self._wagg_order if wagg_order is None else wagg_order
+        req_lane_of = self._lane_of if req_lane_of is None else req_lane_of
         ts_buf, lanes_buf, valid = st.ring_gather(state.ring, key)
-        sec_gathers = self._union_gathers(state, key, gkey)
+        union_tables = tuple(
+            t
+            for t in self._union_tables
+            if any(t in self.waggs[wk].union for wk in wagg_order)
+        )
+        sec_gathers = self._union_gathers(
+            state, key, gkey, tables=union_tables
+        )
         out = []
-        for wk in self._wagg_order:
+        for wk in wagg_order:
             wa = self.waggs[wk]
             spec = agg_spec(wa.agg)
             lane = self._lane_of[wa.arg.key]
             g = lanes_buf[..., lane]
-            r = req_lanes[:, lane]
+            r = req_lanes[:, req_lane_of[wa.arg.key]]
             # merge-order coordinate of the request row: primary stream
             # (rank = len(union), matching join.merge_streams), newer than
             # any stored row of the same (ts, stream)
@@ -486,7 +530,11 @@ class OnlineFeatureStore:
                     acc, spec.fold_rows(g_t, ts_t, m_t, jnp.int32(rank))
                 )
             out.append(spec.finalize(acc, n=wa.n))
-        out.extend(self._last_join_vals(state, ts_q, join_keys))
+        out.extend(
+            self._last_join_vals(
+                state, ts_q, join_keys, ljoin_order, join_col_index
+            )
+        )
         return tuple(out)
 
     def _query_pure_naive(self, state, key, ts_q, req_lanes, join_keys, gkey):
@@ -498,6 +546,17 @@ class OnlineFeatureStore:
         return self._query_pure(
             state, key, ts_q, req_lanes, join_keys, gkey, use_preagg=True
         )
+
+    def _jit_query(self, fn):
+        """How this store turns a pure query fn into a compiled one; the
+        sharded store overrides it to vmap over the leading shard axis
+        first, so per-scenario programs inherit the right flavour."""
+        return jax.jit(fn)
+
+    def compile_program(self, view) -> "QueryProgram":
+        """Compile a per-scenario query program for ``view`` against this
+        store's (possibly shared, multi-scenario) state."""
+        return QueryProgram(self, view)
 
     def _max_mid(self, wa: WindowAgg) -> int:
         """Static bound on middle-bucket count for a window."""
@@ -525,47 +584,97 @@ class OnlineFeatureStore:
             )
         return OnlineFeatureStore(view, num_keys=num_keys, **store_kwargs)
 
-    def _validate_join_cols(self, columns: Dict[str, jnp.ndarray]) -> None:
-        for c in self._join_cols:
+    def _validate_join_cols(
+        self,
+        columns: Dict[str, jnp.ndarray],
+        program: Optional["QueryProgram"] = None,
+    ) -> None:
+        cols = self._join_cols if program is None else program.join_cols
+        view = self.view if program is None else program.view
+        for c in cols:
             if c not in columns:
                 raise KeyError(
                     f"request rows must carry join-key column {c!r} "
-                    f"(LAST JOIN on {c!r} in view {self.view.name!r})"
+                    f"(LAST JOIN on {c!r} in view {view.name!r})"
                 )
 
-    def _request_arrays(self, columns: Dict[str, jnp.ndarray]):
-        """(key, ts, lanes, join_keys) request tensors, join cols validated."""
-        self._validate_join_cols(columns)
+    def _request_arrays(
+        self,
+        columns: Dict[str, jnp.ndarray],
+        program: Optional["QueryProgram"] = None,
+    ):
+        """(key, ts, lanes, join_keys) request tensors, join cols validated.
+
+        With a ``program``, lanes and join keys are scoped to that
+        scenario's view — requests need only the columns it references,
+        exactly as against a dedicated single-view store.
+        """
+        self._validate_join_cols(columns, program)
         key = jnp.asarray(columns[self.schema.key], jnp.int32)
         ts_q = jnp.asarray(columns[self.schema.ts], jnp.int32)
-        req_lanes = self._lanes(columns)
+        lane_exprs = None if program is None else program.lane_exprs
+        join_cols = self._join_cols if program is None else program.join_cols
+        req_lanes = self._lanes(columns, lane_exprs)
         join_keys = tuple(
-            jnp.asarray(columns[c], jnp.int32) for c in self._join_cols
+            jnp.asarray(columns[c], jnp.int32) for c in join_cols
         )
         return key, ts_q, req_lanes, join_keys
 
     def _finish_query(
-        self, columns, vals
+        self, columns, vals, program: Optional["QueryProgram"] = None
     ) -> Dict[str, jnp.ndarray]:
         """Pre-agg answers -> named features via row-level post-expressions."""
-        pre_values = dict(
-            zip(self._wagg_order + self._ljoin_order, vals)
-        )
+        if program is None:
+            keys = self._wagg_order + self._ljoin_order
+            features = self.view.features
+        else:
+            keys = list(program.wagg_order) + list(program.ljoin_order)
+            features = program.view.features
+        pre_values = dict(zip(keys, vals))
         out: Dict[str, jnp.ndarray] = {}
-        for fname, fexpr in self.view.features.items():
+        for fname, fexpr in features.items():
             out[fname] = eval_rowlevel(fexpr, columns, pre_values)
         return out
 
+    def _query_fn(self, mode: str, program: Optional["QueryProgram"]):
+        if program is not None:
+            return program.fn(mode)
+        return self._query_naive_fn if mode == "naive" else self._query_preagg_fn
+
+    def ingest_row_counts(self) -> Dict[str, int]:
+        """Rows stored per table, summed over all device state (from ring
+        cursors, so counts are rows *ever ingested*, not current capacity).
+
+        On a sharded store a key-partitioned table counts each row once
+        (rows live on exactly one shard) while a replicated LAST JOIN
+        target counts ``num_shards``× (one copy per shard) — which is
+        exactly the storage-cost accounting the multi-scenario plane's
+        shared-ingest claim is stated in.
+        """
+        counts = {self.schema.name: int(np.sum(self.state.ring.cursor))}
+        for t, i in self._sec_index.items():
+            counts[t] = int(np.sum(self.state.sec[i].cursor))
+        return counts
+
     def query(
-        self, columns: Dict[str, jnp.ndarray], mode: str = "preagg"
+        self,
+        columns: Dict[str, jnp.ndarray],
+        mode: str = "preagg",
+        program: Optional["QueryProgram"] = None,
     ) -> Dict[str, jnp.ndarray]:
         """Compute all view features for a batch of request rows.
 
         columns: raw request columns incl. key, ts, and any LAST JOIN key
         columns; (Q,) each.  Returns {feature_name: (Q,) f32}.
+
+        ``program`` answers with a per-scenario :class:`QueryProgram`
+        compiled by :meth:`compile_program` instead of this store's full
+        view — the multi-scenario serving path.
         """
-        key, ts_q, req_lanes, join_keys = self._request_arrays(columns)
-        fn = self._query_naive_fn if mode == "naive" else self._query_preagg_fn
+        key, ts_q, req_lanes, join_keys = self._request_arrays(
+            columns, program
+        )
+        fn = self._query_fn(mode, program)
         # pad the request to a power-of-two shape bucket (compilation
         # caching: one executable per bucket, not per request size)
         q = int(key.shape[0])
@@ -586,4 +695,68 @@ class OnlineFeatureStore:
             vals = tuple(v[:q] for v in vals)
         else:
             vals = fn(self.state, key, ts_q, req_lanes, join_keys, key)
-        return self._finish_query(columns, vals)
+        return self._finish_query(columns, vals, program)
+
+
+class QueryProgram:
+    """One scenario's compiled query against a shared store.
+
+    The multi-scenario plane (:mod:`repro.core.scenario`) deploys N feature
+    views on ONE store whose lane plan is the union of every view's window
+    arguments.  A QueryProgram is the per-view slice of that store: the
+    view's window aggregations and LAST JOINs as trace-time subsets, jitted
+    through the store's :meth:`OnlineFeatureStore._jit_query` hook (so a
+    sharded store yields a vmapped-over-shards program).  The compiled
+    executable gathers and folds only the lanes its view references — the
+    other scenarios' state is carried along untouched.
+
+    Every (wagg, ljoin) key of the view must exist in the store; the
+    store's answers through a program are bit-identical to a dedicated
+    single-view store fed the same stream (asserted in
+    ``tests/test_scenario.py``).
+    """
+
+    def __init__(self, store: OnlineFeatureStore, view):
+        exprs = list(view.features.values())
+        self.view = view
+        waggs = collect_window_aggs(exprs)
+        ljoins = collect_last_joins(exprs)
+        self.wagg_order: Tuple[Tuple, ...] = tuple(waggs.keys())
+        self.ljoin_order: Tuple[Tuple, ...] = tuple(ljoins.keys())
+        missing = [k for k in self.wagg_order if k not in store.waggs]
+        missing += [k for k in self.ljoin_order if k not in store.ljoins]
+        if missing:
+            raise ValueError(
+                f"view {view.name!r} is not a sub-view of store view "
+                f"{store.view.name!r}: {len(missing)} aggregation(s)/join(s) "
+                f"missing from the shared lane plan (first: {missing[0]!r})"
+            )
+        # program-scoped request tensors: requests carry only THIS view's
+        # columns, so lanes and join keys get their own (smaller) layout;
+        # stored-state lane ids stay global (the shared layout)
+        self.lane_exprs: List[Expr] = []
+        self.req_lane_of: Dict[Tuple, int] = {}
+        for wa in waggs.values():
+            if wa.arg.key not in self.req_lane_of:
+                self.req_lane_of[wa.arg.key] = len(self.lane_exprs)
+                self.lane_exprs.append(wa.arg)
+        self.join_cols: Tuple[str, ...] = ()
+        for lj in ljoins.values():
+            if lj.on not in self.join_cols:
+                self.join_cols += (lj.on,)
+        self.join_col_index = {c: i for i, c in enumerate(self.join_cols)}
+        subset = dict(
+            wagg_order=self.wagg_order,
+            ljoin_order=self.ljoin_order,
+            req_lane_of=self.req_lane_of,
+            join_col_index=self.join_col_index,
+        )
+        self._naive_fn = store._jit_query(
+            functools.partial(store._query_pure, use_preagg=False, **subset)
+        )
+        self._preagg_fn = store._jit_query(
+            functools.partial(store._query_pure, use_preagg=True, **subset)
+        )
+
+    def fn(self, mode: str):
+        return self._naive_fn if mode == "naive" else self._preagg_fn

@@ -1,0 +1,176 @@
+"""Multi-scenario serving plane — N feature views, one store, one mesh.
+
+FeatInsight's headline claim is breadth: 100+ real-world scenarios served
+from one platform, each with its own feature views but sharing storage and
+compute.  Before this module, every scenario paid for its own
+:class:`~repro.core.online.OnlineFeatureStore` (or sharded store + mesh):
+its own copy of shared tables, its own ingest stream, its own device
+memory.  :class:`ScenarioPlane` is the consolidation layer:
+
+* **One state.**  The plane merges the registered views into a single
+  internal view whose lane plan is the *union* of every view's window
+  arguments and whose secondary tables are the union of every view's
+  LAST JOIN / WINDOW UNION references (CSE'd by structural key, so two
+  scenarios asking for ``w_sum(amount, 1h)`` share one lane).  The merged
+  view backs one :class:`OnlineFeatureStore` — or one
+  :class:`~repro.core.shard.ShardedOnlineStore` on a single ``('shard',)``
+  mesh when ``num_shards`` is given.  A table referenced by many views
+  has one ring store per (table, shard), not per view.
+* **One ingest.**  Primary rows and secondary-table rows are ingested
+  once and serve every scenario; adding scenario #2..#N costs nothing at
+  ingest time.  :meth:`ingest_row_counts` exposes the accounting (and the
+  shared-ingest test asserts it).
+* **Per-scenario programs.**  Each view gets a
+  :class:`~repro.core.online.QueryProgram`: its window aggregations and
+  joins as trace-time subsets of the shared plan, compiled into an
+  executable that gathers and folds only what that view needs.  Queries
+  stay **bit-identical** to a dedicated single-view store fed the same
+  stream — per-key state depends only on the key's rows and their order,
+  and sharing lanes changes neither.
+
+The serving front-end (scenario-tagged routing, per-scenario stats) lives
+in :mod:`repro.serve` — see ``FeatureService.build_multi`` and the
+scenario-aware ``ShardRouter``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.expr import Expr, collect_tables
+from repro.core.online import OnlineFeatureStore, QueryProgram
+from repro.core.storage import Database, TableSchema
+from repro.core.view import FeatureView
+
+__all__ = ["merge_views", "ScenarioPlane"]
+
+
+def merge_views(
+    views: List[FeatureView], name: str = "scenario_plane"
+) -> FeatureView:
+    """Fuse N scenario views into the plane's one internal view.
+
+    Features are namespaced ``"<view>/<feature>"`` (view names must be
+    distinct); the merged database is the primary table plus the union of
+    all referenced secondary tables.  Every view must share the primary
+    schema, and two views referencing the same secondary table name must
+    agree on its schema — the plane stores that table once, so a schema
+    conflict would silently corrupt one of them.
+    """
+    if not views:
+        raise ValueError("merge_views needs at least one view")
+    names = [v.name for v in views]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate scenario view names: {sorted(names)}")
+    primary = views[0].schema
+    secondaries: Dict[str, TableSchema] = {}
+    features: Dict[str, Expr] = {}
+    for v in views:
+        if v.schema != primary:
+            raise ValueError(
+                f"scenario {v.name!r} has primary table {v.schema.name!r} "
+                f"({v.schema}), the plane's is {primary.name!r} ({primary}): "
+                "all scenarios of one plane share one primary stream"
+            )
+        for t in collect_tables(list(v.features.values())):
+            sch = v.database.table(t)
+            prev = secondaries.setdefault(t, sch)
+            if prev != sch:
+                raise ValueError(
+                    f"secondary table {t!r} has conflicting schemas across "
+                    f"scenarios ({prev} vs {sch}); shared tables are stored "
+                    "once, so schemas must agree"
+                )
+        for fname, expr in v.features.items():
+            features[f"{v.name}/{fname}"] = expr
+    db = Database(
+        name=name, primary=primary, secondary=tuple(secondaries.values())
+    )
+    return FeatureView(
+        name=name,
+        features=features,
+        database=db,
+        description=f"merged plane over scenarios: {', '.join(names)}",
+    )
+
+
+class ScenarioPlane:
+    """N deployed scenarios sharing one (optionally sharded) online store.
+
+    ``num_shards=None`` deploys on a single-device store; an integer
+    deploys on a :class:`~repro.core.shard.ShardedOnlineStore` over one
+    ``('shard',)`` mesh.  ``store_kwargs`` (capacity, num_buckets,
+    bucket_size, secondary_num_keys, ...) are shared by every scenario —
+    they size the one state all scenarios live in.
+    """
+
+    def __init__(
+        self,
+        views: Iterable[FeatureView],
+        *,
+        num_keys: int,
+        num_shards: Optional[int] = None,
+        name: str = "scenario_plane",
+        **store_kwargs,
+    ):
+        views = list(views)
+        self.views: Dict[str, FeatureView] = {v.name: v for v in views}
+        self.merged = merge_views(views, name=name)
+        self.store = OnlineFeatureStore.create(
+            self.merged,
+            num_keys=num_keys,
+            num_shards=num_shards,
+            **store_kwargs,
+        )
+        self.programs: Dict[str, QueryProgram] = {
+            v.name: self.store.compile_program(v) for v in views
+        }
+
+    # -- introspection ---------------------------------------------------------
+
+    @property
+    def scenarios(self) -> List[str]:
+        return list(self.views)
+
+    @property
+    def num_shards(self) -> int:
+        return int(getattr(self.store, "num_shards", 1))
+
+    @property
+    def tables(self) -> List[str]:
+        """All source tables of the plane (primary first, each once)."""
+        return self.merged.tables
+
+    def program(self, scenario: str) -> QueryProgram:
+        try:
+            return self.programs[scenario]
+        except KeyError:
+            raise KeyError(
+                f"unknown scenario {scenario!r}; plane serves "
+                f"{self.scenarios}"
+            ) from None
+
+    def ingest_row_counts(self) -> Dict[str, int]:
+        """Per-table stored row totals — each shared table counted once
+        (× replication on a sharded store), never once per scenario."""
+        return self.store.ingest_row_counts()
+
+    # -- data plane ------------------------------------------------------------
+
+    def ingest(self, columns) -> None:
+        """Ingest primary rows once, for every scenario."""
+        self.store.ingest(columns)
+
+    def ingest_table(self, table: str, columns) -> None:
+        """Ingest secondary-table rows once; every scenario referencing
+        ``table`` (via LAST JOIN or WINDOW UNION) sees them."""
+        self.store.ingest_table(table, columns)
+
+    def query(
+        self, scenario: str, columns, mode: str = "preagg"
+    ) -> Dict:
+        """Answer one scenario's feature vector for a request batch —
+        routed/compiled through that scenario's program against the shared
+        state.  Returns {feature_name: (Q,) f32} in that view's naming
+        (no plane prefix)."""
+        return self.store.query(columns, mode=mode, program=self.program(scenario))

@@ -200,7 +200,11 @@ class ShardedOnlineStore(OnlineFeatureStore):
         )
         # one compiled executable per path, vmapped over the shard axis;
         # GSPMD splits it across mesh devices (no cross-shard collectives
-        # in the body — results gather only when fetched to host)
+        # in the body — results gather only when fetched to host).  The
+        # query fns were already built by super().__init__ through the
+        # _jit_query override below, so they (and every per-scenario
+        # QueryProgram) are the vmapped flavour; only ingest needs
+        # re-wrapping for donation.
         self._ingest_fn = jax.jit(
             jax.vmap(self._ingest_pure), donate_argnums=(0,)
         )
@@ -211,8 +215,11 @@ class ShardedOnlineStore(OnlineFeatureStore):
             )
             for t, i in self._sec_index.items()
         }
-        self._query_naive_fn = jax.jit(jax.vmap(self._query_pure_naive))
-        self._query_preagg_fn = jax.jit(jax.vmap(self._query_pure_preagg))
+
+    def _jit_query(self, fn):
+        """Sharded query programs run vmapped over the leading shard axis
+        (per-scenario programs compiled later pick this up too)."""
+        return jax.jit(jax.vmap(fn))
 
     # -- routing ---------------------------------------------------------------
 
@@ -363,7 +370,10 @@ class ShardedOnlineStore(OnlineFeatureStore):
     # -- query -----------------------------------------------------------------
 
     def query(
-        self, columns: Dict[str, jnp.ndarray], mode: str = "preagg"
+        self,
+        columns: Dict[str, jnp.ndarray],
+        mode: str = "preagg",
+        program=None,
     ) -> Dict[str, jnp.ndarray]:
         """Route the request across shards, answer with the fused sharded
         query, scatter back to request order (same contract as the base
@@ -372,18 +382,22 @@ class ShardedOnlineStore(OnlineFeatureStore):
         Routing happens on the host straight from the request columns
         (normally numpy already); only the routed (S, bucket) grids are
         uploaded — no device round-trip on the latency-critical path.
+        ``program`` serves one scenario's compiled sub-view against the
+        shared sharded state (see :meth:`OnlineFeatureStore.compile_program`).
         """
-        self._validate_join_cols(columns)
+        self._validate_join_cols(columns, program)
         key_h = np.asarray(columns[self.schema.key]).astype(
             np.int32, copy=False
         )
         ts_h = np.asarray(columns[self.schema.ts]).astype(np.int32, copy=False)
-        lanes_h = np.asarray(self._lanes(columns))
+        lane_exprs = None if program is None else program.lane_exprs
+        join_cols = self._join_cols if program is None else program.join_cols
+        lanes_h = np.asarray(self._lanes(columns, lane_exprs))
         q = int(key_h.shape[0])
         shard, local = self._route_ids(key_h)
         plan = build_route(shard, self.num_shards, min_bucket=16)
         gkey_r = self._route_rows(plan, key_h, pad="repeat")
-        fn = self._query_naive_fn if mode == "naive" else self._query_preagg_fn
+        fn = self._query_fn(mode, program)
         vals = fn(
             self.state,
             self._put(self._route_rows(plan, local, pad="repeat")),
@@ -397,12 +411,12 @@ class ShardedOnlineStore(OnlineFeatureStore):
                         pad="repeat",
                     )
                 )
-                for c in self._join_cols
+                for c in join_cols
             ),
             self._put(gkey_r),                              # global key
         )
         return self._finish_query(
-            columns, self._scatter_back(plan, vals, q)
+            columns, self._scatter_back(plan, vals, q), program
         )
 
     # -- observability ---------------------------------------------------------

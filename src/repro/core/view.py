@@ -219,6 +219,92 @@ class FeatureView:
             }
         return out
 
+    def describe(self, registry: Optional["FeatureRegistry"] = None) -> str:
+        """Markdown catalog entry for this view — the docs layer's unit.
+
+        Renders what a feature-store catalog page must answer: which
+        source tables feed the view (and in what role), what each output
+        column computes (window/agg lineage + the OpenMLDB-flavoured SQL),
+        and — when a ``registry`` is passed — which services deploy it.
+        Deterministic output (no wall-clock times), so the generated
+        ``docs/CATALOG.md`` can be CI-gated by regenerate-and-diff.
+        """
+        exprs = list(self.features.values())
+        joins = collect_last_joins(exprs)
+        waggs = collect_window_aggs(exprs)
+        join_tables = {lj.table for lj in joins.values()}
+        union_tables = set()
+        for wa in waggs.values():
+            union_tables.update(wa.union)
+
+        def role(t: str) -> str:
+            r = []
+            if t in join_tables:
+                r.append("LAST JOIN target")
+            if t in union_tables:
+                r.append("WINDOW UNION stream")
+            return " + ".join(r) or "unreferenced"
+
+        lines = [f"### `{self.name}` (v{self.version})", ""]
+        if self.description:
+            lines += [self.description, ""]
+        lines += [
+            "**Source tables**",
+            "",
+            "| table | role | key | ts | columns |",
+            "|---|---|---|---|---|",
+        ]
+        prim = self.schema
+        lines.append(
+            f"| `{prim.name}` | primary | `{prim.key}` | `{prim.ts}` | "
+            f"{', '.join(f'`{c}`' for c in prim.columns)} |"
+        )
+        for t in collect_tables(exprs):
+            sch = self.database.table(t)
+            lines.append(
+                f"| `{sch.name}` | {role(t)} | `{sch.key}` | `{sch.ts}` | "
+                f"{', '.join(f'`{c}`' for c in sch.columns)} |"
+            )
+        lines += ["", "**Features**", ""]
+        for fname, rec in self.lineage().items():
+            parts = []
+            for w in rec["windows"]:
+                u = (
+                    f" UNION {'+'.join(w['union'])}" if w["union"] else ""
+                )
+                parts.append(
+                    f"{w['agg']} over {w['size']} "
+                    f"{'rows' if w['mode'] == 'rows' else 's RANGE'}{u}"
+                )
+            for j in rec["joins"]:
+                parts.append(
+                    f"LAST JOIN `{j['table']}` on `{j['on']}` "
+                    f"(default {j['default']})"
+                )
+            kind = "; ".join(parts) or "row-level"
+            cols = ", ".join(f"`{c}`" for c in rec["columns"]) or "—"
+            lines += [
+                f"- **`{fname}`** — {kind}; inputs: {cols}",
+                "",
+                "  ```sql",
+                f"  {rec['sql']}",
+                "  ```",
+                "",
+            ]
+        if registry is not None:
+            deps = registry.deployments(self.name)
+            if deps:
+                lines += ["**Deploy history**", ""]
+                for d in deps:
+                    lines.append(
+                        f"- service `{d['service']}` ← `{d['view']}` "
+                        f"v{d['version']} "
+                        f"({len(d['features'])} features, "
+                        f"{len(d['tables'])} tables)"
+                    )
+                lines.append("")
+        return "\n".join(lines)
+
     def evolve(self, new_features: Dict[str, Expr], description: str = "") -> "FeatureView":
         """Incremental redefinition: prior features are kept, new/overridden
         ones merged, version bumped (the paper's cached-version reuse)."""
@@ -293,6 +379,14 @@ class FeatureRegistry:
 
     def service(self, name: str) -> Dict:
         return self._services[name]
+
+    def deployments(self, view_name: Optional[str] = None) -> List[Dict]:
+        """Deploy records (optionally for one view), in deploy order."""
+        return [
+            rec
+            for rec in self._services.values()
+            if view_name is None or rec["view"] == view_name
+        ]
 
     # -- bookkeeping --------------------------------------------------------------
 

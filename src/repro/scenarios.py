@@ -1,0 +1,282 @@
+"""Canonical example scenarios — the repo's mirror of FeatInsight's
+"100+ real-world scenarios on one platform" claim.
+
+One module owns every example feature view so the docs stay honest: the
+feature catalog (``python -m repro.catalog`` → ``docs/CATALOG.md``), the
+README scenarios table, the benchmarks, and the multi-scenario tests all
+build their views from here.  Each :class:`Scenario` records what a
+platform catalog would: the view definition(s), the workload it models,
+and the command that runs it.
+
+The ``multi_scenario`` entry is the consolidation story: three views that
+share a WINDOW UNION stream (``wires``) and LAST JOIN dimension tables
+(``accounts``, ``merchants``), deployed together on one
+:class:`~repro.core.scenario.ScenarioPlane` — shared tables ingested once,
+answers bit-identical to three dedicated stores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+from repro.core import (
+    Col,
+    FeatureView,
+    Signature,
+    last_join,
+    range_window,
+    rows_window,
+    w_count,
+    w_distinct_approx,
+    w_max,
+    w_mean,
+    w_std,
+    w_sum,
+)
+from repro.data.synthetic import FRAUD_SCHEMA, MULTITABLE_DB, RECO_SCHEMA
+
+__all__ = [
+    "Scenario",
+    "SCENARIOS",
+    "fraud_view",
+    "reco_view",
+    "multi_table_view",
+    "sharded_view",
+    "multi_scenario_views",
+]
+
+
+# ---------------------------------------------------------------------------
+# View builders (one per deployed scenario)
+# ---------------------------------------------------------------------------
+
+
+def fraud_view() -> FeatureView:
+    """§3.3 fraud detection: trailing spend windows over card transactions."""
+    amt = Col("amount")
+    w1h, w6h = range_window(3600, bucket=64), range_window(21600, bucket=64)
+    return FeatureView(
+        name="fraud_features",
+        schema=FRAUD_SCHEMA,
+        description="card-fraud spend windows (§3.3 latency benchmark view)",
+        features={
+            "amt_sum_1h": w_sum(amt, w1h),
+            "amt_mean_1h": w_mean(amt, w1h),
+            "amt_std_1h": w_std(amt, w1h),
+            "tx_count_1h": w_count(amt, w1h),
+            "amt_sum_6h": w_sum(amt, w6h),
+            "amt_max_6h": w_max(amt, w6h),
+            "tx_count_50": w_count(amt, rows_window(50)),
+            "big_ratio_1h": w_count(amt > 100.0, w1h)
+            / (1.0 + w_count(amt, w1h)),
+        },
+    )
+
+
+def reco_view() -> FeatureView:
+    """§3.2 product recommendation: hourly activity + a user×product cross."""
+    spend = Col("price") * Col("qty")
+    return FeatureView(
+        name="user_activity",
+        schema=RECO_SCHEMA,
+        description="hourly order activity + user-product signature cross",
+        features={
+            "spend_1h": w_sum(spend, range_window(3600, bucket=64)),
+            "orders_1h": w_count(spend, range_window(3600, bucket=64)),
+            "avg_price_20": w_mean(Col("price"), rows_window(20)),
+            "cross_user_prod": Signature(
+                (Col("user"), Col("product")), bits=20
+            ),
+        },
+    )
+
+
+def multi_table_view() -> FeatureView:
+    """§1 multi-table plane: profile LAST JOINs + cross-stream union windows."""
+    amt = Col("amount")
+    w1h = range_window(3600, bucket=64)
+    credit = last_join(
+        Col("credit_limit"), "accounts", on="account", default=1000.0
+    )
+    return FeatureView(
+        name="fraud_multitable",
+        description="cross-table fraud features: profile joins + union windows",
+        features={
+            "credit_limit": credit,
+            "acct_risk": last_join(
+                Col("risk_score"), "accounts", on="account", default=0.5
+            ),
+            "merchant_reports": last_join(
+                Col("fraud_reports"), "merchants", on="merchant"
+            ),
+            "outflow_sum_1h": w_sum(amt, w1h, union=("wires",)),
+            "outflow_cnt_1h": w_count(amt, w1h, union=("wires",)),
+            "outflow_mean_1h": w_mean(amt, w1h, union=("wires",)),
+            "limit_utilization": w_sum(amt, w1h, union=("wires",)) / credit,
+            "big_vs_limit": (amt / credit) > 0.5,
+        },
+        database=MULTITABLE_DB,
+    )
+
+
+def sharded_view() -> FeatureView:
+    """Sharded serving of cross-table fraud features on a device mesh."""
+    amt = Col("amount")
+    w1h = range_window(3600, bucket=64)
+    credit = last_join(
+        Col("credit_limit"), "accounts", on="account", default=1000.0
+    )
+    return FeatureView(
+        name="fraud_sharded",
+        description="sharded serving of cross-table fraud features",
+        features={
+            "credit_limit": credit,
+            "merchant_ticket": last_join(
+                Col("avg_ticket"), "merchants", on="merchant", default=50.0
+            ),
+            "outflow_1h": w_sum(amt, w1h, union=("wires",)),
+            "outflow_cnt_1h": w_count(amt, w1h, union=("wires",)),
+            "spend_mean_1h": w_mean(amt, w1h),
+            "utilization": w_sum(amt, w1h, union=("wires",)) / credit,
+        },
+        database=MULTITABLE_DB,
+    )
+
+
+def multi_scenario_views() -> List[FeatureView]:
+    """Three scenarios for one :class:`~repro.core.scenario.ScenarioPlane`.
+
+    Deliberately overlapping so consolidation has something to share:
+    ``wires`` is WINDOW UNIONed by *acct_risk* and *spend_profile* (and
+    the 1h outflow sum is the same structural wagg — one shared lane),
+    ``accounts`` is LAST JOINed by *acct_risk* and *merchant_watch*, and
+    ``merchants`` by *spend_profile* and *merchant_watch*.
+    """
+    amt = Col("amount")
+    w1h = range_window(3600, bucket=64)
+    w6h = range_window(21600, bucket=64)
+    outflow_1h = w_sum(amt, w1h, union=("wires",))
+    credit = last_join(
+        Col("credit_limit"), "accounts", on="account", default=1000.0
+    )
+    acct_risk = FeatureView(
+        name="acct_risk",
+        description="account risk: credit utilization over merged outflows",
+        features={
+            "credit_limit": credit,
+            "outflow_1h": outflow_1h,
+            "outflow_cnt_1h": w_count(amt, w1h, union=("wires",)),
+            "utilization_1h": outflow_1h / credit,
+            "overdraft_now": (amt / credit) > 0.5,
+        },
+        database=MULTITABLE_DB,
+    )
+    spend_profile = FeatureView(
+        name="spend_profile",
+        description="spending profile: per-account spend shape vs merchant",
+        features={
+            "outflow_1h": outflow_1h,  # shared lane with acct_risk
+            "outflow_mean_6h": w_mean(amt, w6h, union=("wires",)),
+            "spend_std_6h": w_std(amt, w6h),
+            "merchant_ticket": last_join(
+                Col("avg_ticket"), "merchants", on="merchant", default=50.0
+            ),
+            "tx_count_10": w_count(amt, rows_window(10)),
+        },
+        database=MULTITABLE_DB,
+    )
+    merchant_watch = FeatureView(
+        name="merchant_watch",
+        description="merchant watchlist: reports + account risk exposure",
+        features={
+            "acct_risk_score": last_join(
+                Col("risk_score"), "accounts", on="account", default=0.5
+            ),
+            "merchant_reports": last_join(
+                Col("fraud_reports"), "merchants", on="merchant"
+            ),
+            "merchants_seen_6h": w_distinct_approx(Col("merchant"), w6h),
+            "spend_max_6h": w_max(amt, w6h),
+        },
+        database=MULTITABLE_DB,
+    )
+    return [acct_risk, spend_profile, merchant_watch]
+
+
+# ---------------------------------------------------------------------------
+# The scenario registry (what a platform catalog page lists)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One deployed example scenario: its views, workload, and run command."""
+
+    name: str
+    title: str
+    description: str
+    run: str
+    views: Callable[[], List[FeatureView]]
+
+
+def _one(builder: Callable[[], FeatureView]) -> Callable[[], List[FeatureView]]:
+    return lambda: [builder()]
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    s.name: s
+    for s in (
+        Scenario(
+            name="fraud",
+            title="Online fraud detection",
+            description=(
+                "Card-transaction stream; trailing spend windows feed a "
+                "scoring transformer (paper §3.3)."
+            ),
+            run="PYTHONPATH=src python examples/fraud_detection.py",
+            views=_one(fraud_view),
+        ),
+        Scenario(
+            name="recommendation",
+            title="Product recommendation",
+            description=(
+                "Minute-level order events; one-click design→verify→deploy "
+                "with version evolution (paper §3.2)."
+            ),
+            run="PYTHONPATH=src python examples/recommendation.py",
+            views=_one(reco_view),
+        ),
+        Scenario(
+            name="multi_table_fraud",
+            title="Multi-table fraud features",
+            description=(
+                "4-table database: point-in-time LAST JOINs + WINDOW UNION "
+                "outflows, verified offline↔online."
+            ),
+            run="PYTHONPATH=src python examples/multi_table_fraud.py",
+            views=_one(multi_table_view),
+        ),
+        Scenario(
+            name="sharded_serving",
+            title="Sharded online serving",
+            description=(
+                "The multi-table view key-partitioned across a ('shard',) "
+                "device mesh behind a micro-batching router."
+            ),
+            run="PYTHONPATH=src python examples/sharded_serving.py",
+            views=_one(sharded_view),
+        ),
+        Scenario(
+            name="multi_scenario",
+            title="Multi-scenario plane",
+            description=(
+                "Three views (acct_risk, spend_profile, merchant_watch) on "
+                "ONE store/mesh; shared tables ingested once, answers "
+                "bit-identical to dedicated stores."
+            ),
+            run="PYTHONPATH=src python examples/multi_scenario.py",
+            views=multi_scenario_views,
+        ),
+    )
+}

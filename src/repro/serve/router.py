@@ -9,8 +9,8 @@ out the way OpenMLDB partitions online table state across nodes):
     FeatureService.request
         │
         ▼ ShardedOnlineStore.query          (one fused program on the mesh)
-        │     host: bucket rows by shard = key % S, pad each shard's rows
-        │     to a shared power-of-two bucket, device_put with
+        │     host: bucket rows by shard = perm(key) % S, pad each shard's
+        │     rows to a shared power-of-two bucket, device_put with
         │     NamedSharding('shard'); device: vmapped per-shard query
         │     (ring + bucket pre-agg + secondary rings, zero cross-shard
         │     collectives); host: scatter answers back to request order
@@ -22,6 +22,15 @@ per-shard request occupancy (skew monitoring) and the service's latency
 percentiles.  It is store-agnostic — a single-device store degrades to
 S=1 — so services opt into sharding purely via
 ``FeatureService.build(..., sharded=True)``.
+
+**Multi-scenario routing** (``FeatureService.build_multi``): requests are
+submitted with a scenario tag and coalesce in ONE queue; each popped batch
+is partitioned by scenario on the host, and every scenario group runs
+through its own compiled program against the shared sharded state — so
+rows are effectively bucketed by (scenario, shard), padded per bucket
+inside the store, and scattered back to request order per scenario.
+Occupancy is tracked per (scenario, shard) in
+:meth:`ShardRouter.scenario_shard_histogram`.
 """
 
 from __future__ import annotations
@@ -30,17 +39,25 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.serve.service import BatchScheduler, FeatureService
+from repro.serve.service import (
+    BatchScheduler,
+    FeatureService,
+    MultiScenarioService,
+)
 
 __all__ = ["ShardRouter"]
 
+_SCENARIO_COL = "__scenario__"
+
 
 class ShardRouter:
-    """Micro-batching front-end for a (sharded) feature service.
+    """Micro-batching front-end for a (sharded, multi-scenario) service.
 
     ``pump()`` moves one batch through the pipeline; ``drain()`` pumps
     until the queue is empty (flushing any open coalescing window).
-    Responses come back as per-request feature rows in submission order.
+    Responses come back as per-request feature rows in submission order —
+    for a multi-scenario service, per scenario:
+    ``{scenario: {feature: rows-in-submission-order}}``.
     """
 
     def __init__(
@@ -53,11 +70,60 @@ class ShardRouter:
         self.scheduler = scheduler if scheduler is not None else BatchScheduler()
         self.ingest = ingest
         self.num_shards = int(getattr(service.store, "num_shards", 1))
-        # per-shard request counts — the serving-skew histogram
+        self.scenarios: Optional[List[str]] = (
+            list(service.scenarios)
+            if isinstance(service, MultiScenarioService)
+            else None
+        )
+        # per-shard request counts — the serving-skew histogram (aggregate
+        # over scenarios), plus the per-(scenario, shard) breakdown for
+        # multi-scenario deployments
         self.shard_requests = np.zeros(self.num_shards, np.int64)
+        self.scenario_shard_requests: Dict[str, np.ndarray] = {
+            s: np.zeros(self.num_shards, np.int64)
+            for s in (self.scenarios or ())
+        }
 
-    def submit(self, row: Dict, now_us: Optional[int] = None) -> None:
+    def submit(
+        self,
+        row: Dict,
+        now_us: Optional[int] = None,
+        scenario: Optional[str] = None,
+    ) -> None:
+        """Queue one request row; multi-scenario services require the
+        ``scenario`` tag (which view answers this row)."""
+        if self.scenarios is not None:
+            if scenario is None:
+                raise ValueError(
+                    "multi-scenario router: submit(..., scenario=) required "
+                    f"(one of {self.scenarios})"
+                )
+            if scenario not in self.scenario_shard_requests:
+                raise KeyError(
+                    f"unknown scenario {scenario!r}; service has "
+                    f"{self.scenarios}"
+                )
+            row = dict(row)
+            row[_SCENARIO_COL] = scenario
+        elif scenario is not None:
+            raise ValueError(
+                f"service {self.service.name!r} is single-scenario; "
+                "submit() takes no scenario tag"
+            )
         self.scheduler.submit(row, now_us=now_us)
+
+    def _count_shards(self, keys: np.ndarray, scenario: Optional[str]) -> None:
+        store = self.service.store
+        if hasattr(store, "shard_of"):
+            hist = np.bincount(
+                store.shard_of(keys), minlength=self.num_shards
+            )
+        else:
+            hist = np.zeros(self.num_shards, np.int64)
+            hist[0] = len(keys)
+        self.shard_requests += hist
+        if scenario is not None:
+            self.scenario_shard_requests[scenario] += hist
 
     def pump(
         self, now_us: Optional[int] = None, flush: bool = False
@@ -67,23 +133,36 @@ class ShardRouter:
         if batch is None:
             return None
         valid = np.asarray(batch["__valid__"], bool)
-        out = self.service.request(batch, ingest=self.ingest)
         key_col = self.service.view.schema.key
-        store = self.service.store
-        if hasattr(store, "shard_of"):
-            shard = store.shard_of(np.asarray(batch[key_col])[valid])
-            self.shard_requests += np.bincount(
-                shard, minlength=self.num_shards
-            )
-        else:
-            self.shard_requests[0] += int(valid.sum())
-        return {k: np.asarray(v)[valid] for k, v in out.items()}
+        if self.scenarios is None:
+            out = self.service.request(batch, ingest=self.ingest)
+            self._count_shards(np.asarray(batch[key_col])[valid], None)
+            return {k: np.asarray(v)[valid] for k, v in out.items()}
+        # multi-scenario: partition the popped batch by scenario tag (in
+        # submission order within each group) and run each group through
+        # its own program — the (scenario, shard) bucketing of the plane
+        tags = np.asarray(batch[_SCENARIO_COL])
+        results: Dict[str, Dict[str, np.ndarray]] = {}
+        for s in self.scenarios:
+            m = valid & (tags == s)
+            if not m.any():
+                continue
+            rows_s = {
+                c: np.asarray(v)[m]
+                for c, v in batch.items()
+                if c not in ("__valid__", _SCENARIO_COL)
+            }
+            out = self.service.request(rows_s, ingest=self.ingest, scenario=s)
+            self._count_shards(rows_s[key_col], s)
+            results[s] = {k: np.asarray(v) for k, v in out.items()}
+        return results
 
     def drain(
         self, now_us: Optional[int] = None
     ) -> Optional[Dict[str, np.ndarray]]:
-        """Flush everything queued; concatenated rows in submission order."""
-        outs: List[Dict[str, np.ndarray]] = []
+        """Flush everything queued; concatenated rows in submission order
+        (per scenario, for a multi-scenario service)."""
+        outs: List[Dict] = []
         while True:
             got = self.pump(now_us=now_us, flush=True)
             if got is None:
@@ -91,10 +170,29 @@ class ShardRouter:
             outs.append(got)
         if not outs:
             return None
+        if self.scenarios is None:
+            return {
+                k: np.concatenate([o[k] for o in outs]) for k in outs[0]
+            }
+        merged: Dict[str, Dict[str, np.ndarray]] = {}
+        for o in outs:
+            for s, cols in o.items():
+                if s not in merged:
+                    merged[s] = {k: [v] for k, v in cols.items()}
+                else:
+                    for k, v in cols.items():
+                        merged[s][k].append(v)
         return {
-            k: np.concatenate([o[k] for o in outs]) for k in outs[0]
+            s: {k: np.concatenate(vs) for k, vs in cols.items()}
+            for s, cols in merged.items()
         }
 
     def shard_histogram(self) -> np.ndarray:
-        """Requests served per shard (copy)."""
+        """Requests served per shard, summed over scenarios (copy)."""
         return self.shard_requests.copy()
+
+    def scenario_shard_histogram(self) -> Dict[str, np.ndarray]:
+        """Per-(scenario, shard) request occupancy (copies)."""
+        return {
+            s: h.copy() for s, h in self.scenario_shard_requests.items()
+        }

@@ -25,7 +25,12 @@ import numpy as np
 from repro.core.online import OnlineFeatureStore
 from repro.core.view import FeatureRegistry, FeatureView
 
-__all__ = ["FeatureService", "BatchScheduler", "ScoringService"]
+__all__ = [
+    "FeatureService",
+    "MultiScenarioService",
+    "BatchScheduler",
+    "ScoringService",
+]
 
 
 @dataclasses.dataclass
@@ -125,8 +130,66 @@ class FeatureService:
         )
         return cls(name, view, store, registry=registry, mode=mode)
 
+    @classmethod
+    def build_multi(
+        cls,
+        name: str,
+        views: Sequence[FeatureView],
+        *,
+        num_keys: int,
+        registry: Optional[FeatureRegistry] = None,
+        mode: str = "preagg",
+        sharded: bool = False,
+        num_shards: Optional[int] = None,
+        **store_kwargs,
+    ) -> "MultiScenarioService":
+        """Deploy N scenario views as ONE service on ONE shared store.
+
+        The views are fused into a :class:`~repro.core.scenario.
+        ScenarioPlane`: shared tables are ingested and stored once (per
+        shard, with ``sharded=True`` — all scenarios live on a single
+        ``('shard',)`` mesh), and each view queries through its own
+        compiled program, bit-identical to a dedicated single-view store.
+        Requests carry a ``scenario=`` tag:
+        ``svc.request(rows, scenario="fraud")``; per-scenario latency/QPS
+        lands in ``svc.scenario_stats[...]`` alongside the aggregate
+        ``svc.stats``.
+        """
+        from repro.core.scenario import ScenarioPlane
+
+        if not sharded and num_shards is not None:
+            raise ValueError("num_shards requires sharded=True")
+        if sharded and num_shards is None:
+            num_shards = max(len(jax.devices()), 1)
+        plane = ScenarioPlane(
+            views,
+            num_keys=num_keys,
+            num_shards=num_shards,
+            name=name,
+            **store_kwargs,
+        )
+        return MultiScenarioService(name, plane, registry=registry, mode=mode)
+
+    # -- per-request hooks (MultiScenarioService overrides both) -------------
+
+    def _compute(
+        self, rows: Dict[str, np.ndarray], scenario: Optional[str]
+    ) -> Dict[str, np.ndarray]:
+        if scenario is not None:
+            raise ValueError(
+                f"service {self.name!r} is single-scenario; scenario= tags "
+                "need a FeatureService.build_multi deployment"
+            )
+        return self.store.query(rows, mode=self.mode)
+
+    def _observe(
+        self, latency_s: float, n_requests: int, scenario: Optional[str]
+    ) -> None:
+        self.stats.observe(latency_s, n_requests)
+
     def request(self, rows: Dict[str, np.ndarray],
-                ingest: bool = True) -> Dict[str, np.ndarray]:
+                ingest: bool = True,
+                scenario: Optional[str] = None) -> Dict[str, np.ndarray]:
         """Compute features for a batch of request rows; optionally ingest
         them afterwards (the online-learning pattern of the paper).
 
@@ -135,11 +198,15 @@ class FeatureService:
         The mask is stripped before querying and honored on ingest — padding
         rows are duplicates of a real row, so ingesting them would corrupt
         window state (double-counted sums, inflated counts).
+
+        ``scenario`` selects which view answers on a multi-scenario
+        deployment (see :meth:`build_multi`); ingested rows land in the
+        shared store once, serving every scenario.
         """
         t0 = time.perf_counter()
         valid = rows.get("__valid__")
         rows = {c: v for c, v in rows.items() if c != "__valid__"}
-        out = self.store.query(rows, mode=self.mode)
+        out = self._compute(rows, scenario)
         out = {k: np.asarray(v) for k, v in out.items()}
         if ingest:
             real = rows
@@ -155,12 +222,70 @@ class FeatureService:
                 )
         dt = time.perf_counter() - t0
         n = len(next(iter(rows.values())))
-        self.stats.observe(dt, int(valid.sum()) if valid is not None else n)
+        self._observe(
+            dt, int(valid.sum()) if valid is not None else n, scenario
+        )
         return out
 
-    def feature_matrix(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
-        out = self.request(rows, ingest=False)
-        return np.stack([out[f] for f in self.view.features], axis=-1)
+    def feature_matrix(
+        self, rows: Dict[str, np.ndarray], scenario: Optional[str] = None
+    ) -> np.ndarray:
+        out = self.request(rows, ingest=False, scenario=scenario)
+        feats = self._scenario_features(scenario)
+        return np.stack([out[f] for f in feats], axis=-1)
+
+    def _scenario_features(self, scenario: Optional[str]) -> Sequence[str]:
+        return self.view.features
+
+
+class MultiScenarioService(FeatureService):
+    """One deployment serving N scenarios from one shared store and mesh.
+
+    ``view``/``store`` are the plane's merged view and shared store, so
+    everything written against :class:`FeatureService` (routers, stats
+    consumers, ingest paths) keeps working; queries additionally take the
+    ``scenario=`` tag and answer with that view's features by their
+    original (un-prefixed) names.  Deploy records land in the registry as
+    ``"<service>:<scenario>"`` per scenario.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        plane,  # repro.core.scenario.ScenarioPlane
+        registry: Optional[FeatureRegistry] = None,
+        mode: str = "preagg",
+    ):
+        self.plane = plane
+        super().__init__(name, plane.merged, plane.store, mode=mode)
+        self.scenario_stats: Dict[str, ServiceStats] = {
+            s: ServiceStats() for s in plane.scenarios
+        }
+        if registry is not None:
+            for s, v in plane.views.items():
+                registry.deploy(f"{name}:{s}", v.name, v.version)
+
+    @property
+    def scenarios(self) -> List[str]:
+        return self.plane.scenarios
+
+    def _compute(self, rows, scenario):
+        if scenario is None:
+            raise ValueError(
+                f"multi-scenario service {self.name!r} needs scenario= "
+                f"(one of {self.scenarios})"
+            )
+        return self.plane.query(scenario, rows, mode=self.mode)
+
+    def _observe(self, latency_s, n_requests, scenario):
+        self.stats.observe(latency_s, n_requests)
+        self.scenario_stats[scenario].observe(latency_s, n_requests)
+
+    def _scenario_features(self, scenario):
+        if scenario is None:
+            raise ValueError("feature_matrix needs scenario= on a "
+                             "multi-scenario service")
+        return self.plane.views[scenario].features
 
 
 class BatchScheduler:

@@ -1,0 +1,381 @@
+"""Multi-scenario serving plane: exact equality + shared-ingest accounting.
+
+The contract under test (ISSUE 4 acceptance): a ScenarioPlane serving N
+views from ONE store (one mesh when sharded) answers every scenario
+**bit-identically** to N independent single-view stores fed the same
+stream — for ≥3 views sharing at least one WINDOW UNION table and one
+LAST JOIN table, any shard count, any ingest interleaving — while storing
+each shared secondary table once per shard, not once per view.  Runs
+multi-device via conftest's ``--xla_force_host_platform_device_count=8``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Col,
+    FeatureView,
+    OnlineFeatureStore,
+    ScenarioPlane,
+    merge_views,
+    range_window,
+    w_count,
+    w_sum,
+)
+from repro.core.consistency import replay_rounds
+from repro.data.synthetic import MULTITABLE_DB, RECO_SCHEMA, multitable_stream
+from repro.scenarios import multi_scenario_views
+
+K = 16  # accounts
+NM = 8  # merchants
+SEC_NK = {"merchants": NM}
+STORE_KW = dict(
+    num_keys=K, capacity=128, num_buckets=512, bucket_size=64,
+    secondary_num_keys=SEC_NK,
+)
+
+
+def make_tables(rng, n=180, t_max=40_000):
+    tabs = multitable_stream(
+        rng, n, num_accounts=K, num_merchants=NM, t_max=t_max
+    )
+    return tabs["transactions"], {
+        t: c for t, c in tabs.items() if t != "transactions"
+    }
+
+
+def _bykey(d, kc):
+    o = np.lexsort((d["ts"], d[kc]))
+    return {c: v[o] for c, v in d.items()}
+
+
+def _preload_secondary(store, sec):
+    """Push each referenced secondary table once (only tables the store's
+    view references — a dedicated store rejects the rest)."""
+    for t in store._sec_names:
+        kc = MULTITABLE_DB.table(t).key
+        store.ingest_table(t, _bykey(sec[t], kc))
+
+
+def _independent_stores(views):
+    return {v.name: OnlineFeatureStore(v, **STORE_KW) for v in views}
+
+
+def test_trio_shares_tables():
+    """The canonical trio really exercises the sharing the plane claims:
+    a union table and join tables each referenced by ≥2 views."""
+    views = multi_scenario_views()
+    assert len(views) >= 3
+    refs = {
+        v.name: set(v.tables[1:]) for v in views
+    }
+    assert sum("wires" in r for r in refs.values()) >= 2      # shared union
+    assert sum("accounts" in r for r in refs.values()) >= 2   # shared join
+    assert sum("merchants" in r for r in refs.values()) >= 2
+
+
+@pytest.mark.parametrize("num_shards", [1, 4, 8])
+def test_plane_bit_identical_replay(num_shards):
+    """Acceptance: sharded multi-scenario plane == N independent
+    single-view (single-device) stores, bit-for-bit, replayed round by
+    round with interleaved ingest."""
+    rng = np.random.default_rng(200 + num_shards)
+    tx, sec = make_tables(rng)
+    views = multi_scenario_views()
+    plane = ScenarioPlane(views, num_shards=num_shards, **STORE_KW)
+    singles = _independent_stores(views)
+
+    for store in [plane.store] + list(singles.values()):
+        _preload_secondary(store, sec)
+
+    key, ts = tx["account"], tx["ts"]
+    for idx in replay_rounds(key, ts):
+        batch = {c: v[idx] for c, v in tx.items()}
+        for v in views:
+            a = singles[v.name].query(batch, mode="preagg")
+            b = plane.query(v.name, batch, mode="preagg")
+            for f in v.features:
+                np.testing.assert_array_equal(
+                    np.asarray(a[f]),
+                    np.asarray(b[f]),
+                    err_msg=f"shards={num_shards} view={v.name} feature={f}",
+                )
+        srt = _bykey(batch, "account")
+        plane.ingest(srt)  # once — serves all three scenarios
+        for s in singles.values():
+            s.ingest(srt)  # once per dedicated store
+
+
+@pytest.mark.parametrize("chunks", [1, 4])
+def test_plane_bit_identical_ingest_interleaving(chunks):
+    """Same contract under different chunkings of the same stream, both
+    query modes, after full ingest."""
+    rng = np.random.default_rng(77)
+    tx, sec = make_tables(rng, n=160)
+    views = multi_scenario_views()
+    plane = ScenarioPlane(views, num_shards=4, **STORE_KW)
+    singles = _independent_stores(views)
+
+    for store in [plane.store] + list(singles.values()):
+        for piece in np.array_split(np.arange(len(sec["wires"]["ts"])), chunks):
+            if len(piece) and "wires" in store._sec_names:
+                store.ingest_table(
+                    "wires",
+                    _bykey(
+                        {c: v[piece] for c, v in sec["wires"].items()},
+                        "account",
+                    ),
+                )
+        for t in ("accounts", "merchants"):
+            if t in store._sec_names:
+                store.ingest_table(
+                    t, _bykey(sec[t], MULTITABLE_DB.table(t).key)
+                )
+        for piece in np.array_split(np.arange(len(tx["ts"])), chunks):
+            if len(piece):
+                store.ingest(
+                    _bykey({c: v[piece] for c, v in tx.items()}, "account")
+                )
+
+    req = dict(
+        account=rng.integers(0, K, 33).astype(np.int32),
+        ts=np.full(33, 50_000, np.int32),
+        amount=rng.gamma(2.0, 10.0, 33).astype(np.float32),
+        merchant=rng.integers(0, NM, 33).astype(np.int32),
+    )
+    for mode in ("naive", "preagg"):
+        for v in views:
+            a = singles[v.name].query(req, mode=mode)
+            b = plane.query(v.name, req, mode=mode)
+            for f in v.features:
+                np.testing.assert_array_equal(
+                    np.asarray(a[f]),
+                    np.asarray(b[f]),
+                    err_msg=f"chunks={chunks} mode={mode} "
+                    f"view={v.name} feature={f}",
+                )
+
+
+@pytest.mark.parametrize("num_shards", [None, 4])
+def test_shared_tables_stored_once_per_shard_not_per_view(num_shards):
+    """The consolidation claim, in row counts: the plane stores each
+    shared secondary table once per shard (partitioned union tables:
+    once total), while N dedicated stores hold one copy each."""
+    rng = np.random.default_rng(5)
+    tx, sec = make_tables(rng, n=120)
+    views = multi_scenario_views()
+    plane = ScenarioPlane(views, num_shards=num_shards, **STORE_KW)
+    singles = _independent_stores(views)
+    for store in [plane.store] + list(singles.values()):
+        _preload_secondary(store, sec)
+        store.ingest(_bykey(tx, "account"))
+
+    S = num_shards or 1
+    rows = {t: len(c["ts"]) for t, c in sec.items()}
+    counts = plane.ingest_row_counts()
+    # primary + partitioned union stream: every row lives on exactly one
+    # shard — stored once, period
+    assert counts["transactions"] == len(tx["ts"])
+    assert counts["wires"] == rows["wires"]
+    # replicated LAST JOIN targets: once per shard (dimension-table copy),
+    # NOT once per referencing view
+    assert counts["accounts"] == S * rows["accounts"]
+    assert counts["merchants"] == S * rows["merchants"]
+
+    # the plane's whole point: dedicated stores pay per *view* instead
+    ded = {t: 0 for t in rows}
+    for s in singles.values():
+        for t, c in s.ingest_row_counts().items():
+            if t in ded:
+                ded[t] += c
+    assert ded["wires"] == 2 * rows["wires"]        # 2 views reference it
+    assert ded["accounts"] == 2 * rows["accounts"]
+    assert ded["merchants"] == 2 * rows["merchants"]
+
+
+def test_merge_views_validation():
+    views = multi_scenario_views()
+    # duplicate scenario names
+    with pytest.raises(ValueError, match="duplicate"):
+        merge_views([views[0], views[0]])
+    # mismatched primary schema
+    other = FeatureView(
+        "other", RECO_SCHEMA,
+        {"s": w_sum(Col("price"), range_window(100))},
+    )
+    with pytest.raises(ValueError, match="primary"):
+        merge_views([views[0], other])
+    # merged view namespaces features and unions tables
+    merged = merge_views(views, name="p")
+    assert f"{views[0].name}/outflow_1h" in merged.features
+    assert set(merged.tables) == {
+        "transactions", "wires", "accounts", "merchants"
+    }
+
+
+@pytest.mark.parametrize("num_shards", [None, 4])
+def test_scenario_requests_need_only_own_columns(num_shards):
+    """A scenario request carries only the columns ITS view references —
+    other scenarios' join keys / window args must not leak into the
+    requirement (regression: the merged store once validated its full
+    join-col set against every scenario's requests)."""
+    views = multi_scenario_views()
+    plane = ScenarioPlane(views, num_shards=num_shards, **STORE_KW)
+    req = dict(
+        account=np.arange(8, dtype=np.int32),
+        ts=np.full(8, 100, np.int32),
+        amount=np.ones(8, np.float32),
+    )  # no 'merchant' column: acct_risk never reads it
+    out = plane.query("acct_risk", req)
+    assert set(out) == set(views[0].features)
+    single = OnlineFeatureStore(views[0], **STORE_KW)
+    ref = single.query(req)
+    for f in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[f]), np.asarray(out[f])
+        )
+    # a scenario that DOES join on merchant still demands it, and the
+    # error names that scenario's view (not the internal merged view)
+    with pytest.raises(KeyError, match="merchant_watch"):
+        plane.query("merchant_watch", req)
+
+
+def test_program_requires_subview():
+    """A program for a view whose aggregations are not in the shared lane
+    plan must fail loudly, not answer garbage."""
+    views = multi_scenario_views()
+    plane = ScenarioPlane(views[:2], **STORE_KW)
+    foreign = FeatureView(
+        "foreign",
+        MULTITABLE_DB.primary,
+        {"c": w_count(Col("amount"), range_window(999))},
+        database=MULTITABLE_DB,
+    )
+    with pytest.raises(ValueError, match="sub-view"):
+        plane.store.compile_program(foreign)
+    with pytest.raises(KeyError, match="unknown scenario"):
+        plane.query("nope", {})
+
+
+def test_multi_service_router_end_to_end():
+    """FeatureService.build_multi + scenario-tagged ShardRouter: drained
+    answers equal dedicated stores' (bit-for-bit), per-scenario stats and
+    (scenario, shard) occupancy add up."""
+    from repro.serve.router import ShardRouter
+    from repro.serve.service import BatchScheduler, FeatureService
+
+    rng = np.random.default_rng(13)
+    tx, sec = make_tables(rng, n=140)
+    views = multi_scenario_views()
+    svc = FeatureService.build_multi(
+        "plane_svc", views, sharded=True, num_shards=4, **STORE_KW
+    )
+    singles = _independent_stores(views)
+    for store in [svc.plane.store] + list(singles.values()):
+        _preload_secondary(store, sec)
+        store.ingest(_bykey(tx, "account"))
+
+    router = ShardRouter(
+        svc, BatchScheduler(buckets=(1, 4, 16)), ingest=False
+    )
+    n_req, names = 24, [v.name for v in views]
+    reqs = [
+        dict(
+            account=int(rng.integers(0, K)),
+            ts=50_000 + i,
+            amount=float(rng.gamma(2.0, 10.0)),
+            merchant=int(rng.integers(0, NM)),
+        )
+        for i in range(n_req)
+    ]
+    tags = [names[i % len(names)] for i in range(n_req)]
+    for row, tag in zip(reqs, tags):
+        router.submit(row, scenario=tag)
+    out = router.drain()
+
+    for v in views:
+        idx = [i for i, t in enumerate(tags) if t == v.name]
+        batch = {
+            c: np.asarray([reqs[i][c] for i in idx])
+            for c in ("account", "ts", "amount", "merchant")
+        }
+        ref = singles[v.name].query(batch, mode="preagg")
+        for f in v.features:
+            np.testing.assert_array_equal(
+                np.asarray(ref[f]), out[v.name][f],
+                err_msg=f"view={v.name} feature={f}",
+            )
+        assert svc.scenario_stats[v.name].requests == len(idx)
+    assert svc.stats.requests == n_req
+    hists = router.scenario_shard_histogram()
+    assert sum(int(h.sum()) for h in hists.values()) == n_req
+    np.testing.assert_array_equal(
+        sum(hists.values()), router.shard_histogram()
+    )
+    # single-scenario router rejects tags; multi rejects missing tags
+    with pytest.raises(ValueError, match="scenario"):
+        router.submit(reqs[0])
+    with pytest.raises(KeyError, match="unknown scenario"):
+        router.submit(reqs[0], scenario="nope")
+
+
+def test_describe_and_catalog_fresh():
+    """View.describe() names tables/SQL/deploys deterministically, and the
+    committed docs/CATALOG.md matches the live definitions (the same
+    regenerate-and-diff gate scripts/ci.sh runs)."""
+    import pathlib
+
+    from repro.catalog import CATALOG_PATH, build_catalog
+    from repro.core import FeatureRegistry
+
+    views = multi_scenario_views()
+    reg = FeatureRegistry()
+    reg.register(views[0])
+    reg.deploy("svc_a", views[0].name)
+    md = views[0].describe(reg)
+    assert f"### `{views[0].name}`" in md
+    assert "WINDOW UNION stream" in md and "LAST JOIN target" in md
+    for f in views[0].features:
+        assert f"`{f}`" in md
+    assert "SELECT" in md and "svc_a" in md
+    assert md == views[0].describe(reg)  # deterministic
+
+    fresh = build_catalog()
+    assert fresh == build_catalog()  # no wall-clock leaks
+    path = pathlib.Path(CATALOG_PATH)
+    assert path.exists(), "docs/CATALOG.md missing — run python -m repro.catalog"
+    assert path.read_text() == fresh, (
+        "docs/CATALOG.md is stale — run `python -m repro.catalog`"
+    )
+
+
+def test_multi_service_shared_ingest_path():
+    """request(ingest=True) on the multi service ingests once into the
+    shared store and every scenario sees the row."""
+    from repro.serve.service import FeatureService
+
+    views = multi_scenario_views()
+    svc = FeatureService.build_multi("p", views, **STORE_KW)
+    rng = np.random.default_rng(1)
+    tx, sec = make_tables(rng, n=60)
+    _preload_secondary(svc.plane.store, sec)
+    row = dict(
+        account=np.array([3], np.int32),
+        ts=np.array([60_000], np.int32),
+        amount=np.array([123.0], np.float32),
+        merchant=np.array([1], np.int32),
+    )
+    before = svc.plane.ingest_row_counts()["transactions"]
+    svc.request(row, ingest=True, scenario=views[0].name)
+    assert svc.plane.ingest_row_counts()["transactions"] == before + 1
+    # the ingested row is visible to ANOTHER scenario's window
+    later = dict(row)
+    later["ts"] = np.array([60_001], np.int32)
+    out = svc.request(later, ingest=False, scenario="spend_profile")
+    assert float(out["outflow_1h"][0]) >= 123.0
+    # single-scenario service still rejects tags
+    single = FeatureService.build(
+        "one", views[0], registry=None, **STORE_KW
+    )
+    with pytest.raises(ValueError, match="single-scenario"):
+        single.request(row, scenario="acct_risk")
