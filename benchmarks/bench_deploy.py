@@ -11,6 +11,13 @@ is mechanized; we measure its wall time end-to-end:
 
 Also exercises version evolution (the paper's cached prior versions):
 v2 = v1 + new features, measuring the incremental redeploy cost.
+
+The ``hot_deploy`` section measures the live-plane evolution path
+(ISSUE 5): adding scenario #3 to a WARM 8-shard multi-scenario plane via
+``MultiScenarioService.hot_deploy`` (a StoreLayout diff + state
+migration) vs the cold baseline (rebuild the merged plane and replay the
+whole warm stream).  :func:`migration_exactness_check` is the CI gate:
+hot-deployed state must equal rebuild+replay bit-for-bit.
 """
 
 from __future__ import annotations
@@ -23,13 +30,17 @@ from benchmarks import common
 from benchmarks.common import emit
 from repro.core import (
     Col, FeatureRegistry, FeatureView, OfflineEngine, OnlineFeatureStore,
-    range_window, w_count, w_mean, w_sum,
+    ScenarioPlane, range_window, w_count, w_mean, w_sum,
 )
 from repro.core.consistency import verify_view
 from repro.data.synthetic import FRAUD_SCHEMA, fraud_stream
 
 ROWS = 2_000
 NUM_CARDS = 64
+
+HOT_ROWS = 4_000
+HOT_ACCTS = 128
+HOT_SHARDS = 8
 
 
 def run() -> None:
@@ -98,6 +109,119 @@ def run() -> None:
     emit("deploy", "evolve_v2_s", t_evolve, "s",
          "incremental redefinition via cached v1")
     assert registry.versions("fraud_v1") == [1, 2]
+
+    hot_deploy_section()
+
+
+# ---------------------------------------------------------------------------
+# live plane evolution: hot-add scenario #3 on a warm sharded plane
+# ---------------------------------------------------------------------------
+
+
+def _hot_setup(rows: int, accts: int):
+    from repro.data.synthetic import MULTITABLE_DB, multitable_stream
+    from repro.scenarios import multi_scenario_views
+
+    rng = np.random.default_rng(17)
+    # t_max/bucket_size < num_buckets: no bucket-ring wraparound, and
+    # capacity > rows/key: no ring aging — the horizon inside which the
+    # migration's bit-exactness contract is unconditional
+    tabs = multitable_stream(
+        rng, rows, num_accounts=accts, num_merchants=16, t_max=60_000
+    )
+    tx = tabs["transactions"]
+    sec = {t: c for t, c in tabs.items() if t != "transactions"}
+    views = multi_scenario_views()
+    kw = dict(
+        num_keys=accts, capacity=256, num_buckets=1024, bucket_size=64,
+        secondary_num_keys={"merchants": 16},
+    )
+
+    def bykey(d, kc):
+        o = np.lexsort((d["ts"], d[kc]))
+        return {c: v[o] for c, v in d.items()}
+
+    def warm(plane):
+        for t in plane.store._sec_names:
+            kc = MULTITABLE_DB.table(t).key
+            plane.ingest_table(t, bykey(sec[t], kc))
+        plane.ingest(bykey(tx, "account"))
+
+    return views, kw, warm, tx
+
+
+def _state_equal(a, b) -> bool:
+    import jax
+
+    la = jax.tree_util.tree_leaves(a.store.state)
+    lb = jax.tree_util.tree_leaves(b.store.state)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb)
+    )
+
+
+def hot_deploy_section() -> None:
+    """Hot-add scenario #3 on a warm plane vs cold rebuild + full replay."""
+    from repro.serve.service import FeatureService
+
+    rows = common.scaled(HOT_ROWS, 300)
+    accts = common.scaled(HOT_ACCTS, 32)
+    shards = common.scaled(HOT_SHARDS, 4)
+    views, kw, warm, tx = _hot_setup(rows, accts)
+
+    svc = FeatureService.build_multi(
+        "hot_plane", views[:2], sharded=True, num_shards=shards, **kw
+    )
+    warm(svc.plane)
+    probe = {c: v[:16] for c, v in tx.items()}
+    for v in views[:2]:  # warm the serving executables
+        svc.plane.query(v.name, probe)
+
+    t0 = time.perf_counter()
+    report = svc.hot_deploy(views[2])
+    svc.plane.query(views[2].name, probe)  # first answer incl. compile
+    t_hot = time.perf_counter() - t0
+    assert report.exact, report.notes
+
+    t0 = time.perf_counter()
+    cold = ScenarioPlane(views, num_shards=shards, **kw)
+    warm(cold)  # the replay a rebuild forces
+    cold.query(views[2].name, probe)
+    t_cold = time.perf_counter() - t0
+
+    assert _state_equal(svc.plane, cold), "hot deploy diverged from rebuild"
+
+    emit("deploy", "hot_deploy_ms", 1e3 * t_hot, "ms",
+         f"add scenario #3 on warm {shards}-shard plane ({rows} rows kept)")
+    emit("deploy", "cold_rebuild_replay_ms", 1e3 * t_cold, "ms",
+         "rebuild merged plane + re-ingest full stream")
+    emit("deploy", "hot_deploy_speedup", t_cold / max(t_hot, 1e-9), "x",
+         "state migration vs rebuild+replay; bit-exactness asserted")
+
+
+def migration_exactness_check(rows: int = 600, shards: int = 4) -> None:
+    """CI gate (scripts/ci.sh): hot-deploy == cold rebuild + full replay,
+    bit-for-bit, on a warm sharded plane.  Raises on any divergence."""
+    from repro.serve.service import FeatureService
+
+    views, kw, warm, _ = _hot_setup(rows, 64)
+    svc = FeatureService.build_multi(
+        "gate_plane", views[:2], sharded=True, num_shards=shards, **kw
+    )
+    warm(svc.plane)
+    before = svc.plane.ingest_row_counts()
+    report = svc.hot_deploy(views[2])
+    assert report.exact, f"migration not exact: {report.notes}"
+    assert svc.plane.ingest_row_counts() == before, "hot deploy re-ingested"
+    cold = ScenarioPlane(views, num_shards=shards, **kw)
+    warm(cold)
+    assert _state_equal(svc.plane, cold), (
+        "hot-deployed state != rebuild+replay"
+    )
+    print(
+        f"migration exactness gate OK: {report.describe().splitlines()[0]}"
+    )
 
 
 if __name__ == "__main__":

@@ -13,9 +13,14 @@ profile, merchant watchlist — deployed together on ONE ScenarioPlane:
      one ring store per (table, shard), not one per view;
   3. each view queries through its own compiled program — only its lanes
      are gathered and folded — behind one scenario-tagged ShardRouter;
-  4. the answers are proven bit-identical to three dedicated single-view
-     stores fed the same stream, and the ops surface shows per-scenario
-     latency stats plus the (scenario, shard) occupancy histogram.
+  4. the third scenario is NOT part of the initial deployment: it is
+     hot-deployed onto the already-warm plane (`svc.hot_deploy(view)`) —
+     a StoreLayout diff + state migration, no rebuild, no re-ingest —
+     and the router picks it up live;
+  5. the answers (including the hot-deployed scenario's) are proven
+     bit-identical to three dedicated single-view stores fed the same
+     stream, and the ops surface shows per-scenario latency stats plus
+     the (scenario, shard) occupancy histogram.
 
 Run:  PYTHONPATH=src python examples/multi_scenario.py
 """
@@ -69,16 +74,26 @@ def main() -> None:
         num_merchants=NUM_MERCHANTS, t_max=T_MAX,
     )
 
-    # -- 1+2: one service, three scenarios, shared ingest --------------------
+    # -- 1+2: one service, two scenarios at launch, shared ingest ------------
     svc = FeatureService.build_multi(
-        "consolidated", views, sharded=True, num_shards=NUM_SHARDS,
+        "consolidated", views[:2], sharded=True, num_shards=NUM_SHARDS,
         **STORE_KW,
     )
     preload(svc.plane.store, tables)
     counts = svc.plane.ingest_row_counts()
-    print(f"scenarios: {svc.scenarios}")
+    print(f"launch scenarios: {svc.scenarios}")
     print(f"plane tables (stored once each): {svc.plane.tables}")
     print(f"stored rows per table: {counts}")
+
+    # -- hot deploy scenario #3 on the WARM plane -----------------------------
+    # a StoreLayout diff + state migration: carried rings move over
+    # verbatim, nothing is re-ingested, only the new view's program
+    # compiles — and the result is bit-identical to a cold rebuild + replay
+    report = svc.hot_deploy(views[2])
+    print(f"hot-deployed {views[2].name!r} onto the live plane:")
+    print("  " + report.describe().replace("\n", "\n  "))
+    assert svc.plane.ingest_row_counts() == counts, "hot deploy re-ingested!"
+    print(f"scenarios now: {svc.scenarios}")
 
     # the dedicated-store world it replaces (for the equality proof)
     singles = {
@@ -107,7 +122,7 @@ def main() -> None:
         router.submit(reqs[-1], scenario=tags[-1], now_us=i * 100)
     out = router.drain(now_us=N_REQUESTS * 100)
 
-    # -- 4: the proof + the ops surface ---------------------------------------
+    # -- 5: the proof + the ops surface ---------------------------------------
     for v in views:
         idx = [i for i, t in enumerate(tags) if t == v.name]
         batch = {

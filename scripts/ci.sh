@@ -12,9 +12,14 @@ if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
   export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ ${XLA_FLAGS}}"
 fi
 python -m pytest -x -q "$@"
-# benchmark smoke includes bench_shard's multi-scenario row (3 views on one
-# mesh vs isolated stores, bit-exactness gated) so cross-view routing can't
-# silently regress
+# migration-exactness gate: hot-deploying scenario #3 onto a warm sharded
+# plane must equal a cold rebuild + full replay bit-for-bit (the live
+# plane-evolution contract), and must not re-ingest carried tables
+python -c "from benchmarks.bench_deploy import migration_exactness_check; migration_exactness_check()"
+# benchmark smoke includes bench_deploy's hot_deploy section (hot-add vs
+# rebuild+replay timing) and bench_shard's multi-scenario row (3 views on
+# one mesh vs isolated stores, bit-exactness gated) so the deploy path and
+# cross-view routing can't silently rot
 python -m benchmarks.run --smoke
 # compile-time budget: offline MIN/MAX at N=5k must compile in < 30 s (the
 # seed's sparse-table formulation took ~150 s; keep the blowup dead)

@@ -58,8 +58,18 @@ def build_catalog() -> str:
                 registry.deploy(f"{scen.name}_svc", v.name, v.version)
             else:
                 # the multi-scenario plane deploys every view under one
-                # service, tagged per scenario (MultiScenarioService)
-                registry.deploy(f"{scen.name}:{v.name}", v.name, v.version)
+                # service, tagged per scenario (MultiScenarioService);
+                # views the scenario declares as hot-deployed carry the
+                # hot-deploy description — the catalog's deploy history
+                # records live plane evolutions
+                registry.deploy(
+                    f"{scen.name}:{v.name}", v.name, v.version,
+                    description=(
+                        "hot deploy (live plane evolution)"
+                        if v.name in scen.hot_deployed
+                        else ""
+                    ),
+                )
         sections += [
             f"## {scen.title} (`{scen.name}`)",
             "",

@@ -28,9 +28,18 @@ from repro.core.expr import (  # noqa: F401
 )
 from repro.core.aggregates import AGG_SPECS, AggSpec, agg_spec  # noqa: F401
 from repro.core.storage import Database, RowCodec, TableSchema  # noqa: F401
+from repro.core.layout import (  # noqa: F401
+    BucketPlan,
+    LaneSlot,
+    RingPlan,
+    StoreLayout,
+    diff_layouts,
+    plan_layout,
+)
 from repro.core.view import FeatureRegistry, FeatureView, render_sql  # noqa: F401
 from repro.core.engine import OfflineEngine  # noqa: F401
 from repro.core.online import OnlineFeatureStore, QueryProgram  # noqa: F401
+from repro.core.migrate import MigrationReport  # noqa: F401
 from repro.core.shard import ShardedOnlineStore, make_shard_mesh  # noqa: F401
 from repro.core.scenario import ScenarioPlane, merge_views  # noqa: F401
 from repro.core.consistency import ConsistencyReport, verify_view  # noqa: F401

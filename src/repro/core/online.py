@@ -34,16 +34,30 @@ the paper's "compilation caching"):
   ``repro.kernels.window_agg`` implements this same path with explicit
   VMEM tiling.
 
+Physical layout comes from one place: the declarative
+:class:`~repro.core.layout.StoreLayout` plan.  The store no longer derives
+ring sizes, lane slots, or secondary-table placement itself — it *consumes*
+the plan :func:`~repro.core.layout.plan_layout` computed (constructing a
+store without an explicit ``layout`` plans one from its own view, which is
+the legacy single-view path).  Because the plan is explicit and diffable,
+a live store can :meth:`~OnlineFeatureStore.adopt_layout` an evolved plan —
+carrying state buffers over by ring identity instead of rebuilding — which
+is how ``ScenarioPlane.evolve`` hot-deploys new scenarios.
+
 Window-aggregation *arguments* may be derived expressions; the store
 materializes one lane per distinct argument at ingest (computed columns),
 so pre-aggregation composes for derived args too — mirroring OpenMLDB
-defining pre-aggregates per aggregation spec.
+defining pre-aggregates per aggregation spec.  Evolvable layouts
+(``raw_lanes=True``) additionally materialize every raw column as a lane,
+so a hot-deployed view's new arguments can be synthesized from history.
 
-Multi-table views add one ring store per referenced secondary table:
+Multi-table views add ring stores per referenced secondary table:
 point-in-time LAST JOIN lookups (newest matching row with ``ts <= request
 ts``) and WINDOW UNION aggregations (primary window combined with the
 union tables' masked rings) are answered from this device state inside the
-same compiled query.  Secondary rows arrive via :meth:`ingest_table`.
+same compiled query.  Secondary rows arrive via :meth:`ingest_table`; a
+table may back *several* rings (the sharded dual-use split: a partitioned
+union ring plus a replicated LAST JOIN slice).
 """
 
 from __future__ import annotations
@@ -63,10 +77,10 @@ from repro.core.expr import (
     Expr,
     WindowAgg,
     collect_last_joins,
-    collect_tables,
     collect_window_aggs,
     eval_rowlevel,
 )
+from repro.core.layout import StoreLayout, plan_layout
 
 __all__ = ["OnlineState", "OnlineFeatureStore", "QueryProgram"]
 
@@ -79,8 +93,9 @@ _POS_MAX = jnp.int32(2147483647)
 class OnlineState:
     """All device state of one view's online store (a pytree).
 
-    ``sec`` holds one RingStore per secondary table, in the store's
-    ``_sec_names`` order.
+    ``sec`` holds one RingStore per secondary *ring plan*, in the store's
+    ``layout.tables`` order (a dual-use table contributes two rings on a
+    sharded plane).
     """
 
     ring: st.RingStore
@@ -105,80 +120,130 @@ class OnlineFeatureStore:
     def __init__(
         self,
         view,  # repro.core.view.FeatureView
-        num_keys: int,
+        num_keys: Optional[int] = None,
         capacity: int = 256,
         num_buckets: int = 64,
         bucket_size: int = 64,
         secondary_num_keys: Optional[Dict[str, int]] = None,
         secondary_capacity: Optional[int] = None,
+        layout: Optional[StoreLayout] = None,
     ):
+        if layout is None:
+            if num_keys is None:
+                raise ValueError("OnlineFeatureStore needs num_keys or layout")
+            layout = plan_layout(
+                [view],
+                num_keys=num_keys,
+                capacity=capacity,
+                num_buckets=num_buckets,
+                bucket_size=bucket_size,
+                secondary_num_keys=secondary_num_keys,
+                secondary_capacity=secondary_capacity,
+            )
+        self._apply_layout(view, layout)
+        self.state = self._init_state()
+        self._build_fns()
+
+    # -- layout consumption ---------------------------------------------------
+
+    def _apply_layout(self, view, layout: StoreLayout) -> None:
+        """Derive every layout-dependent attribute from the plan.
+
+        Called at construction and again by :meth:`adopt_layout` — all
+        lane ids, ring indices, and placement flags live here, nowhere
+        else."""
         self.view = view
         self.schema = view.schema
-        self.num_keys = num_keys
-        self.capacity = capacity
-        self.num_buckets = num_buckets
-        self.bucket_size = bucket_size
+        self.layout = layout
+        self.num_keys = layout.primary.ring_keys
+        self.capacity = layout.primary.capacity
+        self.num_buckets = layout.bucket.num_buckets
+        self.bucket_size = layout.bucket.bucket_size
+        self._ttl = layout.primary.ttl
 
         exprs = list(view.features.values())
-        # lane plan: one materialized lane per distinct wagg argument
         self.waggs: Dict[Tuple, WindowAgg] = collect_window_aggs(exprs)
         self._wagg_order: List[Tuple] = list(self.waggs.keys())
         self.ljoins = collect_last_joins(exprs)
         self._ljoin_order: List[Tuple] = list(self.ljoins.keys())
-        self._lane_exprs: List[Expr] = []
-        self._lane_of: Dict[Tuple, int] = {}
+
+        # lane plan straight from the layout (wagg args, plus raw columns
+        # on evolvable layouts)
+        self._lane_exprs: List[Expr] = [s.expr for s in layout.primary.lanes]
+        self._lane_of: Dict[Tuple, int] = {
+            s.key: i for i, s in enumerate(layout.primary.lanes)
+        }
+        for wk, wa in self.waggs.items():
+            if wa.arg.key not in self._lane_of:
+                raise ValueError(
+                    f"layout has no lane for window argument of "
+                    f"{wa.agg.value}() in view {view.name!r}; the layout "
+                    "must be planned from (a superset of) this view"
+                )
+        self.num_lanes = max(len(self._lane_exprs), 1)
+
         # union waggs whose *primary-stream* part can compose from bucket
         # pre-aggregates (secondary parts always answer from raw rings)
         self._union_preagg: Dict[Tuple, bool] = {}
         for wk, wa in self.waggs.items():
-            ak = wa.arg.key
-            if ak not in self._lane_of:
-                self._lane_of[ak] = len(self._lane_exprs)
-                self._lane_exprs.append(wa.arg)
             if wa.window.mode == "range":
-                need = wa.window.size // bucket_size + 2
-                if not wa.union and need > num_buckets:
+                need = self._window_span(wa) // self.bucket_size + 2
+                if not wa.union and need > self.num_buckets:
+                    feats = [
+                        f for f, e in view.features.items()
+                        if wk in collect_window_aggs([e])
+                    ]
                     raise ValueError(
-                        f"window {wa.window.size} needs {need} buckets of "
-                        f"{bucket_size}, store has {num_buckets}"
+                        f"window {wa.window.size} of {wa.agg.value}() in "
+                        f"feature(s) {feats} of view {view.name!r} needs "
+                        f"{need} buckets of {self.bucket_size}, store "
+                        f"layout has num_buckets={self.num_buckets}"
                     )
                 self._union_preagg[wk] = bool(
                     wa.union
-                    and need <= num_buckets
+                    and need <= self.num_buckets
                     and agg_spec(wa.agg).bucket_composable
                 )
-        self.num_lanes = max(len(self._lane_exprs), 1)
 
-        # -- secondary-table plane (LAST JOIN + WINDOW UNION sources) --------
-        db = view.database
-        self._sec_names: Tuple[str, ...] = collect_tables(exprs)
-        self._sec_index = {t: i for i, t in enumerate(self._sec_names)}
-        self._sec_schemas = {t: db.table(t) for t in self._sec_names}
-        self._sec_lane_exprs: Dict[str, List[Expr]] = {
-            t: [] for t in self._sec_names
+        # -- secondary-ring plane (LAST JOIN + WINDOW UNION sources) --------
+        self._ring_plans = layout.tables
+        self._sec_names: Tuple[str, ...] = layout.table_names
+        # first ring of each table (compat index for tests/verify)
+        self._sec_index = {
+            t: layout.rings_of(t)[0] for t in self._sec_names
         }
-        self._sec_lane_of: Dict[str, Dict[Tuple, int]] = {
-            t: {} for t in self._sec_names
+        self._sec_schemas = {
+            t: view.database.table(t) for t in self._sec_names
         }
-
-        def sec_lane(table: str, e: Expr) -> None:
-            lanes = self._sec_lane_of[table]
-            if e.key not in lanes:
-                lanes[e.key] = len(self._sec_lane_exprs[table])
-                self._sec_lane_exprs[table].append(e)
-
-        for lj in self.ljoins.values():
-            sec_lane(lj.table, lj.arg)
+        self._ring_lane_exprs: List[List[Expr]] = [
+            [s.expr for s in p.lanes] for p in layout.tables
+        ]
+        self._ring_lane_of: List[Dict[Tuple, int]] = [
+            {s.key: i for i, s in enumerate(p.lanes)} for p in layout.tables
+        ]
         self._union_tables: Tuple[str, ...] = ()
         for wa in self.waggs.values():
             for t in wa.union:
-                sec_lane(t, wa.arg)
                 if t not in self._union_tables:
                     self._union_tables += (t,)
-        # which secondary tables are key-partitioned (set by ShardedOnlineStore
-        # before first trace); partitioned union rings are gathered at the
-        # shard-local request key, replicated ones at the global key
-        self._sec_sharded: Dict[str, bool] = {t: False for t in self._sec_names}
+        self._union_ring_ix = {
+            t: layout.union_ring(t) for t in self._union_tables
+        }
+        self._join_ring_ix = {
+            lj.table: layout.join_ring(lj.table)
+            for lj in self.ljoins.values()
+        }
+        # compat view of placement (True = gathered at the shard-local key)
+        self._sec_sharded: Dict[str, bool] = {
+            t: any(
+                p.partitioned for p in layout.tables if p.table == t
+            )
+            for t in self._sec_names
+        }
+        self.secondary_num_keys = {
+            t: layout.tables[self._sec_index[t]].num_keys
+            for t in self._sec_names
+        }
         # request-time join-key columns (primary columns named by LAST JOINs)
         self._join_cols: Tuple[str, ...] = ()
         for lj in self.ljoins.values():
@@ -186,39 +251,77 @@ class OnlineFeatureStore:
                 self._join_cols += (lj.on,)
         self._join_col_index = {c: i for i, c in enumerate(self._join_cols)}
 
-        sec_nk = secondary_num_keys or {}
-        sec_cap = secondary_capacity or capacity
-        self.secondary_num_keys = {
-            t: int(sec_nk.get(t, num_keys)) for t in self._sec_names
-        }
-        sec_rings = tuple(
-            st.ring_init(
-                self.secondary_num_keys[t],
-                sec_cap,
-                max(len(self._sec_lane_exprs[t]), 1),
-            )
-            for t in self._sec_names
+    def _init_state(self) -> OnlineState:
+        lay = self.layout
+        sec = tuple(
+            st.ring_init(p.ring_keys, p.capacity, max(len(p.lanes), 1))
+            for p in lay.tables
+        )
+        return OnlineState(
+            ring=st.ring_init(
+                lay.primary.ring_keys, lay.primary.capacity, self.num_lanes
+            ),
+            bagg=pg.bucket_init_plan(
+                lay.bucket, lay.primary.ring_keys, self.num_lanes
+            ),
+            sec=sec,
         )
 
-        self.state = OnlineState(
-            ring=st.ring_init(num_keys, capacity, self.num_lanes),
-            bagg=pg.bucket_init(num_keys, num_buckets, self.num_lanes, bucket_size),
-            sec=sec_rings,
-        )
-        # jit caches (compiled once per view version); the query fns go
-        # through the overridable _jit_query hook so the sharded store gets
-        # its vmapped-over-shards flavour for free — including every
-        # per-scenario QueryProgram compiled later against this store
+    def _build_fns(self) -> None:
+        """(Re)wrap the pure kernels in jit.  Fresh wrappers on every
+        layout adoption so stale traces (same shapes, different lane plan)
+        can never answer a query."""
         self._ingest_fn = jax.jit(self._ingest_pure, donate_argnums=(0,))
         self._sec_ingest_fns = {
-            t: jax.jit(
+            i: jax.jit(
                 functools.partial(self._sec_ingest_pure, index=i),
                 donate_argnums=(0,),
             )
-            for t, i in self._sec_index.items()
+            for i in range(len(self._ring_plans))
         }
+        # the query fns go through the overridable _jit_query hook so the
+        # sharded store gets its vmapped-over-shards flavour for free —
+        # including every per-scenario QueryProgram compiled against this
+        # store
         self._query_naive_fn = self._jit_query(self._query_pure_naive)
         self._query_preagg_fn = self._jit_query(self._query_pure_preagg)
+
+    # -- live evolution -------------------------------------------------------
+
+    def adopt_layout(self, view, layout: StoreLayout):
+        """Evolve this live store to a new (view, layout) in place.
+
+        Diffs the old plan against ``layout``
+        (:func:`~repro.core.layout.diff_layouts`), migrates every state
+        buffer (carried verbatim where ring identity is unchanged;
+        re-laid / lane-synthesized otherwise — see
+        :mod:`repro.core.migrate`), and re-derives all layout-dependent
+        attributes.  Compiled :class:`QueryProgram` s created against this
+        store stay valid: they re-trace against the evolved state on
+        their next call, and their trace-time subsets are matched by
+        structural key, not position.
+
+        Returns the :class:`~repro.core.migrate.MigrationReport`.
+        """
+        from repro.core import migrate
+        from repro.core.layout import diff_layouts
+
+        diff = diff_layouts(self.layout, layout)
+        # migrate FIRST, against the still-untouched store: a refused
+        # migration (unsynthesizable lane, unsupported diff) must leave
+        # the live plane exactly as it was — still serving.  The routing
+        # attributes migrate_state reads (permutation, shard count) are
+        # invariant across any diff diff_layouts accepts.
+        state, report = migrate.migrate_state(diff, self.state, self)
+        self._apply_layout(view, layout)
+        self.state = self._place_state(state)
+        self._build_fns()
+        return report
+
+    def _place_state(self, state: OnlineState) -> OnlineState:
+        """Device placement of a migrated state (sharded stores re-apply
+        their NamedSharding here)."""
+        return jax.tree.map(jnp.asarray, state)
 
     # -- lane evaluation ------------------------------------------------------
 
@@ -314,9 +417,12 @@ class OnlineFeatureStore:
         return OnlineState(ring=state.ring, bagg=state.bagg, sec=tuple(sec))
 
     def ingest_table(self, table: str, columns: Dict[str, jnp.ndarray]) -> None:
-        """Ingest a (key, ts)-sorted batch of rows into a secondary table's
-        ring (no pre-aggregates: secondary state serves LAST JOIN lookups
-        and union windows, both answered from raw rings)."""
+        """Ingest a (key, ts)-sorted batch of rows into every ring of a
+        secondary table (no pre-aggregates: secondary state serves LAST
+        JOIN lookups and union windows, both answered from raw rings).  A
+        dual-use table on a sharded plane writes its partitioned union
+        ring *and* its replicated join slice — each with that ring's own
+        lane subset."""
         if table == self.schema.name:
             return self.ingest(columns)
         if table not in self._sec_index:
@@ -329,35 +435,49 @@ class OnlineFeatureStore:
         if n == 0:
             return
         ts = jnp.asarray(columns[sch.ts], jnp.int32)
-        exprs = self._sec_lane_exprs[table]
-        if exprs:
-            lanes = jnp.stack(
-                [
-                    eval_rowlevel(e, columns, {}).astype(jnp.float32)
-                    for e in exprs
-                ],
-                axis=-1,
-            )
-        else:
-            lanes = jnp.zeros((n, 1), jnp.float32)
-        self._sec_ingest_padded(table, key, ts, lanes)
+        for i in self.layout.rings_of(table):
+            exprs = self._ring_lane_exprs[i]
+            if exprs:
+                lanes = jnp.stack(
+                    [
+                        eval_rowlevel(e, columns, {}).astype(jnp.float32)
+                        for e in exprs
+                    ],
+                    axis=-1,
+                )
+            else:
+                lanes = jnp.zeros((n, 1), jnp.float32)
+            self._sec_ring_ingest_padded(i, key, ts, lanes)
 
-    def _sec_ingest_padded(self, table: str, key, ts, lanes) -> None:
+    def _sec_ring_ingest_padded(self, index: int, key, ts, lanes) -> None:
         key, ts, lanes = self._pad_batch(
-            key, ts, lanes, self.secondary_num_keys[table]
+            key, ts, lanes, self._ring_plans[index].ring_keys
         )
-        self.state = self._sec_ingest_fns[table](self.state, key, ts, lanes)
+        self.state = self._sec_ingest_fns[index](self.state, key, ts, lanes)
 
     # -- window masks -------------------------------------------------------------
+
+    def _window_span(self, wa: WindowAgg) -> int:
+        """Effective RANGE lookback: the window size, clamped by the
+        layout's TTL retention policy when one is set (rows older than
+        the TTL are expired, so no window — RANGE or ROWS — may see
+        them; ROWS windows apply the same cutoff as an eligibility
+        mask in :meth:`_window_mask`)."""
+        if self._ttl is not None:
+            return min(wa.window.size, self._ttl)
+        return wa.window.size
 
     def _window_mask(self, wa: WindowAgg, ts_buf, valid, ts_q) -> jnp.ndarray:
         not_future = ts_buf <= ts_q[:, None]
         if wa.window.mode == "range":
-            lo = ts_q - jnp.int32(wa.window.size) + 1
+            lo = ts_q - jnp.int32(self._window_span(wa)) + 1
             return valid & not_future & (ts_buf >= lo[:, None])
         # rows mode: last (size-1) eligible rows; the request row is the
-        # size-th.  Rank from the newest backwards.
+        # size-th.  Rank from the newest backwards.  TTL-expired rows are
+        # not eligible (the retention policy is window-mode-independent).
         eligible = valid & not_future
+        if self._ttl is not None:
+            eligible &= ts_buf > (ts_q - jnp.int32(self._ttl))[:, None]
         newer = jnp.cumsum(eligible[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1]
         rank_from_new = newer - eligible.astype(jnp.int32)  # 0 == newest
         return eligible & (rank_from_new < wa.window.size - 1)
@@ -375,13 +495,14 @@ class OnlineFeatureStore:
         ``tables`` restricts the gathers to the union tables a scenario
         program actually folds.
         """
-        return {
-            t: st.ring_gather(
-                state.sec[self._sec_index[t]],
-                key if self._sec_sharded.get(t) else gkey,
+        out = {}
+        for t in (self._union_tables if tables is None else tables):
+            i = self._union_ring_ix[t]
+            out[t] = st.ring_gather(
+                state.sec[i],
+                key if self._ring_plans[i].partitioned else gkey,
             )
-            for t in (self._union_tables if tables is None else tables)
-        }
+        return out
 
     def _last_join_vals(
         self, state, ts_q, join_keys, ljoin_order=None, join_col_index=None
@@ -393,6 +514,8 @@ class OnlineFeatureStore:
         (matching the offline stable (key, ts) sort).  ``ljoin_order``
         restricts the joins computed and ``join_col_index`` maps join
         columns into the (possibly program-scoped) ``join_keys`` tuple.
+        Joins always read the table's replicated join ring (the join
+        slice, on a split dual-use table).
         """
         out = []
         gathers = {}
@@ -403,13 +526,12 @@ class OnlineFeatureStore:
         for lk in order:
             lj = self.ljoins[lk]
             jk = join_keys[col_ix[lj.on]]
-            gk = (lj.table, lj.on)
+            ring_ix = self._join_ring_ix[lj.table]
+            gk = (ring_ix, lj.on)
             if gk not in gathers:
-                gathers[gk] = st.ring_gather(
-                    state.sec[self._sec_index[lj.table]], jk
-                )
+                gathers[gk] = st.ring_gather(state.sec[ring_ix], jk)
             ts_t, lanes_t, valid_t = gathers[gk]
-            g = lanes_t[..., self._sec_lane_of[lj.table][lj.arg.key]]
+            g = lanes_t[..., self._ring_lane_of[ring_ix][lj.arg.key]]
             m = valid_t & (ts_t <= ts_q[:, None])
             ts_m = jnp.where(m, ts_t, _TS_MIN)
             mx = jnp.max(ts_m, axis=1)
@@ -435,7 +557,7 @@ class OnlineFeatureStore:
         B = jnp.int32(self.bucket_size)
         nb = self.num_buckets
         bucket_buf = ts_buf // B
-        T = jnp.int32(wa.window.size)
+        T = jnp.int32(self._window_span(wa))
         lo = ts_q - T + 1
         b_q = ts_q // B
         b_lo = (ts_q - T) // B
@@ -524,7 +646,8 @@ class OnlineFeatureStore:
                 )
             for rank, t in enumerate(wa.union):
                 ts_t, lanes_t, valid_t = sec_gathers[t]
-                g_t = lanes_t[..., self._sec_lane_of[t][wa.arg.key]]
+                lane_ix = self._ring_lane_of[self._union_ring_ix[t]]
+                g_t = lanes_t[..., lane_ix[wa.arg.key]]
                 m_t = self._window_mask(wa, ts_t, valid_t, ts_q)
                 acc = spec.combine(
                     acc, spec.fold_rows(g_t, ts_t, m_t, jnp.int32(rank))
@@ -560,7 +683,13 @@ class OnlineFeatureStore:
 
     def _max_mid(self, wa: WindowAgg) -> int:
         """Static bound on middle-bucket count for a window."""
-        return max(1, min(self.num_buckets, wa.window.size // self.bucket_size + 1))
+        return max(
+            1,
+            min(
+                self.num_buckets,
+                self._window_span(wa) // self.bucket_size + 1,
+            ),
+        )
 
     # -- public query ---------------------------------------------------------------------
 
@@ -569,20 +698,30 @@ class OnlineFeatureStore:
         cls,
         view,
         *,
-        num_keys: int,
+        num_keys: Optional[int] = None,
         num_shards: Optional[int] = None,
+        layout: Optional[StoreLayout] = None,
         **store_kwargs,
     ) -> "OnlineFeatureStore":
         """Factory shared by every deployment path (services, verify_view):
         a single-device store, or a :class:`~repro.core.shard.
-        ShardedOnlineStore` when ``num_shards`` is given."""
+        ShardedOnlineStore` when ``num_shards`` is given (or the layout
+        plans shards)."""
+        if layout is not None and layout.num_shards is not None:
+            num_shards = layout.num_shards
         if num_shards is not None:
             from repro.core.shard import ShardedOnlineStore
 
             return ShardedOnlineStore(
-                view, num_keys=num_keys, num_shards=num_shards, **store_kwargs
+                view,
+                num_keys=num_keys,
+                num_shards=num_shards,
+                layout=layout,
+                **store_kwargs,
             )
-        return OnlineFeatureStore(view, num_keys=num_keys, **store_kwargs)
+        return OnlineFeatureStore(
+            view, num_keys=num_keys, layout=layout, **store_kwargs
+        )
 
     def _validate_join_cols(
         self,
@@ -647,14 +786,35 @@ class OnlineFeatureStore:
 
         On a sharded store a key-partitioned table counts each row once
         (rows live on exactly one shard) while a replicated LAST JOIN
-        target counts ``num_shards``× (one copy per shard) — which is
-        exactly the storage-cost accounting the multi-scenario plane's
-        shared-ingest claim is stated in.
+        target counts ``num_shards``× (one copy per shard).  A split
+        dual-use table counts its partitioned union part once plus
+        ``num_shards``× its replicated join slice — exactly the
+        storage-cost accounting the dual-use partitioning claim is stated
+        in.
         """
         counts = {self.schema.name: int(np.sum(self.state.ring.cursor))}
-        for t, i in self._sec_index.items():
-            counts[t] = int(np.sum(self.state.sec[i].cursor))
+        for i, p in enumerate(self._ring_plans):
+            counts[p.table] = counts.get(p.table, 0) + int(
+                np.sum(self.state.sec[i].cursor)
+            )
         return counts
+
+    def ring_row_counts(self) -> Dict[Tuple[str, str], np.ndarray]:
+        """Per-ring stored row totals, keyed ``(table, placement)``.
+
+        Single-device stores report one total per ring; the sharded
+        override reports a per-shard vector — the observable behind the
+        dual-use assertion that union-stream rows are stored once, not
+        once per shard.
+        """
+        out = {
+            (self.schema.name, "partitioned" if self.layout.primary.partitioned
+             else "replicated"): np.asarray(self.state.ring.cursor).sum(-1)
+        }
+        for i, p in enumerate(self._ring_plans):
+            k = (p.table, "partitioned" if p.partitioned else "replicated")
+            out[k] = np.asarray(self.state.sec[i].cursor).sum(-1)
+        return out
 
     def query(
         self,
@@ -713,7 +873,9 @@ class QueryProgram:
     Every (wagg, ljoin) key of the view must exist in the store; the
     store's answers through a program are bit-identical to a dedicated
     single-view store fed the same stream (asserted in
-    ``tests/test_scenario.py``).
+    ``tests/test_scenario.py``).  Programs survive
+    :meth:`OnlineFeatureStore.adopt_layout`: their subsets are structural
+    keys, so they re-trace correctly against the evolved layout.
     """
 
     def __init__(self, store: OnlineFeatureStore, view):

@@ -46,6 +46,7 @@ from repro.core.aggregates import (
 __all__ = [
     "BucketAgg",
     "bucket_init",
+    "bucket_init_plan",
     "bucket_ingest",
     "row_stats",
     "stats_identity",
@@ -95,6 +96,13 @@ def bucket_init(num_keys: int, num_buckets: int, width: int, size: int) -> Bucke
         bucket=jnp.full((num_keys, num_buckets), jnp.int32(-1)),
         size=size,
     )
+
+
+def bucket_init_plan(plan, num_keys: int, width: int) -> BucketAgg:
+    """Initialize a bucket store straight from a declarative
+    :class:`~repro.core.layout.BucketPlan` — the store consumes the plan
+    instead of re-deriving its sizing."""
+    return bucket_init(num_keys, plan.num_buckets, width, plan.bucket_size)
 
 
 def _segment_or_scan(bm: jnp.ndarray, new_seg: jnp.ndarray) -> jnp.ndarray:

@@ -7,6 +7,13 @@ compute.  Before this module, every scenario paid for its own
 its own copy of shared tables, its own ingest stream, its own device
 memory.  :class:`ScenarioPlane` is the consolidation layer:
 
+* **One plan.**  The plane asks the layout planner
+  (:func:`~repro.core.layout.plan_layout`) for a single *evolvable*
+  :class:`~repro.core.layout.StoreLayout` over all its views
+  (``raw_lanes=True``: every raw column is a lane from day one, so future
+  views hot-deploy with complete history).  The plan decides lane slots,
+  per-(table, shard) ring identities, and placement (partitioned vs
+  replicated vs split dual-use tables); the store merely consumes it.
 * **One state.**  The plane merges the registered views into a single
   internal view whose lane plan is the *union* of every view's window
   arguments and whose secondary tables are the union of every view's
@@ -27,6 +34,14 @@ memory.  :class:`ScenarioPlane` is the consolidation layer:
   stay **bit-identical** to a dedicated single-view store fed the same
   stream — per-key state depends only on the key's rows and their order,
   and sharing lanes changes neither.
+* **Live evolution.**  :meth:`evolve` re-plans the layout for a new view
+  list and migrates the running store's state to it
+  (:meth:`~repro.core.online.OnlineFeatureStore.adopt_layout`): unchanged
+  rings carry over verbatim, new lanes are synthesized from history, and
+  only the *new* views' query programs are compiled.  Adding scenario
+  #N+1 no longer rebuilds the plane or re-ingests shared tables — the
+  paper's "rapid updates and deployments" story
+  (``MultiScenarioService.hot_deploy`` is the serving-layer entry).
 
 The serving front-end (scenario-tagged routing, per-scenario stats) lives
 in :mod:`repro.serve` — see ``FeatureService.build_multi`` and the
@@ -38,6 +53,7 @@ from __future__ import annotations
 from typing import Dict, Iterable, List, Optional
 
 from repro.core.expr import Expr, collect_tables
+from repro.core.layout import StoreLayout, plan_layout
 from repro.core.online import OnlineFeatureStore, QueryProgram
 from repro.core.storage import Database, TableSchema
 from repro.core.view import FeatureView
@@ -100,8 +116,9 @@ class ScenarioPlane:
     ``num_shards=None`` deploys on a single-device store; an integer
     deploys on a :class:`~repro.core.shard.ShardedOnlineStore` over one
     ``('shard',)`` mesh.  ``store_kwargs`` (capacity, num_buckets,
-    bucket_size, secondary_num_keys, ...) are shared by every scenario —
-    they size the one state all scenarios live in.
+    bucket_size, secondary_num_keys, ...) are planner knobs shared by
+    every scenario — they size the one state all scenarios live in, and
+    are remembered so :meth:`evolve` re-plans with the same policy.
     """
 
     def __init__(
@@ -111,20 +128,78 @@ class ScenarioPlane:
         num_keys: int,
         num_shards: Optional[int] = None,
         name: str = "scenario_plane",
+        mesh=None,
         **store_kwargs,
     ):
         views = list(views)
         self.views: Dict[str, FeatureView] = {v.name: v for v in views}
-        self.merged = merge_views(views, name=name)
-        self.store = OnlineFeatureStore.create(
-            self.merged,
-            num_keys=num_keys,
-            num_shards=num_shards,
-            **store_kwargs,
+        self._plan_kwargs = dict(
+            num_keys=num_keys, num_shards=num_shards, **store_kwargs
         )
+        self.layout: StoreLayout = plan_layout(
+            views, raw_lanes=True, **self._plan_kwargs
+        )
+        self.merged = merge_views(views, name=name)
+        if num_shards is not None:
+            from repro.core.shard import ShardedOnlineStore
+
+            self.store = ShardedOnlineStore(
+                self.merged, layout=self.layout, mesh=mesh
+            )
+        else:
+            self.store = OnlineFeatureStore(self.merged, layout=self.layout)
         self.programs: Dict[str, QueryProgram] = {
             v.name: self.store.compile_program(v) for v in views
         }
+
+    # -- live evolution ----------------------------------------------------------
+
+    def evolve(self, new_views: Iterable[FeatureView], **plan_overrides):
+        """Hot-swap the plane to serve ``new_views`` — a state migration,
+        not a rebuild.
+
+        Re-plans the :class:`~repro.core.layout.StoreLayout` for the new
+        view list (same planner policy; ``plan_overrides`` may adjust
+        knobs like ``capacity``), diffs it against the running plan, and
+        migrates the live store in place: unchanged rings carry over
+        verbatim (no shared table is re-ingested —
+        :meth:`ingest_row_counts` is unchanged for carried tables), new
+        lanes are synthesized from the raw-column history, split/added
+        rings are rebuilt from per-key row streams.  Only views *not
+        already deployed* get a new compiled
+        :class:`~repro.core.online.QueryProgram`; existing programs keep
+        serving (their trace-time subsets are structural, so they re-trace
+        correctly against the evolved layout).
+
+        Returns the :class:`~repro.core.migrate.MigrationReport`; within
+        the retention horizon the migrated plane is bit-identical to a
+        cold rebuild + full replay (``report.exact``), which the
+        hot-deploy gate asserts.
+        """
+        new_views = list(new_views)
+        kwargs = dict(self._plan_kwargs)
+        kwargs.update(plan_overrides)
+        new_layout = plan_layout(new_views, raw_lanes=True, **kwargs)
+        new_merged = merge_views(new_views, name=self.merged.name)
+        report = self.store.adopt_layout(new_merged, new_layout)
+        old_views = self.views
+        self._plan_kwargs = kwargs
+        self.layout = new_layout
+        self.views = {v.name: v for v in new_views}
+        self.merged = new_merged
+        # compile only the NEW views' programs; identical already-deployed
+        # views keep their compiled programs
+        kept = {
+            n: p
+            for n, p in self.programs.items()
+            if self.views.get(n) is old_views.get(n)
+        }
+        self.programs = kept
+        for v in new_views:
+            if v.name not in self.programs:
+                self.programs[v.name] = self.store.compile_program(v)
+                report.new_programs.append(v.name)
+        return report
 
     # -- introspection ---------------------------------------------------------
 

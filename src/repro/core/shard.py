@@ -11,8 +11,10 @@ laid out over a 1-D device mesh with ``NamedSharding`` — and answers
 batched requests with one compiled program vmapped over shards (GSPMD
 partitions it; per-shard compute never crosses devices).
 
-Partitioning scheme
--------------------
+Partitioning scheme — now read from the declarative
+:class:`~repro.core.layout.StoreLayout` plan (one planner decides, every
+layer consumes):
+
 * **Primary state** is partitioned by deterministic key routing.  By
   default (``hash_routing=True``) keys pass through a
   :class:`~repro.core.hashing.KeyPermutation` — a mix32-Feistel bijection
@@ -29,7 +31,11 @@ Partitioning scheme
 * **LAST JOIN targets** are *replicated* on every shard (the classic
   dimension-table strategy): join keys are arbitrary request columns, so
   a lookup must succeed locally on whichever shard owns the request row.
-  A table used both as a join target and a union stream is replicated.
+* **Dual-use tables** (both a union stream and a join target) are
+  **split** by the planner: the union-stream rows are key-partitioned
+  like the primary (stored once, not S×), and only a narrow replicated
+  *join slice* (the LAST JOIN argument lanes) is copied per shard —
+  recovering the S× memory the replicate-everything policy used to pay.
 
 Request path (the router's dataflow; see :mod:`repro.serve.router`):
 rows are bucketed by shard on the host, padded to a shared power-of-two
@@ -53,13 +59,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.expr import (
-    collect_last_joins,
-    collect_tables,
-    collect_window_aggs,
-)
 from repro.core.hashing import KeyPermutation
-from repro.core.online import OnlineFeatureStore
+from repro.core.layout import StoreLayout, plan_layout
+from repro.core.online import OnlineFeatureStore, OnlineState
 
 __all__ = [
     "RoutePlan",
@@ -118,13 +120,15 @@ class ShardedOnlineStore(OnlineFeatureStore):
     Same public API (``ingest`` / ``ingest_table`` / ``query``), same
     answers bit-for-bit; ``FeatureService`` and ``verify_view`` accept it
     unchanged.  ``num_keys`` / ``secondary_num_keys`` are *global* key
-    counts; per-shard tables are sized ``ceil(K/S)``.
+    counts; per-shard tables are sized ``ceil(K/S)``.  All placement
+    decisions come from the :class:`~repro.core.layout.StoreLayout`
+    (computed here from the view when not passed explicitly).
     """
 
     def __init__(
         self,
         view,  # repro.core.view.FeatureView
-        num_keys: int,
+        num_keys: Optional[int] = None,
         num_shards: int = 1,
         capacity: int = 256,
         num_buckets: int = 64,
@@ -133,87 +137,87 @@ class ShardedOnlineStore(OnlineFeatureStore):
         secondary_capacity: Optional[int] = None,
         mesh: Optional[Mesh] = None,
         hash_routing: bool = True,
+        layout: Optional[StoreLayout] = None,
     ):
-        if num_shards < 1:
-            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
-        S = int(num_shards)
-        self.num_shards = S
-        self.global_num_keys = int(num_keys)
-        self.hash_routing = bool(hash_routing)
-
-        # table placement (must precede super().__init__, which sizes rings):
-        # union-only tables are key-partitioned like the primary, join
-        # targets (incl. dual-use tables) are replicated on every shard
-        exprs = list(view.features.values())
-        join_tables = {
-            lj.table for lj in collect_last_joins(exprs).values()
-        }
-        union_tables = set()
-        for wa in collect_window_aggs(exprs).values():
-            union_tables.update(wa.union)
-        sharded_sec = union_tables - join_tables
-
-        g_nk = dict(secondary_num_keys or {})
-        self.global_secondary_num_keys = {
-            t: int(g_nk.get(t, num_keys)) for t in collect_tables(exprs)
-        }
-
-        if self.hash_routing:
-            # one permutation shared by the primary and every partitioned
-            # union table: union streams share the primary key space, and a
-            # per-table permutation would send a key's union rows to a
-            # different shard than its primary rows.  The domain is padded
-            # to a multiple of S so local = perm // S stays < ceil(U/S).
-            dom = max(
-                [self.global_num_keys]
-                + [self.global_secondary_num_keys[t] for t in sharded_sec]
+        if layout is None:
+            if num_keys is None:
+                raise ValueError("ShardedOnlineStore needs num_keys or layout")
+            layout = plan_layout(
+                [view],
+                num_keys=num_keys,
+                capacity=capacity,
+                num_buckets=num_buckets,
+                bucket_size=bucket_size,
+                num_shards=num_shards,
+                hash_routing=hash_routing,
+                secondary_num_keys=secondary_num_keys,
+                secondary_capacity=secondary_capacity,
             )
-            dom_pad = S * (-(-dom // S))
-            self._perm: Optional[KeyPermutation] = KeyPermutation(dom_pad)
-            per_shard_keys = dom_pad // S
-        else:
-            self._perm = None
-            per_shard_keys = -(-self.global_num_keys // S)
-        eff_sec_nk = {
-            t: (per_shard_keys if t in sharded_sec else g)
-            for t, g in self.global_secondary_num_keys.items()
-        }
+        if layout.num_shards is None:
+            raise ValueError(
+                "ShardedOnlineStore needs a sharded layout "
+                "(plan_layout(..., num_shards=S))"
+            )
+        self._mesh_arg = mesh
+        super().__init__(view, layout=layout)
 
-        super().__init__(
-            view,
-            num_keys=per_shard_keys,
-            capacity=capacity,
-            num_buckets=num_buckets,
-            bucket_size=bucket_size,
-            secondary_num_keys=eff_sec_nk,
-            secondary_capacity=secondary_capacity,
+    # -- layout consumption ----------------------------------------------------
+
+    def _apply_layout(self, view, layout: StoreLayout) -> None:
+        if layout.num_shards is None or layout.num_shards < 1:
+            raise ValueError(
+                f"sharded store needs num_shards >= 1, got "
+                f"{layout.num_shards}"
+            )
+        S = int(layout.num_shards)
+        self.num_shards = S
+        self.global_num_keys = layout.num_keys
+        self.hash_routing = layout.hash_routing
+        self._perm: Optional[KeyPermutation] = (
+            KeyPermutation(layout.perm_domain)
+            if layout.perm_domain is not None
+            else None
         )
-        for t in sharded_sec:
-            self._sec_sharded[t] = True
+        super()._apply_layout(view, layout)
+        self.global_secondary_num_keys = dict(self.secondary_num_keys)
+        # the mesh survives layout adoption: same shard count, same devices
+        if not hasattr(self, "mesh"):
+            self.mesh = (
+                self._mesh_arg
+                if self._mesh_arg is not None
+                else make_shard_mesh(S)
+            )
+            self.sharding = NamedSharding(self.mesh, P("shard"))
 
-        self.mesh = mesh if mesh is not None else make_shard_mesh(S)
-        self.sharding = NamedSharding(self.mesh, P("shard"))
+    def _init_state(self) -> OnlineState:
         # stack S identical fresh per-shard states, partition over the mesh
-        self.state = jax.device_put(
-            jax.tree.map(lambda x: jnp.stack([x] * S), self.state),
-            self.sharding,
+        single = super()._init_state()
+        return self._place_state(
+            jax.tree.map(lambda x: jnp.stack([x] * self.num_shards), single)
         )
+
+    def _place_state(self, state: OnlineState) -> OnlineState:
+        return jax.device_put(
+            jax.tree.map(jnp.asarray, state), self.sharding
+        )
+
+    def _build_fns(self) -> None:
         # one compiled executable per path, vmapped over the shard axis;
         # GSPMD splits it across mesh devices (no cross-shard collectives
         # in the body — results gather only when fetched to host).  The
-        # query fns were already built by super().__init__ through the
-        # _jit_query override below, so they (and every per-scenario
-        # QueryProgram) are the vmapped flavour; only ingest needs
-        # re-wrapping for donation.
+        # query fns are built through the _jit_query override below, so
+        # they (and every per-scenario QueryProgram) are the vmapped
+        # flavour; ingest needs its own wrapping for donation.
+        super()._build_fns()
         self._ingest_fn = jax.jit(
             jax.vmap(self._ingest_pure), donate_argnums=(0,)
         )
         self._sec_ingest_fns = {
-            t: jax.jit(
+            i: jax.jit(
                 jax.vmap(functools.partial(self._sec_ingest_pure, index=i)),
                 donate_argnums=(0,),
             )
-            for t, i in self._sec_index.items()
+            for i in range(len(self._ring_plans))
         }
 
     def _jit_query(self, fn):
@@ -340,30 +344,27 @@ class ShardedOnlineStore(OnlineFeatureStore):
             self.state, self._put(k), self._put(t), self._put(l)
         )
 
-    def _sec_ingest_padded(self, table: str, key, ts, lanes) -> None:
+    def _sec_ring_ingest_padded(self, index: int, key, ts, lanes) -> None:
         S = self.num_shards
-        if self._sec_sharded[table]:
+        plan_i = self._ring_plans[index]
+        if plan_i.partitioned:
             key_h, ts_h = np.asarray(key), np.asarray(ts)
-            plan, local = self._sorted_route(
-                key_h, ts_h, self.global_secondary_num_keys[table]
-            )
+            plan, local = self._sorted_route(key_h, ts_h, plan_i.num_keys)
             k = self._route_rows(
-                plan, local, pad="sentinel",
-                sentinel=self.secondary_num_keys[table],
+                plan, local, pad="sentinel", sentinel=plan_i.ring_keys
             )
             t = self._route_rows(plan, ts_h, pad="repeat")
             l = self._route_rows(plan, np.asarray(lanes), pad="sentinel")
         else:
-            # replicated dimension table: identical fused scatter on every
-            # shard keeps each replica bit-identical to the single store
-            key, ts, lanes = self._pad_batch(
-                key, ts, lanes, self.secondary_num_keys[table]
-            )
+            # replicated dimension table / join slice: identical fused
+            # scatter on every shard keeps each replica bit-identical to
+            # the single store
+            key, ts, lanes = self._pad_batch(key, ts, lanes, plan_i.ring_keys)
             k, t, l = (
                 np.broadcast_to(np.asarray(x), (S,) + x.shape)
                 for x in (key, ts, lanes)
             )
-        self.state = self._sec_ingest_fns[table](
+        self.state = self._sec_ingest_fns[index](
             self.state, self._put(k), self._put(t), self._put(l)
         )
 

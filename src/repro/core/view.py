@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.expr import (
     Agg,
@@ -296,11 +296,14 @@ class FeatureView:
             if deps:
                 lines += ["**Deploy history**", ""]
                 for d in deps:
+                    extra = (
+                        f" — {d['description']}" if d.get("description") else ""
+                    )
                     lines.append(
                         f"- service `{d['service']}` ← `{d['view']}` "
                         f"v{d['version']} "
                         f"({len(d['features'])} features, "
-                        f"{len(d['tables'])} tables)"
+                        f"{len(d['tables'])} tables){extra}"
                     )
                 lines.append("")
         return "\n".join(lines)
@@ -326,13 +329,19 @@ class FeatureRegistry:
     The paper persists this in the Sage-Studio control plane; here it is an
     in-process registry with JSON export so the launcher/checkpointer can
     persist it alongside model state.
+
+    ``clock`` is injectable (seconds since epoch, like ``time.time``) —
+    mirroring ``BatchScheduler``'s injectable clock — so deploy-history
+    ordering and timestamps are deterministic under test/replay; real
+    callers omit it and get wall-clock stamps.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, clock: Optional[Callable[[], float]] = None) -> None:
         self._views: Dict[Tuple[str, int], FeatureView] = {}
         self._latest: Dict[str, int] = {}
         self._services: Dict[str, Dict] = {}
         self._events: List[Dict] = []
+        self._clock: Callable[[], float] = clock if clock is not None else time.time
 
     # -- views ---------------------------------------------------------------
 
@@ -364,6 +373,7 @@ class FeatureRegistry:
         description: str = "",
     ) -> Dict:
         view = self.get(view_name, version)
+        now = self._clock()
         rec = {
             "service": service,
             "view": view.name,
@@ -371,10 +381,13 @@ class FeatureRegistry:
             "features": list(view.features),
             "tables": view.tables,
             "description": description,
-            "deployed_at": time.time(),
+            "deployed_at": now,
         }
         self._services[service] = rec
-        self._log("deploy", **{k: rec[k] for k in ("service", "view", "version")})
+        self._log(
+            "deploy", t=now,
+            **{k: rec[k] for k in ("service", "view", "version")},
+        )
         return rec
 
     def service(self, name: str) -> Dict:
@@ -390,8 +403,10 @@ class FeatureRegistry:
 
     # -- bookkeeping --------------------------------------------------------------
 
-    def _log(self, kind: str, **kw) -> None:
-        self._events.append({"kind": kind, "t": time.time(), **kw})
+    def _log(self, kind: str, t: Optional[float] = None, **kw) -> None:
+        self._events.append(
+            {"kind": kind, "t": self._clock() if t is None else t, **kw}
+        )
 
     def to_json(self) -> str:
         return json.dumps(

@@ -211,13 +211,20 @@ def multi_scenario_views() -> List[FeatureView]:
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One deployed example scenario: its views, workload, and run command."""
+    """One deployed example scenario: its views, workload, and run command.
+
+    ``hot_deployed`` names the views this scenario deploys onto the LIVE
+    plane via ``MultiScenarioService.hot_deploy`` (rather than at launch)
+    — the catalog's deploy history records them as hot deploys, matching
+    what the example actually does.
+    """
 
     name: str
     title: str
     description: str
     run: str
     views: Callable[[], List[FeatureView]]
+    hot_deployed: tuple = ()
 
 
 def _one(builder: Callable[[], FeatureView]) -> Callable[[], List[FeatureView]]:
@@ -273,10 +280,12 @@ SCENARIOS: Dict[str, Scenario] = {
             description=(
                 "Three views (acct_risk, spend_profile, merchant_watch) on "
                 "ONE store/mesh; shared tables ingested once, answers "
-                "bit-identical to dedicated stores."
+                "bit-identical to dedicated stores; merchant_watch is "
+                "hot-deployed onto the warm plane."
             ),
             run="PYTHONPATH=src python examples/multi_scenario.py",
             views=multi_scenario_views,
+            hot_deployed=("merchant_watch",),
         ),
     )
 }

@@ -84,6 +84,21 @@ class ShardRouter:
             for s in (self.scenarios or ())
         }
 
+    def _sync_scenarios(self) -> None:
+        """Pick up scenarios hot-deployed onto the service since this
+        router was built (``MultiScenarioService.hot_deploy``): the
+        scenario list and its per-(scenario, shard) histograms follow the
+        live plane."""
+        if self.scenarios is None:
+            return
+        live = list(self.service.scenarios)
+        if live != self.scenarios:
+            self.scenarios = live
+            for s in live:
+                self.scenario_shard_requests.setdefault(
+                    s, np.zeros(self.num_shards, np.int64)
+                )
+
     def submit(
         self,
         row: Dict,
@@ -92,6 +107,7 @@ class ShardRouter:
     ) -> None:
         """Queue one request row; multi-scenario services require the
         ``scenario`` tag (which view answers this row)."""
+        self._sync_scenarios()
         if self.scenarios is not None:
             if scenario is None:
                 raise ValueError(
@@ -129,6 +145,7 @@ class ShardRouter:
         self, now_us: Optional[int] = None, flush: bool = False
     ) -> Optional[Dict[str, np.ndarray]]:
         """Serve one coalesced batch; None if nothing is ready yet."""
+        self._sync_scenarios()
         batch = self.scheduler.next_batch(now_us=now_us, flush=flush)
         if batch is None:
             return None

@@ -95,6 +95,7 @@ class FeatureService:
         self.view = view
         self.store = store
         self.mode = mode
+        self.registry = registry
         self.stats = ServiceStats()
         if registry is not None:
             registry.deploy(name, view.name, view.version)
@@ -258,6 +259,7 @@ class MultiScenarioService(FeatureService):
     ):
         self.plane = plane
         super().__init__(name, plane.merged, plane.store, mode=mode)
+        self.registry = registry
         self.scenario_stats: Dict[str, ServiceStats] = {
             s: ServiceStats() for s in plane.scenarios
         }
@@ -268,6 +270,45 @@ class MultiScenarioService(FeatureService):
     @property
     def scenarios(self) -> List[str]:
         return self.plane.scenarios
+
+    def hot_deploy(self, view: FeatureView, **plan_overrides):
+        """Deploy one more scenario onto the LIVE plane — no rebuild, no
+        re-ingest, no downtime for the scenarios already serving.
+
+        Drives :meth:`~repro.core.scenario.ScenarioPlane.evolve`: the
+        layout planner re-plans for ``views + [view]``, the running
+        store's state migrates to the new plan (carried buffers verbatim,
+        new lanes synthesized from history), and only the new view's
+        :class:`~repro.core.online.QueryProgram` is compiled.  The
+        deployment is recorded in the registry as
+        ``"<service>:<scenario>"`` with a ``hot deploy`` description
+        (the view is registered first if the registry does not know it),
+        and a fresh per-scenario :class:`ServiceStats` starts counting.
+
+        Returns the :class:`~repro.core.migrate.MigrationReport`.
+        """
+        if view.name in self.plane.views:
+            raise ValueError(
+                f"scenario {view.name!r} is already deployed on "
+                f"{self.name!r}; hot_deploy adds new scenarios"
+            )
+        report = self.plane.evolve(
+            list(self.plane.views.values()) + [view], **plan_overrides
+        )
+        self.view = self.plane.merged
+        self.scenario_stats.setdefault(view.name, ServiceStats())
+        if self.registry is not None:
+            try:
+                self.registry.get(view.name, view.version)
+            except KeyError:
+                self.registry.register(view)
+            self.registry.deploy(
+                f"{self.name}:{view.name}",
+                view.name,
+                view.version,
+                description="hot deploy (live plane evolution)",
+            )
+        return report
 
     def _compute(self, rows, scenario):
         if scenario is None:

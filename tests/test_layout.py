@@ -1,0 +1,615 @@
+"""Declarative StoreLayout plan + live plane evolution (ISSUE 5).
+
+Acceptance contract under test: ``hot_deploy`` of a new scenario on a
+warm sharded plane (shards ∈ {1, 4, 8}) preserves all prior state
+**bit-exactly** vs a cold rebuild + full replay oracle, without
+re-ingesting shared tables (``ingest_row_counts`` unchanged for
+carried-over tables); and dual-use secondary tables no longer pay S×
+replication for their union-stream part (asserted via per-shard row
+counts).  Plus: planner determinism/append-stability, lane synthesis,
+capacity re-lay, fail-loud unsupported diffs, and TTL plan knobs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    Col,
+    FeatureView,
+    ScenarioPlane,
+    ShardedOnlineStore,
+    OnlineFeatureStore,
+    diff_layouts,
+    last_join,
+    plan_layout,
+    range_window,
+    w_count,
+    w_max,
+    w_mean,
+    w_sum,
+)
+from repro.core.consistency import replay_rounds
+from repro.core.expr import Hash
+from repro.data.synthetic import MULTITABLE_DB, multitable_stream
+from repro.scenarios import multi_scenario_views
+
+K = 16
+NM = 8
+STORE_KW = dict(
+    num_keys=K, capacity=128, num_buckets=512, bucket_size=64,
+    secondary_num_keys={"merchants": NM},
+)
+
+
+def make_tables(rng, n=150, t_max=40_000):
+    tabs = multitable_stream(
+        rng, n, num_accounts=K, num_merchants=NM, t_max=t_max
+    )
+    return tabs["transactions"], {
+        t: c for t, c in tabs.items() if t != "transactions"
+    }
+
+
+def _bykey(d, kc):
+    o = np.lexsort((d["ts"], d[kc]))
+    return {c: v[o] for c, v in d.items()}
+
+
+def _warm(plane, tx, sec, rounds=False):
+    """Same deterministic ingest schedule for the live plane and the
+    cold-rebuild oracle (bit-exactness is stated against an oracle that
+    replays the SAME batch sequence)."""
+    for t in plane.store._sec_names:
+        kc = MULTITABLE_DB.table(t).key
+        plane.ingest_table(t, _bykey(sec[t], kc))
+    if rounds:
+        key, ts = tx["account"], tx["ts"]
+        for idx in replay_rounds(key, ts):
+            plane.ingest(_bykey({c: v[idx] for c, v in tx.items()}, "account"))
+    else:
+        plane.ingest(_bykey(tx, "account"))
+
+
+def _assert_state_equal(a, b):
+    la = jax.tree_util.tree_leaves_with_path(a.store.state)
+    lb = jax.tree_util.tree_leaves_with_path(b.store.state)
+    assert len(la) == len(lb)
+    for (p1, x), (_, y) in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=str(p1)
+        )
+
+
+def _assert_answers_equal(a, b, views, req, modes=("naive", "preagg")):
+    for v in views:
+        for mode in modes:
+            ra = a.query(v.name, req, mode=mode)
+            rb = b.query(v.name, req, mode=mode)
+            for f in v.features:
+                np.testing.assert_array_equal(
+                    np.asarray(ra[f]),
+                    np.asarray(rb[f]),
+                    err_msg=f"{v.name}:{f}:{mode}",
+                )
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+
+def test_planner_roles_and_sizes():
+    views = multi_scenario_views()
+    lay = plan_layout(views, num_shards=4, raw_lanes=True, **STORE_KW)
+    assert lay.primary.partitioned and lay.primary.ring_keys == K // 4
+    roles = {
+        (p.table, p.partitioned, p.serves) for p in lay.tables
+    }
+    assert ("wires", True, ("union",)) in roles          # union-only: partitioned
+    assert ("accounts", False, ("join",)) in roles       # join-only: replicated
+    assert ("merchants", False, ("join",)) in roles
+    # evolvable: raw columns are lanes from day one
+    assert ("col", "amount") in lay.primary.lane_keys
+    assert ("col", "merchant") in lay.primary.lane_keys
+    # bucket plan consumed by preagg
+    assert lay.bucket.num_buckets == 512 and lay.bucket.bucket_size == 64
+
+
+def test_planner_append_stable():
+    """plan(views + [v]) keeps every slot and ring of plan(views) at the
+    same position — the property hot deployment rests on."""
+    views = multi_scenario_views()
+    a = plan_layout(views[:2], num_shards=4, raw_lanes=True, **STORE_KW)
+    b = plan_layout(views, num_shards=4, raw_lanes=True, **STORE_KW)
+    assert b.primary.lane_keys[: len(a.primary.lane_keys)] == a.primary.lane_keys
+    for i, p in enumerate(a.tables):
+        assert b.tables[i].identity() == p.identity()
+    # determinism
+    c = plan_layout(views, num_shards=4, raw_lanes=True, **STORE_KW)
+    assert b == c
+
+
+def test_planner_names_offending_feature_on_bucket_overflow():
+    """The window-fit ValueError names the view/feature and the computed
+    bucket need — not just the raw sizes (ISSUE 5 satellite)."""
+    big = FeatureView(
+        "bigwin",
+        MULTITABLE_DB.primary,
+        {"huge_sum": w_sum(Col("amount"), range_window(100_000, bucket=64))},
+        database=MULTITABLE_DB,
+    )
+    need = 100_000 // 64 + 2
+    with pytest.raises(ValueError) as ei:
+        plan_layout([big], num_keys=K, num_buckets=64, bucket_size=64)
+    msg = str(ei.value)
+    assert "huge_sum" in msg and str(need) in msg and "num_buckets=64" in msg
+    # the store constructor path (planner inside) reports the same
+    with pytest.raises(ValueError, match="huge_sum"):
+        OnlineFeatureStore(big, num_keys=K, num_buckets=64, bucket_size=64)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: hot deploy on a warm sharded plane == cold rebuild + replay
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_shards", [1, 4, 8])
+def test_hot_deploy_bit_exact_vs_rebuild(num_shards):
+    from repro.serve.service import FeatureService
+
+    rng = np.random.default_rng(400 + num_shards)
+    tx, sec = make_tables(rng)
+    views = multi_scenario_views()
+
+    svc = FeatureService.build_multi(
+        "plane", views[:2], sharded=True, num_shards=num_shards, **STORE_KW
+    )
+    hot = svc.plane
+    _warm(hot, tx, sec)
+    before = hot.ingest_row_counts()
+
+    report = svc.hot_deploy(views[2])
+    assert report.exact
+    assert report.new_programs == [views[2].name]
+    # no re-ingest: carried tables' row accounting is unchanged
+    assert hot.ingest_row_counts() == before
+
+    cold = ScenarioPlane(views, num_shards=num_shards, **STORE_KW)
+    _warm(cold, tx, sec)
+    _assert_state_equal(hot, cold)
+
+    req = dict(
+        account=rng.integers(0, K, 33).astype(np.int32),
+        ts=np.full(33, 50_000, np.int32),
+        amount=rng.gamma(2.0, 10.0, 33).astype(np.float32),
+        merchant=rng.integers(0, NM, 33).astype(np.int32),
+    )
+    _assert_answers_equal(hot, cold, views, req)
+    # the new scenario serves through the service request path too
+    out = svc.request(
+        {c: v[:8] for c, v in req.items()}, ingest=False,
+        scenario=views[2].name,
+    )
+    assert set(out) == set(views[2].features)
+
+
+@pytest.mark.parametrize("num_shards", [None, 4])
+def test_evolve_synthesizes_derived_lanes_and_recapacity(num_shards):
+    """A hot-deployed view may introduce NEW derived window-arg lanes and
+    grow ring capacity: lanes are synthesized from the raw-column history
+    (ring values AND bucket pre-agg states), rings re-laid — still
+    bit-exact vs the rebuild oracle inside the retention horizon."""
+    amt = Col("amount")
+    w1h = range_window(3600, bucket=64)
+    va = FeatureView(
+        "va",
+        features={
+            "out": w_sum(amt, w1h, union=("wires",)),
+            "cnt": w_count(amt, w1h),
+        },
+        database=MULTITABLE_DB,
+    )
+    vb = FeatureView(
+        "vb",
+        features={
+            "dbl": w_sum(amt * 2.0, w1h),
+            "mx": w_max(amt * 2.0, w1h),
+            "big": w_mean(amt > 20.0, w1h),
+        },
+        database=MULTITABLE_DB,
+    )
+    rng = np.random.default_rng(7 if num_shards is None else 7 + num_shards)
+    tx, sec = make_tables(rng, n=140)
+
+    hot = ScenarioPlane([va], num_shards=num_shards, **STORE_KW)
+    _warm(hot, tx, sec, rounds=True)
+    report = hot.evolve([va, vb], capacity=192)
+    assert report.exact, report.notes
+    assert any("dbl" in s or "mul" in s for s in report.synthesized_lanes)
+
+    kw = {k: v for k, v in STORE_KW.items() if k != "capacity"}
+    cold = ScenarioPlane([va, vb], num_shards=num_shards, capacity=192, **kw)
+    _warm(cold, tx, sec, rounds=True)
+    _assert_state_equal(hot, cold)
+    req = dict(
+        account=np.arange(K, dtype=np.int32),
+        ts=np.full(K, 50_000, np.int32),
+        amount=np.full(K, 25.0, np.float32),
+        merchant=np.zeros(K, np.int32),
+    )
+    _assert_answers_equal(hot, cold, [va, vb], req)
+
+
+def test_evolve_splits_dual_use_table():
+    """Evolving a plane so a union table gains a LAST JOIN splits it
+    live: the union-stream part stays partitioned (stored once — the S×
+    recovery), a narrow replicated join slice is rebuilt from the
+    partitioned rows, and everything stays bit-exact vs rebuild."""
+    amt = Col("amount")
+    w1h = range_window(3600, bucket=64)
+    va = FeatureView(
+        "va",
+        features={"out": w_sum(amt, w1h, union=("wires",))},
+        database=MULTITABLE_DB,
+    )
+    vb = FeatureView(
+        "vb",
+        features={
+            "wire_amt": last_join(Col("amount"), "wires", on="account")
+        },
+        database=MULTITABLE_DB,
+    )
+    S = 4
+    rng = np.random.default_rng(11)
+    tx, sec = make_tables(rng, n=120)
+    n_wires = len(sec["wires"]["ts"])
+
+    hot = ScenarioPlane([va], num_shards=S, **STORE_KW)
+    _warm(hot, tx, sec)
+    counts0 = hot.store.ring_row_counts()
+    assert counts0[("wires", "partitioned")].sum() == n_wires
+
+    report = hot.evolve([va, vb])
+    assert report.exact, report.notes
+
+    counts = hot.store.ring_row_counts()
+    # union part still stored ONCE (not S×), and spread across shards
+    assert counts[("wires", "partitioned")].sum() == n_wires
+    assert counts[("wires", "partitioned")].max() < n_wires
+    # replicated join slice: one narrow copy per shard
+    assert (counts[("wires", "replicated")] == n_wires).all()
+    join_plan = hot.layout.tables[hot.layout.join_ring("wires")]
+    assert len(join_plan.lanes) == 1  # the join-arg slice, not all lanes
+
+    cold = ScenarioPlane([va, vb], num_shards=S, **STORE_KW)
+    _warm(cold, tx, sec)
+    _assert_state_equal(hot, cold)
+    req = dict(
+        account=np.arange(K, dtype=np.int32),
+        ts=np.full(K, 50_000, np.int32),
+        amount=np.ones(K, np.float32),
+        merchant=np.zeros(K, np.int32),
+    )
+    _assert_answers_equal(hot, cold, [va, vb], req)
+
+
+def test_evolve_can_drop_a_scenario():
+    """Evolution also goes the other way: dropping a view removes its
+    lanes (a lane PERMUTE for the survivors, not just truncation) and its
+    program, and the shrunken plane still equals a fresh build + replay."""
+    amt = Col("amount")
+    w1h = range_window(3600, bucket=64)
+    va = FeatureView(
+        "va",
+        features={"big": w_mean(amt > 10.0, w1h), "cnt": w_count(amt, w1h)},
+        database=MULTITABLE_DB,
+    )
+    vb = FeatureView(
+        "vb", features={"dbl": w_sum(amt * 2.0, w1h)}, database=MULTITABLE_DB
+    )
+    rng = np.random.default_rng(23)
+    tx, sec = make_tables(rng, n=100)
+    # vb registered FIRST, so its derived lane precedes va's in the plan;
+    # dropping vb shifts va's lane position — the permute path
+    hot = ScenarioPlane([vb, va], num_shards=4, **STORE_KW)
+    _warm(hot, tx, sec, rounds=True)
+    report = hot.evolve([va])
+    assert report.exact, report.notes
+    assert hot.scenarios == ["va"]
+    with pytest.raises(KeyError, match="unknown scenario"):
+        hot.query("vb", {})
+
+    cold = ScenarioPlane([va], num_shards=4, **STORE_KW)
+    _warm(cold, tx, sec, rounds=True)
+    _assert_state_equal(hot, cold)
+    req = dict(
+        account=np.arange(K, dtype=np.int32),
+        ts=np.full(K, 50_000, np.int32),
+        amount=np.full(K, 15.0, np.float32),
+        merchant=np.zeros(K, np.int32),
+    )
+    _assert_answers_equal(hot, cold, [va], req)
+
+
+def test_unsupported_diffs_fail_loudly():
+    views = multi_scenario_views()
+    a = plan_layout(views, num_shards=4, raw_lanes=True, **STORE_KW)
+    b = plan_layout(views, num_shards=8, raw_lanes=True, **STORE_KW)
+    with pytest.raises(ValueError, match="shard count"):
+        diff_layouts(a, b)
+    kw = {
+        k: v
+        for k, v in STORE_KW.items()
+        if k not in ("bucket_size", "num_buckets")
+    }
+    c = plan_layout(
+        views, num_shards=4, raw_lanes=True, bucket_size=32,
+        num_buckets=1024, **kw,
+    )
+    with pytest.raises(ValueError, match="bucket_size"):
+        diff_layouts(a, c)
+    plane = ScenarioPlane(views[:1], num_shards=4, **STORE_KW)
+    with pytest.raises(ValueError, match="rebuild"):
+        plane.evolve(views[:1], bucket_size=32)
+
+
+def test_unsynthesizable_lane_needs_rebuild():
+    """A new lane containing hash nodes cannot be synthesized bit-exactly
+    from stored f32 columns — the migration must say so, not corrupt."""
+    amt = Col("amount")
+    w1h = range_window(3600, bucket=64)
+    va = FeatureView(
+        "va", features={"cnt": w_count(amt, w1h)}, database=MULTITABLE_DB
+    )
+    vb = FeatureView(
+        "vb",
+        features={"hashed": w_count(Hash(Col("merchant"), bits=8), w1h)},
+        database=MULTITABLE_DB,
+    )
+    plane = ScenarioPlane([va], **STORE_KW)
+    rng = np.random.default_rng(2)
+    tx, sec = make_tables(rng, n=60)
+    _warm(plane, tx, sec)
+    req = dict(
+        account=np.arange(K, dtype=np.int32),
+        ts=np.full(K, 50_000, np.int32),
+        amount=np.ones(K, np.float32),
+        merchant=np.zeros(K, np.int32),
+    )
+    before = {
+        f: np.asarray(v) for f, v in plane.query("va", req).items()
+    }
+    with pytest.raises(ValueError, match="rebuild"):
+        plane.evolve([va, vb])
+    # a refused migration is ATOMIC: the live plane keeps serving the old
+    # layout — same answers, ingest still works, scenario list unchanged
+    assert plane.scenarios == ["va"]
+    after = plane.query("va", req)
+    for f, v in before.items():
+        np.testing.assert_array_equal(v, np.asarray(after[f]))
+    plane.ingest(
+        dict(
+            account=np.array([1], np.int32),
+            ts=np.array([60_000], np.int32),
+            amount=np.array([5.0], np.float32),
+            merchant=np.array([0], np.int32),
+        )
+    )
+
+
+def test_horizon_exceeded_flags_inexact():
+    """Shrinking capacity while adding a derived lane loses aged-out rows
+    for the bucket-state rebuild: the migration must flag exact=False
+    (never silently report an exact migration it cannot guarantee)."""
+    amt = Col("amount")
+    w1h = range_window(512, bucket=64)
+    va = FeatureView(
+        "va", features={"cnt": w_count(amt, w1h)}, database=MULTITABLE_DB
+    )
+    vb = FeatureView(
+        "vb", features={"dbl": w_sum(amt * 2.0, w1h)}, database=MULTITABLE_DB
+    )
+    kw = dict(
+        num_keys=4, capacity=32, num_buckets=64, bucket_size=64,
+        secondary_num_keys={"merchants": NM},
+    )
+    plane = ScenarioPlane([va], **kw)
+    rng = np.random.default_rng(31)
+    n = 200  # 50 rows/key: cursor (50) > min(32, 16) -> rows aged out
+    rows = dict(
+        account=np.repeat(np.arange(4, dtype=np.int32), n // 4),
+        ts=np.tile(np.arange(n // 4, dtype=np.int32) * 10, 4),
+        amount=rng.gamma(2.0, 10.0, n).astype(np.float32),
+        merchant=np.zeros(n, np.int32),
+    )
+    plane.ingest(rows)
+    report = plane.evolve([va, vb], capacity=16)
+    assert not report.exact
+    assert any("aged out" in note for note in report.notes)
+
+
+def test_ttl_retention_policy():
+    """The layout's TTL knob caps every RANGE window's lookback — rows
+    older than the TTL are expired from answers on both query paths."""
+    amt = Col("amount")
+    view = FeatureView(
+        "ttl_v",
+        MULTITABLE_DB.primary,
+        {"s6h": w_sum(amt, range_window(21_600, bucket=64))},
+        database=MULTITABLE_DB,
+    )
+    short = FeatureView(
+        "short_v",
+        MULTITABLE_DB.primary,
+        {"s1h": w_sum(amt, range_window(3_600, bucket=64))},
+        database=MULTITABLE_DB,
+    )
+    rng = np.random.default_rng(5)
+    tx, _ = make_tables(rng, n=120)
+    ttl_store = OnlineFeatureStore(
+        view,
+        layout=plan_layout([view], ttl=3_600, **STORE_KW),
+    )
+    ref_store = OnlineFeatureStore(short, **STORE_KW)
+    srt = _bykey(tx, "account")
+    ttl_store.ingest(srt)
+    ref_store.ingest(srt)
+    req = dict(
+        account=np.arange(K, dtype=np.int32),
+        ts=np.full(K, 40_000, np.int32),
+        amount=np.ones(K, np.float32),
+        merchant=np.zeros(K, np.int32),
+    )
+    for mode in ("naive", "preagg"):
+        a = ttl_store.query(req, mode=mode)
+        b = ref_store.query(req, mode=mode)
+        np.testing.assert_array_equal(
+            np.asarray(a["s6h"]), np.asarray(b["s1h"]), err_msg=mode
+        )
+    # the TTL-clamped window still fits the bucket plan even when the raw
+    # window would not (the planner clamps the need the same way the
+    # store does)
+    plan_layout(
+        [view], num_keys=K, num_buckets=64, bucket_size=64, ttl=3_600
+    )
+    with pytest.raises(ValueError, match="s6h"):
+        plan_layout([view], num_keys=K, num_buckets=64, bucket_size=64)
+
+
+def test_ttl_applies_to_rows_windows_too():
+    """Retention is window-mode-independent: a ROWS window cannot count
+    TTL-expired rows either."""
+    from repro.core import rows_window
+
+    amt = Col("amount")
+    view = FeatureView(
+        "rows_ttl",
+        MULTITABLE_DB.primary,
+        {"c10": w_count(amt, rows_window(10))},
+        database=MULTITABLE_DB,
+    )
+    store = OnlineFeatureStore(
+        view, layout=plan_layout([view], ttl=100, **STORE_KW)
+    )
+    # 5 old rows (expired at query time) + 2 recent rows for key 0
+    store.ingest(
+        dict(
+            account=np.zeros(7, np.int32),
+            ts=np.array([10, 11, 12, 13, 14, 950, 960], np.int32),
+            amount=np.ones(7, np.float32),
+            merchant=np.zeros(7, np.int32),
+        )
+    )
+    req = dict(
+        account=np.array([0], np.int32),
+        ts=np.array([1_000], np.int32),
+        amount=np.ones(1, np.float32),
+        merchant=np.zeros(1, np.int32),
+    )
+    for mode in ("naive", "preagg"):
+        out = store.query(req, mode=mode)
+        # 2 recent stored rows + the request row; the 5 expired rows
+        # must not count even though the ROWS window has room for 10
+        assert float(out["c10"][0]) == 3.0, mode
+
+
+# ---------------------------------------------------------------------------
+# scenario-aware router edge cases (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_router_mixed_flush_with_empty_scenario():
+    """A mixed flush where one registered scenario got NO rows must answer
+    only the populated scenarios (no empty-batch device call, no key in
+    the result)."""
+    from repro.serve.router import ShardRouter
+    from repro.serve.service import BatchScheduler, FeatureService
+
+    views = multi_scenario_views()
+    svc = FeatureService.build_multi(
+        "p", views, sharded=True, num_shards=4, **STORE_KW
+    )
+    router = ShardRouter(svc, BatchScheduler(buckets=(1, 4, 16)), ingest=False)
+    for i in range(6):
+        router.submit(
+            dict(account=i % K, ts=100 + i, amount=1.0, merchant=0),
+            scenario=views[i % 2].name,  # only the first two scenarios
+        )
+    out = router.drain()
+    assert set(out) == {views[0].name, views[1].name}
+    assert views[2].name not in out
+    hists = router.scenario_shard_histogram()
+    assert int(hists[views[2].name].sum()) == 0
+    assert sum(int(h.sum()) for h in hists.values()) == 6
+
+
+def test_router_single_scenario_plane_via_build_multi():
+    """build_multi([one view]) is a legal multi-scenario deployment of
+    size 1: tags required, answers equal a dedicated store's."""
+    from repro.serve.router import ShardRouter
+    from repro.serve.service import FeatureService
+
+    views = multi_scenario_views()
+    rng = np.random.default_rng(19)
+    tx, sec = make_tables(rng, n=80)
+    svc = FeatureService.build_multi("solo", [views[0]], **STORE_KW)
+    single = OnlineFeatureStore(views[0], **STORE_KW)
+    for store in (svc.plane.store, single):
+        for t in store._sec_names:
+            kc = MULTITABLE_DB.table(t).key
+            store.ingest_table(t, _bykey(sec[t], kc))
+        store.ingest(_bykey(tx, "account"))
+    router = ShardRouter(svc, ingest=False)
+    with pytest.raises(ValueError, match="scenario"):
+        router.submit(dict(account=1, ts=50_000, amount=1.0, merchant=0))
+    reqs = [
+        dict(account=int(rng.integers(0, K)), ts=50_000 + i,
+             amount=float(rng.gamma(2.0, 10.0)), merchant=0)
+        for i in range(5)
+    ]
+    for r in reqs:
+        router.submit(r, scenario=views[0].name)
+    out = router.drain()[views[0].name]
+    batch = {c: np.asarray([r[c] for r in reqs]) for c in reqs[0]}
+    ref = single.query(batch, mode="preagg")
+    for f in views[0].features:
+        np.testing.assert_array_equal(np.asarray(ref[f]), out[f], err_msg=f)
+
+
+def test_router_histogram_after_hot_deploy():
+    """scenario_shard_histogram() grows a row for a scenario hot-deployed
+    AFTER the router was built, and counts its traffic."""
+    from repro.serve.router import ShardRouter
+    from repro.serve.service import FeatureService
+
+    views = multi_scenario_views()
+    svc = FeatureService.build_multi(
+        "p", views[:2], sharded=True, num_shards=4, **STORE_KW
+    )
+    router = ShardRouter(svc, ingest=False)
+    router.submit(
+        dict(account=3, ts=100, amount=1.0, merchant=0),
+        scenario=views[0].name,
+    )
+    router.drain()
+    with pytest.raises(KeyError, match="unknown scenario"):
+        router.submit(
+            dict(account=3, ts=101, amount=1.0, merchant=0),
+            scenario=views[2].name,
+        )
+    svc.hot_deploy(views[2])
+    for i in range(4):
+        router.submit(
+            dict(account=i, ts=200 + i, amount=1.0, merchant=i % NM),
+            scenario=views[2].name,
+        )
+    router.drain()
+    hists = router.scenario_shard_histogram()
+    assert views[2].name in hists
+    assert int(hists[views[2].name].sum()) == 4
+    assert int(sum(h.sum() for h in hists.values())) == 5
+    np.testing.assert_array_equal(
+        sum(hists.values()), router.shard_histogram()
+    )

@@ -79,6 +79,44 @@ def test_deploy_records():
     assert kinds.count("register_view") == 2
 
 
+def test_injectable_clock_makes_deploy_history_deterministic():
+    """FeatureRegistry takes an injectable clock (mirroring
+    BatchScheduler's from the serving layer) so deploy-history ordering
+    and timestamps are deterministic under test/replay."""
+    ticks = iter(range(100, 200))
+    reg = FeatureRegistry(clock=lambda: float(next(ticks)))
+    reg.register(make_view())
+    reg.register(
+        reg.get("fraud").evolve(
+            {"m": w_mean(Col("amount"), range_window(600))}
+        )
+    )
+    a = reg.deploy("svc_a", "fraud", version=1)
+    b = reg.deploy("svc_b", "fraud", version=2)
+    c = reg.deploy("svc_c", "fraud")
+    # stamps come from the injected clock, strictly ordered & reproducible
+    assert (a["deployed_at"], b["deployed_at"], c["deployed_at"]) == (
+        102.0, 103.0, 104.0,
+    )
+    assert [e["t"] for e in reg._events] == [100.0, 101.0, 102.0, 103.0, 104.0]
+    ordered = [d["service"] for d in reg.deployments("fraud")]
+    assert ordered == ["svc_a", "svc_b", "svc_c"]
+    # two registries on the same injected clock agree exactly
+    ticks2 = iter(range(100, 200))
+    reg2 = FeatureRegistry(clock=lambda: float(next(ticks2)))
+    reg2.register(make_view())
+    reg2.register(
+        reg2.get("fraud").evolve(
+            {"m": w_mean(Col("amount"), range_window(600))}
+        )
+    )
+    assert reg2.deploy("svc_a", "fraud", version=1) == a
+    # default clock still stamps real time
+    reg3 = FeatureRegistry()
+    reg3.register(make_view())
+    assert reg3.deploy("svc", "fraud")["deployed_at"] > 1e9
+
+
 def test_to_json_roundtrip():
     reg = FeatureRegistry()
     reg.register(make_view())

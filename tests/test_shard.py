@@ -248,9 +248,12 @@ def test_secondary_table_placement():
     assert store.state.sec[ia].ts.shape[:2] == (4, K)
 
 
-def test_dual_use_table_is_replicated():
-    """A table that is both a union stream and a join target must be
-    replicated (join keys are arbitrary request columns)."""
+def test_dual_use_table_is_split():
+    """A table that is both a union stream and a join target is SPLIT by
+    the layout planner: its union-stream rows are key-partitioned (stored
+    once, not S×) and only a narrow replicated join slice is copied per
+    shard — the dual-use partitioning that recovers the S× memory the old
+    replicate-everything policy paid."""
     db = Database(
         name="d",
         primary=TableSchema("tx", key="k", ts="ts", numeric=("a",)),
@@ -264,8 +267,57 @@ def test_dual_use_table_is_replicated():
         },
         database=db,
     )
-    store = ShardedOnlineStore(view, num_keys=8, num_shards=4)
-    assert store._sec_sharded == {"w": False}
+    S = 4
+    store = ShardedOnlineStore(view, num_keys=8, num_shards=S, capacity=64)
+    rings = store.layout.rings_of("w")
+    assert len(rings) == 2
+    union_p = store.layout.tables[store.layout.union_ring("w")]
+    join_p = store.layout.tables[store.layout.join_ring("w")]
+    assert union_p.partitioned and union_p.serves == ("union",)
+    assert not join_p.partitioned and join_p.serves == ("join",)
+    # partitioned union ring: ceil(K/S) keys per shard; join slice: all K
+    iu, ij = store.layout.union_ring("w"), store.layout.join_ring("w")
+    assert store.state.sec[iu].ts.shape[:2] == (S, 8 // S)
+    assert store.state.sec[ij].ts.shape[:2] == (S, 8)
+
+    # ingest N rows -> union part stores N rows TOTAL (spread over
+    # shards), join slice stores N per shard; answers match the single
+    # store bit-for-bit
+    rng = np.random.default_rng(8)
+    n = 48
+    rows = dict(
+        k=np.repeat(np.arange(8, dtype=np.int32), n // 8),
+        ts=np.tile(np.arange(n // 8, dtype=np.int32), 8),
+        a=rng.gamma(2.0, 5.0, n).astype(np.float32),
+    )
+    single = OnlineFeatureStore(view, num_keys=8, capacity=64)
+    for s in (single, store):
+        s.ingest_table("w", rows)
+        s.ingest(
+            {
+                "k": np.arange(8, dtype=np.int32),
+                "ts": np.full(8, 50, np.int32),
+                "a": np.ones(8, np.float32),
+            }
+        )
+    counts = store.ring_row_counts()
+    assert counts[("w", "partitioned")].sum() == n       # stored once
+    assert counts[("w", "partitioned")].max() < n        # and spread
+    assert (counts[("w", "replicated")] == n).all()      # join slice S×
+    # the table's total accounting: N partitioned + S×N replicated slice
+    assert store.ingest_row_counts()["w"] == n + S * n
+    req = {
+        "k": np.arange(8, dtype=np.int32),
+        "ts": np.full(8, 100, np.int32),
+        "a": np.ones(8, np.float32),
+    }
+    for mode in ("naive", "preagg"):
+        a = single.query(req, mode=mode)
+        b = store.query(req, mode=mode)
+        for f in view.features:
+            np.testing.assert_array_equal(
+                np.asarray(a[f]), np.asarray(b[f]), err_msg=f"{mode}:{f}"
+            )
 
 
 def test_out_of_range_key_rejected():
