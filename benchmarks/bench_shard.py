@@ -130,6 +130,162 @@ def run() -> None:
         )
 
     multi_scenario_section()
+    wire_to_wire_section()
+
+
+def wire_to_wire_section() -> None:
+    """Wire-to-wire latency breakdown per stage, host vs device.
+
+    Drives the full serving loop — submit -> scheduler -> router ->
+    sharded query -> ingest — under a fresh telemetry per shard count
+    {1, 4, 8}, single- and multi-scenario, and reports each stage from
+    the span histograms: queue wait, shard routing (host), device
+    compute (fenced), scatter-back (host), ingest-to-queryable, plus
+    padding waste.  ROADMAP item 1 wants the host/device split "measured,
+    not assumed" — this is the measurement.  The final snapshot is saved
+    to ``benchmarks/telemetry_snapshot.json`` and rendered by
+    ``python -m repro.obs.report``.
+    """
+    import json
+    import os
+
+    from repro.core import Col, FeatureView, rows_window, w_count, w_mean
+    from repro.obs import Telemetry, use_telemetry
+    from repro.obs.report import render_markdown
+    from repro.serve.router import ShardRouter
+    from repro.serve.service import BatchScheduler, FeatureService
+
+    n_req = common.scaled(768, 96)
+    view = fraud_view()
+    amt = Col("amount")
+    from repro.core import range_window, w_sum
+
+    w1 = range_window(600, bucket=64)
+    multi_views = [
+        FeatureView(
+            "w2w_fraud", view.schema,
+            {"s": w_sum(amt, w1), "c5": w_count(amt, rows_window(5))},
+        ),
+        FeatureView("w2w_risk", view.schema, {"m": w_mean(amt, w1)}),
+        FeatureView(
+            "w2w_velocity", view.schema, {"c8": w_count(amt, rows_window(8))},
+        ),
+    ]
+
+    def drive(svc, scenarios=None):
+        router = ShardRouter(
+            svc,
+            BatchScheduler(
+                buckets=(1, 4, 16, 64), max_batch=64, max_wait_us=2_000
+            ),
+        )
+        r = np.random.default_rng(3)
+        now = 0
+        for i in range(n_req):
+            row = dict(
+                card=int(r.integers(0, NUM_CARDS)),
+                ts=int(T_MAX + 1 + i),
+                amount=float(r.gamma(1.5, 60.0)),
+                mcc=int(r.integers(0, 32)),
+                device=int(r.integers(0, 8)),
+                geo=int(r.integers(0, 16)),
+            )
+            router.submit(
+                row, now_us=now,
+                scenario=(
+                    scenarios[i % len(scenarios)] if scenarios else None
+                ),
+            )
+            now += 150
+            router.pump(now_us=now)
+        router.drain(now_us=now)
+        svc.store.record_gauges()
+
+    def mean_ms(snap, metric, **match):
+        for s in snap["metrics"].get(metric, {"series": ()})["series"]:
+            if all(s["labels"].get(k) == v for k, v in match.items()):
+                c = s["count"]
+                return s["sum"] / c * 1e3 if c else 0.0
+        return 0.0
+
+    def pct_ms(snap, metric, p, **match):
+        for s in snap["metrics"].get(metric, {"series": ()})["series"]:
+            if all(s["labels"].get(k) == v for k, v in match.items()):
+                return s[p] * 1e3
+        return 0.0
+
+    final_snap = None
+    for flavour, shard_counts in (("single", (1, 4, 8)), ("multi", (1, 4, 8))):
+        for S in shard_counts:
+            tel = Telemetry(max_series=512)
+            with use_telemetry(tel):
+                if flavour == "single":
+                    svc = FeatureService.build(
+                        f"w2w_s{S}", view, num_keys=NUM_CARDS, sharded=True,
+                        num_shards=S, capacity=256, num_buckets=512,
+                        bucket_size=64,
+                    )
+                    drive(svc)
+                else:
+                    svc = FeatureService.build_multi(
+                        f"w2w_multi_s{S}", multi_views, num_keys=NUM_CARDS,
+                        sharded=True, num_shards=S, capacity=256,
+                        num_buckets=512, bucket_size=64,
+                    )
+                    drive(svc, scenarios=[v.name for v in multi_views])
+                snap = tel.snapshot()
+            tag = f"w2w_{flavour}_s{S}"
+            emit(
+                "shard", f"{tag}_req_p50_ms",
+                svc.stats.request_p50_ms, "ms",
+                "per-request: queue wait + batch wall",
+            )
+            emit(
+                "shard", f"{tag}_req_p95_ms",
+                svc.stats.request_p95_ms, "ms",
+            )
+            for stage, side in (
+                ("query.route", "host"),
+                ("query.compute", "device"),
+                ("query.scatter", "host"),
+                ("ingest", "device"),
+            ):
+                emit(
+                    "shard", f"{tag}_{stage.replace('query.', '')}_ms",
+                    pct_ms(snap, "span_seconds", "p50", name=stage), "ms",
+                    f"{side} (p50 per batch; first-trace compile lands "
+                    "in query_compile_seconds)",
+                )
+            emit(
+                "shard", f"{tag}_queue_wait_ms",
+                mean_ms(snap, "queue_wait_seconds"), "ms",
+                "host (mean per request)",
+            )
+            emit(
+                "shard", f"{tag}_fresh_p95_ms",
+                pct_ms(snap, "ingest_freshness_seconds", "p95",
+                       table="transactions"), "ms",
+                "ingest-to-queryable",
+            )
+            pad_shard = sum(
+                s["value"]
+                for s in snap["metrics"]["padding_rows_total"]["series"]
+            )
+            emit(
+                "shard", f"{tag}_padding_rows", pad_shard, "rows",
+                "scheduler + shard buckets",
+            )
+            final_snap = snap
+
+    out_path = os.path.join(
+        os.path.dirname(__file__), "telemetry_snapshot.json"
+    )
+    with open(out_path, "w") as f:
+        json.dump(final_snap, f, indent=2)
+    emit("shard", "telemetry_snapshot", 1, "file", out_path)
+    print(render_markdown(
+        final_snap, title="wire-to-wire (multi-scenario, 8 shards)"
+    ))
 
 
 def multi_scenario_section() -> None:

@@ -145,7 +145,39 @@ def main() -> None:
     for s, hist in router.scenario_shard_histogram().items():
         print(f"  {s:15s} {hist.tolist()}")
     print(f"aggregate: {svc.stats.requests} requests, "
-          f"p50={svc.stats.p50_ms:.2f}ms p99={svc.stats.p99_ms:.2f}ms")
+          f"p50={svc.stats.p50_ms:.2f}ms p99={svc.stats.p99_ms:.2f}ms "
+          f"(per-request p50={svc.stats.request_p50_ms:.2f}ms "
+          f"p99={svc.stats.request_p99_ms:.2f}ms)")
+
+    # -- the telemetry plane: freshness, compile time, migration spans -------
+    from repro.obs import get_telemetry
+
+    tel = get_telemetry()
+    snap = tel.snapshot()
+    print("\ntelemetry (one plane, every layer reports in):")
+    fresh = tel.metrics.metrics().get("ingest_freshness_seconds")
+    if fresh is not None:
+        for s in fresh.snapshot()["series"]:
+            print(
+                f"  freshness {s['labels']['table']:15s} "
+                f"p50={s['p50'] * 1e3:8.2f}ms  p95={s['p95'] * 1e3:8.2f}ms  "
+                f"({s['count']:.0f} rows ingest-to-queryable)"
+            )
+    comp = tel.metrics.metrics().get("query_compile_seconds")
+    if comp is not None:
+        for s in comp.snapshot()["series"]:
+            print(
+                f"  compile   {s['labels']['program']:15s} "
+                f"mode={s['labels']['mode']}: {s['count']:.0f} trace(s), "
+                f"{s['sum'] * 1e3:.1f}ms total"
+            )
+    for root in tel.tracer.roots():
+        if root.name == "hot_deploy":
+            print("  hot-deploy span tree (⏚ = device-fenced):")
+            print("    " + root.tree().replace("\n", "\n    "))
+    assert any(r.name == "hot_deploy" for r in tel.tracer.roots())
+    print(f"  snapshot: {len(snap['metrics'])} metrics — render with "
+          "`python -m repro.obs.report`")
 
 
 if __name__ == "__main__":

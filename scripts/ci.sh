@@ -12,6 +12,13 @@ if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
   export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ ${XLA_FLAGS}}"
 fi
 python -m pytest -x -q "$@"
+# telemetry gates: (1) the metrics-snapshot schema is an interface other
+# tooling parses — a full workload must emit exactly the golden catalog
+# (names / types / units / labels, span taxonomy, Prometheus + JSON
+# render); (2) instrumentation on the request hot path must stay within a
+# small multiplicative bound of the disabled-telemetry path
+python -m repro.obs.check schema
+python -m repro.obs.check overhead
 # migration-exactness gate: hot-deploying scenario #3 onto a warm sharded
 # plane must equal a cold rebuild + full replay bit-for-bit (the live
 # plane-evolution contract), and must not re-ingest carried tables

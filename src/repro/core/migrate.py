@@ -49,6 +49,7 @@ from repro.core.aggregates import LANES, NEG_INF, POS_INF, row_bitmap
 from repro.core.expr import Col, eval_rowlevel
 from repro.core.layout import LaneSlot, LayoutDiff, RingPlan
 from repro.core.online import OnlineState
+from repro.obs import get_telemetry
 
 __all__ = ["MigrationReport", "migrate_state"]
 
@@ -151,23 +152,27 @@ def _synth_lane(
             "it cannot be synthesized bit-exactly from stored f32 "
             "columns; rebuild the plane for this deployment"
         )
-    cols: Dict[str, jnp.ndarray] = {}
-    for name in _collect_cols(slot.expr):
-        ck = ("col", name)
-        if ck not in src_plan.lane_keys:
-            raise ValueError(
-                f"cannot hot-deploy: new lane {slot.key!r} of {ctx} needs "
-                f"raw column {name!r}, which the running layout does not "
-                "materialize (plan with raw_lanes=True to make the store "
-                "evolvable); rebuild the plane for this deployment"
-            )
-        cols[name] = jnp.asarray(vals_src[..., src_plan.lane_of(ck)])
-    if cols:
-        v = eval_rowlevel(slot.expr, cols, {}).astype(jnp.float32)
-        out = np.asarray(v)
-    else:  # literal-only expression
-        v = eval_rowlevel(slot.expr, {}, {}).astype(jnp.float32)
-        out = np.broadcast_to(np.asarray(v), vals_src.shape[:-1]).copy()
+    with get_telemetry().tracer.span(
+        "migrate.synthesize", table=ctx, lane=str(slot.key)
+    ):
+        cols: Dict[str, jnp.ndarray] = {}
+        for name in _collect_cols(slot.expr):
+            ck = ("col", name)
+            if ck not in src_plan.lane_keys:
+                raise ValueError(
+                    f"cannot hot-deploy: new lane {slot.key!r} of {ctx} "
+                    f"needs raw column {name!r}, which the running layout "
+                    "does not materialize (plan with raw_lanes=True to "
+                    "make the store evolvable); rebuild the plane for "
+                    "this deployment"
+                )
+            cols[name] = jnp.asarray(vals_src[..., src_plan.lane_of(ck)])
+        if cols:
+            v = eval_rowlevel(slot.expr, cols, {}).astype(jnp.float32)
+            out = np.asarray(v)
+        else:  # literal-only expression
+            v = eval_rowlevel(slot.expr, {}, {}).astype(jnp.float32)
+            out = np.broadcast_to(np.asarray(v), vals_src.shape[:-1]).copy()
     report.synthesized_lanes.append(f"{ctx}:{slot.key!r}")
     return out
 
@@ -206,16 +211,19 @@ def _recap(
     S, K, C_old = ts.shape
     if C_new == C_old:
         return ts, vals
-    r = np.minimum(cur, C_old)
-    rr = np.minimum(r, C_new).astype(np.int64)
-    new_ts = np.full((S, K, C_new), _TS_MIN, np.int32)
-    new_vals = np.zeros((S, K, C_new, vals.shape[-1]), np.float32)
-    top = int(rr.max()) if rr.size else 0
-    for j in range(top):
-        si, ki = np.nonzero(j < rr)
-        a = cur[si, ki].astype(np.int64) - rr[si, ki] + j
-        new_ts[si, ki, a % C_new] = ts[si, ki, a % C_old]
-        new_vals[si, ki, a % C_new] = vals[si, ki, a % C_old]
+    with get_telemetry().tracer.span(
+        "migrate.relay", table=ctx, c_old=C_old, c_new=C_new
+    ):
+        r = np.minimum(cur, C_old)
+        rr = np.minimum(r, C_new).astype(np.int64)
+        new_ts = np.full((S, K, C_new), _TS_MIN, np.int32)
+        new_vals = np.zeros((S, K, C_new, vals.shape[-1]), np.float32)
+        top = int(rr.max()) if rr.size else 0
+        for j in range(top):
+            si, ki = np.nonzero(j < rr)
+            a = cur[si, ki].astype(np.int64) - rr[si, ki] + j
+            new_ts[si, ki, a % C_new] = ts[si, ki, a % C_old]
+            new_vals[si, ki, a % C_new] = vals[si, ki, a % C_old]
     if C_new > C_old and np.any(cur > C_old):
         report.exact = False
         report.notes.append(
@@ -234,13 +242,16 @@ def _relane_ring(
 ) -> st.RingStore:
     """Same key domain & placement: permute/append/synthesize lanes, then
     re-lay capacity if it changed."""
-    ts, vals, cur = _host_ring(ring, sharded)
-    ctx = dst_plan.table
-    written = _written_mask(cur, src_plan.capacity)
-    vals = _map_lanes(src_plan, dst_plan, vals, written, report, ctx)
-    ts, vals = _recap(ts, vals, cur, dst_plan.capacity, report, ctx)
-    report.migrated.append(dst_plan.describe())
-    return _mk_ring(ts, vals, cur, sharded)
+    with get_telemetry().tracer.span(
+        "migrate.relane", table=dst_plan.table
+    ):
+        ts, vals, cur = _host_ring(ring, sharded)
+        ctx = dst_plan.table
+        written = _written_mask(cur, src_plan.capacity)
+        vals = _map_lanes(src_plan, dst_plan, vals, written, report, ctx)
+        ts, vals = _recap(ts, vals, cur, dst_plan.capacity, report, ctx)
+        report.migrated.append(dst_plan.describe())
+        return _mk_ring(ts, vals, cur, sharded)
 
 
 def _decode_streams(
@@ -293,6 +304,23 @@ def _reroute_ring(
     """Placement change (partitioned <-> replicated, e.g. building a
     dual-use table's replicated join slice from its partitioned union
     ring): decode per-key row streams, re-encode under the new plan."""
+    with get_telemetry().tracer.span(
+        "migrate.reroute", table=dst_plan.table,
+        partitioned=dst_plan.partitioned,
+    ):
+        return _reroute_ring_impl(
+            src_plan, dst_plan, ring, store, sharded, report
+        )
+
+
+def _reroute_ring_impl(
+    src_plan: RingPlan,
+    dst_plan: RingPlan,
+    ring: st.RingStore,
+    store,
+    sharded: bool,
+    report: MigrationReport,
+) -> st.RingStore:
     S = store.num_shards if sharded else 1
     streams = _decode_streams(
         src_plan, _host_ring(ring, sharded), store, report
@@ -522,55 +550,66 @@ def migrate_state(
     sharded = diff.new.num_shards is not None
     S = diff.new.num_shards or 1
     report = MigrationReport(diff_summary=diff.summary())
+    tracer = get_telemetry().tracer
 
-    # -- primary ring + bucket store ---------------------------------------
-    if diff.primary_carried:
-        ring = old_state.ring
-        report.carried.append(diff.new.primary.describe())
-    else:
-        ring = _relane_ring(
-            diff.old.primary, diff.new.primary, old_state.ring,
-            sharded, report,
-        )
-    if diff.bucket_carried:
-        bagg = old_state.bagg
-        report.carried.append(
-            f"bucket[{diff.new.bucket.num_buckets} x "
-            f"{diff.new.bucket.bucket_size}]"
-        )
-    else:
-        bagg = _migrate_bucket(diff, old_state.bagg, ring, sharded, report)
-
-    # -- secondary rings ----------------------------------------------------
-    sec: List[st.RingStore] = []
-    for i, plan in enumerate(diff.new.tables):
-        src = diff.ring_sources[i]
-        if src is None:
-            sec.append(_fresh_ring(plan, sharded, S))
-            report.fresh.append(plan.describe())
-            continue
-        src_plan = diff.old.tables[src]
-        if diff.carried[i]:
-            sec.append(old_state.sec[src])
-            report.carried.append(plan.describe())
-        elif (
-            src_plan.partitioned == plan.partitioned
-            and src_plan.ring_keys == plan.ring_keys
-        ):
-            sec.append(
-                _relane_ring(
-                    src_plan, plan, old_state.sec[src], sharded, report
-                )
+    with tracer.span("migrate", tables=len(diff.new.tables)):
+        # -- primary ring + bucket store -----------------------------------
+        if diff.primary_carried:
+            with tracer.span(
+                "migrate.carry", table=diff.new.primary.table
+            ):
+                ring = old_state.ring
+            report.carried.append(diff.new.primary.describe())
+        else:
+            ring = _relane_ring(
+                diff.old.primary, diff.new.primary, old_state.ring,
+                sharded, report,
+            )
+        if diff.bucket_carried:
+            with tracer.span("migrate.carry", table="bucket"):
+                bagg = old_state.bagg
+            report.carried.append(
+                f"bucket[{diff.new.bucket.num_buckets} x "
+                f"{diff.new.bucket.bucket_size}]"
             )
         else:
-            sec.append(
-                _reroute_ring(
-                    src_plan, plan, old_state.sec[src], store, sharded,
-                    report,
+            with tracer.span("migrate.bucket", table=diff.new.primary.table):
+                bagg = _migrate_bucket(
+                    diff, old_state.bagg, ring, sharded, report
                 )
-            )
-    for i in diff.dropped:
-        report.dropped.append(diff.old.tables[i].describe())
+
+        # -- secondary rings ------------------------------------------------
+        sec: List[st.RingStore] = []
+        for i, plan in enumerate(diff.new.tables):
+            src = diff.ring_sources[i]
+            if src is None:
+                with tracer.span("migrate.fresh", table=plan.table):
+                    sec.append(_fresh_ring(plan, sharded, S))
+                report.fresh.append(plan.describe())
+                continue
+            src_plan = diff.old.tables[src]
+            if diff.carried[i]:
+                with tracer.span("migrate.carry", table=plan.table):
+                    sec.append(old_state.sec[src])
+                report.carried.append(plan.describe())
+            elif (
+                src_plan.partitioned == plan.partitioned
+                and src_plan.ring_keys == plan.ring_keys
+            ):
+                sec.append(
+                    _relane_ring(
+                        src_plan, plan, old_state.sec[src], sharded, report
+                    )
+                )
+            else:
+                sec.append(
+                    _reroute_ring(
+                        src_plan, plan, old_state.sec[src], store, sharded,
+                        report,
+                    )
+                )
+        for i in diff.dropped:
+            report.dropped.append(diff.old.tables[i].describe())
 
     return (
         OnlineState(ring=ring, bagg=bagg, sec=tuple(sec)),

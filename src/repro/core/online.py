@@ -81,6 +81,7 @@ from repro.core.expr import (
     eval_rowlevel,
 )
 from repro.core.layout import StoreLayout, plan_layout
+from repro.obs import get_telemetry
 
 __all__ = ["OnlineState", "OnlineFeatureStore", "QueryProgram"]
 
@@ -271,6 +272,10 @@ class OnlineFeatureStore:
         """(Re)wrap the pure kernels in jit.  Fresh wrappers on every
         layout adoption so stale traces (same shapes, different lane plan)
         can never answer a query."""
+        # compile-time capture restarts with the wrappers: after a layout
+        # adoption every (program, mode, shape-bucket) re-traces, and that
+        # recompilation cost should be visible in query_compile_seconds
+        self._seen_traces: set = set()
         self._ingest_fn = jax.jit(self._ingest_pure, donate_argnums=(0,))
         self._sec_ingest_fns = {
             i: jax.jit(
@@ -306,7 +311,9 @@ class OnlineFeatureStore:
         from repro.core import migrate
         from repro.core.layout import diff_layouts
 
-        diff = diff_layouts(self.layout, layout)
+        tracer = get_telemetry().tracer
+        with tracer.span("migrate.diff"):
+            diff = diff_layouts(self.layout, layout)
         # migrate FIRST, against the still-untouched store: a refused
         # migration (unsynthesizable lane, unsupported diff) must leave
         # the live plane exactly as it was — still serving.  The routing
@@ -314,7 +321,9 @@ class OnlineFeatureStore:
         # invariant across any diff diff_layouts accepts.
         state, report = migrate.migrate_state(diff, self.state, self)
         self._apply_layout(view, layout)
-        self.state = self._place_state(state)
+        with tracer.span("migrate.place", kind="device") as sp:
+            self.state = self._place_state(state)
+            sp.fence(self.state.ring.cursor)
         self._build_fns()
         return report
 
@@ -360,7 +369,15 @@ class OnlineFeatureStore:
         new bucket id per scatter).  Historical backfills can span the
         whole table's time range, so oversized batches are split here on
         bucket boundaries — each chunk stays one fused scatter.
+
+        The whole batch is timed entry-to-queryable: the freshness clock
+        stops only after a fence on the new state's ring cursor, i.e. once
+        a concurrent ``query`` would actually see the rows — the paper's
+        "millisecond-level feature update" metric
+        (``ingest_freshness_seconds{table=}``, weighted per row).
         """
+        tel = get_telemetry()
+        t0 = tel.clock.now()
         key = jnp.asarray(columns[self.schema.key], jnp.int32)
         ts = jnp.asarray(columns[self.schema.ts], jnp.int32)
         lanes = self._lanes(columns)
@@ -370,19 +387,41 @@ class OnlineFeatureStore:
         ts_h = _np.asarray(ts)
         if ts_h.size == 0:
             return
-        b = ts_h // self.bucket_size
-        span_ok = (b.max() - b.min()) < self.num_buckets - 1
-        if span_ok:
-            self._ingest_padded(key, ts, lanes)
-            return
-        # split into chunks each spanning < num_buckets buckets; rows are
-        # (key, ts)-sorted, so chunk by absolute-bucket epoch and re-sort
-        # each chunk by (key, ts).
-        epoch = b // (self.num_buckets - 1)
-        for e in _np.unique(epoch):
-            idx = _np.nonzero(epoch == e)[0]
-            order = idx[_np.lexsort((ts_h[idx], _np.asarray(key)[idx]))]
-            self._ingest_padded(key[order], ts[order], lanes[order])
+        with tel.tracer.span(
+            "ingest", kind="device", table=self.schema.name,
+            rows=int(ts_h.size),
+        ) as sp:
+            b = ts_h // self.bucket_size
+            span_ok = (b.max() - b.min()) < self.num_buckets - 1
+            if span_ok:
+                self._ingest_padded(key, ts, lanes)
+            else:
+                # split into chunks each spanning < num_buckets buckets;
+                # rows are (key, ts)-sorted, so chunk by absolute-bucket
+                # epoch and re-sort each chunk by (key, ts).
+                epoch = b // (self.num_buckets - 1)
+                for e in _np.unique(epoch):
+                    idx = _np.nonzero(epoch == e)[0]
+                    order = idx[
+                        _np.lexsort((ts_h[idx], _np.asarray(key)[idx]))
+                    ]
+                    self._ingest_padded(key[order], ts[order], lanes[order])
+            sp.fence(self.state.ring.cursor)
+        self._note_freshness(tel, self.schema.name, int(ts_h.size), t0)
+
+    def _note_freshness(self, tel, table: str, n_rows: int, t0: float) -> None:
+        """Record one ingest batch's entry-to-queryable freshness, counted
+        once per row (call after fencing the new state)."""
+        dt = tel.clock.now() - t0
+        m = tel.metrics
+        m.histogram(
+            "ingest_freshness_seconds",
+            "ingest-call-to-queryable delay per row", "s",
+            labels=("table",),
+        ).observe(dt, n=n_rows, table=table)
+        m.counter(
+            "ingest_rows_total", "rows ingested", "1", labels=("table",),
+        ).inc(n_rows, table=table)
 
     @staticmethod
     def _pad_batch(key, ts, lanes, sentinel: int):
@@ -429,25 +468,37 @@ class OnlineFeatureStore:
             raise KeyError(
                 f"view {self.view.name!r} does not reference table {table!r}"
             )
+        tel = get_telemetry()
+        t0 = tel.clock.now()
         sch = self._sec_schemas[table]
         key = jnp.asarray(columns[sch.key], jnp.int32)
         n = int(key.shape[0])
         if n == 0:
             return
         ts = jnp.asarray(columns[sch.ts], jnp.int32)
-        for i in self.layout.rings_of(table):
-            exprs = self._ring_lane_exprs[i]
-            if exprs:
-                lanes = jnp.stack(
-                    [
-                        eval_rowlevel(e, columns, {}).astype(jnp.float32)
-                        for e in exprs
-                    ],
-                    axis=-1,
+        with tel.tracer.span(
+            "ingest", kind="device", table=table, rows=n
+        ) as sp:
+            for i in self.layout.rings_of(table):
+                exprs = self._ring_lane_exprs[i]
+                if exprs:
+                    lanes = jnp.stack(
+                        [
+                            eval_rowlevel(e, columns, {}).astype(jnp.float32)
+                            for e in exprs
+                        ],
+                        axis=-1,
+                    )
+                else:
+                    lanes = jnp.zeros((n, 1), jnp.float32)
+                self._sec_ring_ingest_padded(i, key, ts, lanes)
+            sp.fence(
+                tuple(
+                    self.state.sec[i].cursor
+                    for i in self.layout.rings_of(table)
                 )
-            else:
-                lanes = jnp.zeros((n, 1), jnp.float32)
-            self._sec_ring_ingest_padded(i, key, ts, lanes)
+            )
+        self._note_freshness(tel, table, n, t0)
 
     def _sec_ring_ingest_padded(self, index: int, key, ts, lanes) -> None:
         key, ts, lanes = self._pad_batch(
@@ -816,6 +867,55 @@ class OnlineFeatureStore:
             out[k] = np.asarray(self.state.sec[i].cursor).sum(-1)
         return out
 
+    def record_gauges(self) -> None:
+        """Publish pull-style state gauges into the installed telemetry:
+        per-ring occupancy (stored rows / capacity), capacity-evicted row
+        totals, and — where the layout sets a TTL — how many stored rows
+        are already past it (logically expired, serving no window).
+
+        Call at scrape/snapshot time; gauges reflect the store *now*.
+        """
+        tel = get_telemetry()
+        m = tel.metrics
+
+        def _ring(ring, plan) -> None:
+            table = plan.table
+            placement = "partitioned" if plan.partitioned else "replicated"
+            cur = np.asarray(ring.cursor)          # (..., K)
+            C = int(ring.ts.shape[-1])
+            stored = np.minimum(cur, C)
+            cap = cur.size * C
+            m.gauge(
+                "ring_occupancy_ratio", "stored rows / ring capacity", "1",
+                labels=("table", "placement"),
+            ).set(float(stored.sum()) / max(cap, 1),
+                  table=table, placement=placement)
+            m.gauge(
+                "ring_evicted_rows_total",
+                "rows overwritten by ring wraparound (capacity eviction)",
+                "1", labels=("table", "placement"),
+            ).set(float(np.maximum(cur - C, 0).sum()),
+                  table=table, placement=placement)
+            if plan.ttl:
+                ts = np.asarray(ring.ts)           # (..., K, C)
+                valid = np.arange(C) < cur[..., None]
+                if valid.any():
+                    now_ts = int(ts[valid].max())
+                    expired = int(
+                        (valid & (ts < now_ts - int(plan.ttl))).sum()
+                    )
+                else:
+                    expired = 0
+                m.gauge(
+                    "ring_ttl_expired_rows",
+                    "stored rows older than the layout TTL", "1",
+                    labels=("table",),
+                ).set(float(expired), table=table)
+
+        _ring(self.state.ring, self.layout.primary)
+        for i, p in enumerate(self._ring_plans):
+            _ring(self.state.sec[i], p)
+
     def query(
         self,
         columns: Dict[str, jnp.ndarray],
@@ -831,6 +931,7 @@ class OnlineFeatureStore:
         compiled by :meth:`compile_program` instead of this store's full
         view — the multi-scenario serving path.
         """
+        tel = get_telemetry()
         key, ts_q, req_lanes, join_keys = self._request_arrays(
             columns, program
         )
@@ -839,23 +940,76 @@ class OnlineFeatureStore:
         # caching: one executable per bucket, not per request size)
         q = int(key.shape[0])
         m = max(16, 1 << (q - 1).bit_length())
-        if m != q:
-            pad = m - q
-            key_p = jnp.concatenate([key, jnp.broadcast_to(key[-1], (pad,))])
-            ts_p = jnp.concatenate([ts_q, jnp.broadcast_to(ts_q[-1], (pad,))])
-            lanes_p = jnp.concatenate(
-                [req_lanes,
-                 jnp.broadcast_to(req_lanes[-1:], (pad, req_lanes.shape[1]))]
-            )
-            jk_p = tuple(
-                jnp.concatenate([j, jnp.broadcast_to(j[-1], (pad,))])
-                for j in join_keys
-            )
-            vals = fn(self.state, key_p, ts_p, lanes_p, jk_p, key_p)
-            vals = tuple(v[:q] for v in vals)
-        else:
-            vals = fn(self.state, key, ts_q, req_lanes, join_keys, key)
+        t_call = tel.clock.now()
+        with tel.tracer.span(
+            "query.compute", kind="device", mode=mode,
+            program=program.view.name if program is not None else "",
+            rows=q, padded=m,
+        ) as sp:
+            if m != q:
+                pad = m - q
+                key_p = jnp.concatenate(
+                    [key, jnp.broadcast_to(key[-1], (pad,))]
+                )
+                ts_p = jnp.concatenate(
+                    [ts_q, jnp.broadcast_to(ts_q[-1], (pad,))]
+                )
+                lanes_p = jnp.concatenate(
+                    [req_lanes,
+                     jnp.broadcast_to(req_lanes[-1:],
+                                      (pad, req_lanes.shape[1]))]
+                )
+                jk_p = tuple(
+                    jnp.concatenate([j, jnp.broadcast_to(j[-1], (pad,))])
+                    for j in join_keys
+                )
+                vals = fn(self.state, key_p, ts_p, lanes_p, jk_p, key_p)
+                vals = tuple(v[:q] for v in vals)
+            else:
+                vals = fn(self.state, key, ts_q, req_lanes, join_keys, key)
+            vals = sp.fence(vals)
+        self._note_query(tel, mode, program, m, t_call)
         return self._finish_query(columns, vals, program)
+
+    def _note_query(self, tel, mode, program, padded_rows, t_call) -> None:
+        """Query-side metrics: first-trace compile capture per
+        (program, mode, shape bucket) and preagg hit/fallback counters."""
+        name = program.view.name if program is not None else self.view.name
+        trace_key = (name, mode, int(padded_rows))
+        if trace_key not in self._seen_traces:
+            self._seen_traces.add(trace_key)
+            # first call at this shape = trace + XLA compile (+ one
+            # execution, negligible next to compilation at smoke sizes)
+            tel.metrics.histogram(
+                "query_compile_seconds",
+                "first-trace wall time per (program, mode, shape bucket)",
+                "s", labels=("program", "mode"),
+            ).observe(
+                tel.clock.now() - t_call, program=name, mode=mode
+            )
+        wagg_order = (
+            self._wagg_order if program is None else program.wagg_order
+        )
+        hits = tel.metrics.counter(
+            "preagg_hits_total",
+            "window aggs answered from bucket pre-aggregates", "1",
+            labels=("agg",),
+        )
+        falls = tel.metrics.counter(
+            "preagg_fallback_total",
+            "window aggs falling back to the raw ring fold", "1",
+            labels=("agg",),
+        )
+        for wk in wagg_order:
+            wa = self.waggs[wk]
+            # host-side mirror of _query_pure's trace-time use_buckets
+            hit = (
+                mode != "naive"
+                and agg_spec(wa.agg).bucket_composable
+                and wa.window.mode == "range"
+                and (not wa.union or self._union_preagg.get(wk, False))
+            )
+            (hits if hit else falls).inc(agg=wa.agg.value)
 
 
 class QueryProgram:

@@ -176,11 +176,15 @@ class ScenarioPlane:
         cold rebuild + full replay (``report.exact``), which the
         hot-deploy gate asserts.
         """
+        from repro.obs import get_telemetry
+
+        tracer = get_telemetry().tracer
         new_views = list(new_views)
         kwargs = dict(self._plan_kwargs)
         kwargs.update(plan_overrides)
-        new_layout = plan_layout(new_views, raw_lanes=True, **kwargs)
-        new_merged = merge_views(new_views, name=self.merged.name)
+        with tracer.span("hot_deploy.plan", views=len(new_views)):
+            new_layout = plan_layout(new_views, raw_lanes=True, **kwargs)
+            new_merged = merge_views(new_views, name=self.merged.name)
         report = self.store.adopt_layout(new_merged, new_layout)
         old_views = self.views
         self._plan_kwargs = kwargs
@@ -195,10 +199,11 @@ class ScenarioPlane:
             if self.views.get(n) is old_views.get(n)
         }
         self.programs = kept
-        for v in new_views:
-            if v.name not in self.programs:
-                self.programs[v.name] = self.store.compile_program(v)
-                report.new_programs.append(v.name)
+        with tracer.span("hot_deploy.compile"):
+            for v in new_views:
+                if v.name not in self.programs:
+                    self.programs[v.name] = self.store.compile_program(v)
+                    report.new_programs.append(v.name)
         return report
 
     # -- introspection ---------------------------------------------------------

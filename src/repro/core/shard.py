@@ -385,40 +385,78 @@ class ShardedOnlineStore(OnlineFeatureStore):
         uploaded — no device round-trip on the latency-critical path.
         ``program`` serves one scenario's compiled sub-view against the
         shared sharded state (see :meth:`OnlineFeatureStore.compile_program`).
+
+        The three stages are traced separately — ``query.route`` (host:
+        shard bucketing, padding, upload), ``query.compute`` (device,
+        fenced), ``query.scatter`` (host: answers back to request order) —
+        so the wire-to-wire breakdown attributes host vs device time per
+        stage instead of one opaque wall number.
         """
+        from repro.obs import get_telemetry
+
+        tel = get_telemetry()
         self._validate_join_cols(columns, program)
         key_h = np.asarray(columns[self.schema.key]).astype(
             np.int32, copy=False
         )
-        ts_h = np.asarray(columns[self.schema.ts]).astype(np.int32, copy=False)
-        lane_exprs = None if program is None else program.lane_exprs
-        join_cols = self._join_cols if program is None else program.join_cols
-        lanes_h = np.asarray(self._lanes(columns, lane_exprs))
         q = int(key_h.shape[0])
-        shard, local = self._route_ids(key_h)
-        plan = build_route(shard, self.num_shards, min_bucket=16)
-        gkey_r = self._route_rows(plan, key_h, pad="repeat")
-        fn = self._query_fn(mode, program)
-        vals = fn(
-            self.state,
-            self._put(self._route_rows(plan, local, pad="repeat")),
-            self._put(self._route_rows(plan, ts_h, pad="repeat")),
-            self._put(self._route_rows(plan, lanes_h, pad="repeat")),
-            tuple(
-                self._put(
-                    self._route_rows(
-                        plan,
-                        np.asarray(columns[c]).astype(np.int32, copy=False),
-                        pad="repeat",
+        pname = program.view.name if program is not None else ""
+        with tel.tracer.span(
+            "query.route", mode=mode, program=pname, rows=q
+        ):
+            ts_h = np.asarray(columns[self.schema.ts]).astype(
+                np.int32, copy=False
+            )
+            lane_exprs = None if program is None else program.lane_exprs
+            join_cols = (
+                self._join_cols if program is None else program.join_cols
+            )
+            lanes_h = np.asarray(self._lanes(columns, lane_exprs))
+            shard, local = self._route_ids(key_h)
+            plan = build_route(shard, self.num_shards, min_bucket=16)
+            gkey_r = self._route_rows(plan, key_h, pad="repeat")
+            args = (
+                self._put(self._route_rows(plan, local, pad="repeat")),
+                self._put(self._route_rows(plan, ts_h, pad="repeat")),
+                self._put(self._route_rows(plan, lanes_h, pad="repeat")),
+                tuple(
+                    self._put(
+                        self._route_rows(
+                            plan,
+                            np.asarray(columns[c]).astype(
+                                np.int32, copy=False
+                            ),
+                            pad="repeat",
+                        )
                     )
-                )
-                for c in join_cols
-            ),
-            self._put(gkey_r),                              # global key
-        )
-        return self._finish_query(
-            columns, self._scatter_back(plan, vals, q), program
-        )
+                    for c in join_cols
+                ),
+                self._put(gkey_r),                          # global key
+            )
+        pad_rows = self.num_shards * plan.bucket - q
+        m = tel.metrics
+        m.counter(
+            "padding_rows_total", "filler rows added to reach shape bucket",
+            "1", labels=("layer",),
+        ).inc(pad_rows, layer="shard")
+        m.gauge(
+            "padding_waste_ratio", "filler rows / bucket rows, last batch",
+            "1", labels=("layer",),
+        ).set(pad_rows / max(self.num_shards * plan.bucket, 1), layer="shard")
+        fn = self._query_fn(mode, program)
+        t_call = tel.clock.now()
+        with tel.tracer.span(
+            "query.compute", kind="device", mode=mode, program=pname,
+            rows=q, padded=self.num_shards * plan.bucket,
+        ) as sp:
+            vals = fn(self.state, *args)
+            vals = sp.fence(vals)
+        self._note_query(tel, mode, program, plan.bucket, t_call)
+        with tel.tracer.span("query.scatter", rows=q):
+            out = self._finish_query(
+                columns, self._scatter_back(plan, vals, q), program
+            )
+        return out
 
     # -- observability ---------------------------------------------------------
 

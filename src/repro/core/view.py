@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.expr import (
@@ -330,18 +329,32 @@ class FeatureRegistry:
     in-process registry with JSON export so the launcher/checkpointer can
     persist it alongside model state.
 
-    ``clock`` is injectable (seconds since epoch, like ``time.time``) —
-    mirroring ``BatchScheduler``'s injectable clock — so deploy-history
-    ordering and timestamps are deterministic under test/replay; real
-    callers omit it and get wall-clock stamps.
+    ``clock`` is injectable — an ``repro.obs.Clock`` (its wall ``time()``
+    is used), or a legacy bare callable returning epoch seconds — so
+    deploy-history ordering and timestamps are deterministic under
+    test/replay.  Real callers omit it and the registry follows the
+    *plane* clock, ``repro.obs.get_telemetry().clock``, resolved lazily at
+    each stamp: installing one ``FakeClock`` via ``use_telemetry`` drives
+    the registry, every ``BatchScheduler``, and every span together.
     """
 
-    def __init__(self, clock: Optional[Callable[[], float]] = None) -> None:
+    def __init__(self, clock=None) -> None:
         self._views: Dict[Tuple[str, int], FeatureView] = {}
         self._latest: Dict[str, int] = {}
         self._services: Dict[str, Dict] = {}
         self._events: List[Dict] = []
-        self._clock: Callable[[], float] = clock if clock is not None else time.time
+        self._clock_src = clock
+
+    def _clock(self) -> float:
+        """Wall-epoch stamp from whichever clock governs this registry."""
+        src = self._clock_src
+        if src is None:
+            from repro.obs import get_telemetry
+
+            return get_telemetry().clock.time()
+        if hasattr(src, "time"):
+            return src.time()       # an obs.Clock (or compatible)
+        return src()                # legacy bare callable
 
     # -- views ---------------------------------------------------------------
 

@@ -39,6 +39,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import get_telemetry
 from repro.serve.service import (
     BatchScheduler,
     FeatureService,
@@ -128,7 +129,26 @@ class ShardRouter:
             )
         self.scheduler.submit(row, now_us=now_us)
 
-    def _count_shards(self, keys: np.ndarray, scenario: Optional[str]) -> None:
+    def _count_shards(
+        self,
+        keys: np.ndarray,
+        valid: Optional[np.ndarray],
+        scenario: Optional[str],
+    ) -> None:
+        """Fold one batch's keys into the skew histograms.
+
+        The histograms count *requests*, never padding: filler rows repeat
+        a real row's key, so counting them would inflate exactly the shard
+        that real row routed to and skew reads as worse than it is.
+        Filtering is structural — every call site hands the batch's
+        ``__valid__`` mask (or None for an all-real batch) and the padded
+        rows are dropped here; the plane's padding cost is reported
+        explicitly by the ``padding_rows_total`` / ``padding_waste_ratio``
+        telemetry instead of leaking into occupancy.
+        """
+        keys = np.asarray(keys)
+        if valid is not None:
+            keys = keys[np.asarray(valid, bool)[: len(keys)]]
         store = self.service.store
         if hasattr(store, "shard_of"):
             hist = np.bincount(
@@ -140,6 +160,14 @@ class ShardRouter:
         self.shard_requests += hist
         if scenario is not None:
             self.scenario_shard_requests[scenario] += hist
+        c = get_telemetry().metrics.counter(
+            "shard_dispatch_rows_total",
+            "request rows dispatched per (scenario, shard)", "1",
+            labels=("scenario", "shard"),
+            max_series=1024,
+        )
+        for sh in np.nonzero(hist)[0]:
+            c.inc(int(hist[sh]), scenario=scenario or "", shard=str(int(sh)))
 
     def pump(
         self, now_us: Optional[int] = None, flush: bool = False
@@ -150,10 +178,18 @@ class ShardRouter:
         if batch is None:
             return None
         valid = np.asarray(batch["__valid__"], bool)
+        get_telemetry().metrics.gauge(
+            "batch_occupancy_ratio",
+            "real rows / padded batch rows, last batch", "1",
+            labels=("service",),
+        ).set(
+            float(valid.sum()) / max(len(valid), 1),
+            service=self.service.name,
+        )
         key_col = self.service.view.schema.key
         if self.scenarios is None:
             out = self.service.request(batch, ingest=self.ingest)
-            self._count_shards(np.asarray(batch[key_col])[valid], None)
+            self._count_shards(np.asarray(batch[key_col]), valid, None)
             return {k: np.asarray(v)[valid] for k, v in out.items()}
         # multi-scenario: partition the popped batch by scenario tag (in
         # submission order within each group) and run each group through
@@ -170,7 +206,8 @@ class ShardRouter:
                 if c not in ("__valid__", _SCENARIO_COL)
             }
             out = self.service.request(rows_s, ingest=self.ingest, scenario=s)
-            self._count_shards(rows_s[key_col], s)
+            # rows_s was masked by `m`, so every row is a real request
+            self._count_shards(rows_s[key_col], None, s)
             results[s] = {k: np.asarray(v) for k, v in out.items()}
         return results
 
@@ -205,11 +242,17 @@ class ShardRouter:
         }
 
     def shard_histogram(self) -> np.ndarray:
-        """Requests served per shard, summed over scenarios (copy)."""
+        """Requests served per shard, summed over scenarios (copy).
+
+        Counts real requests only — padded filler rows are excluded (see
+        :meth:`_count_shards`); padding cost is the
+        ``padding_rows_total``/``padding_waste_ratio`` telemetry.
+        """
         return self.shard_requests.copy()
 
     def scenario_shard_histogram(self) -> Dict[str, np.ndarray]:
-        """Per-(scenario, shard) request occupancy (copies)."""
+        """Per-(scenario, shard) request occupancy (copies); real requests
+        only, padding excluded as in :meth:`shard_histogram`."""
         return {
             s: h.copy() for s, h in self.scenario_shard_requests.items()
         }

@@ -15,7 +15,6 @@ keeps one compiled executable per bucket — compilation caching again).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -24,6 +23,7 @@ import numpy as np
 
 from repro.core.online import OnlineFeatureStore
 from repro.core.view import FeatureRegistry, FeatureView
+from repro.obs import get_telemetry
 
 __all__ = [
     "FeatureService",
@@ -35,11 +35,24 @@ __all__ = [
 
 @dataclasses.dataclass
 class ServiceStats:
-    """Request counters + batch-latency distribution.
+    """Request counters + latency distributions.
 
     The paper's latency claims are *tail*-latency claims (<20 ms at
-    QPS > 1000), so the stats keep a ring of the most recent ``window``
-    batch latencies and report percentiles, not just the mean.
+    QPS > 1000), so the stats keep rings of recent samples and report
+    percentiles, not just the mean.
+
+    Two distributions live here:
+
+    * **per-request** (``request_p50_ms`` / ``request_p95_ms`` /
+      ``request_p99_ms``): one sample per request — queue wait plus the
+      wall time of the batch that served it — so a 64-request batch
+      contributes 64 samples and the tail reflects what a user request
+      actually experienced.  This is the authoritative latency metric.
+    * **per-batch** (``p50_ms`` / ``p95_ms`` / ``p99_ms``): one sample per
+      batch wall time, *unweighted* by batch size.  Deprecated — kept
+      working for existing dashboards/tests, but it under-weights busy
+      batches (a 1-row batch counts the same as a 256-row one) and
+      excludes queue wait.  New code should read the request percentiles.
     """
 
     requests: int = 0
@@ -49,8 +62,18 @@ class ServiceStats:
     recent_latency_s: List[float] = dataclasses.field(
         default_factory=list, repr=False
     )
+    recent_request_latency_s: List[float] = dataclasses.field(
+        default_factory=list, repr=False
+    )
 
     def observe(self, latency_s: float, n_requests: int) -> None:
+        """Record one served batch (batch wall time + request count).
+
+        Without per-request wait attribution, each of the batch's
+        requests is also credited the batch wall time in the per-request
+        ring; :meth:`observe_requests` overrides that with true
+        wait-inclusive samples when the caller has them.
+        """
         self.requests += n_requests
         self.batches += 1
         self.total_latency_s += latency_s
@@ -58,14 +81,31 @@ class ServiceStats:
         if len(self.recent_latency_s) > self.window:
             del self.recent_latency_s[: len(self.recent_latency_s) - self.window]
 
+    def observe_requests(self, latencies_s: Sequence[float]) -> None:
+        """Record per-request end-to-end latencies (wait + batch wall)."""
+        self.recent_request_latency_s.extend(float(x) for x in latencies_s)
+        if len(self.recent_request_latency_s) > self.window:
+            del self.recent_request_latency_s[
+                : len(self.recent_request_latency_s) - self.window
+            ]
+
     @property
     def mean_latency_ms(self) -> float:
         return 1e3 * self.total_latency_s / max(self.batches, 1)
 
     def percentile_ms(self, p: float) -> float:
+        """DEPRECATED batch-latency percentile (unweighted by batch size)."""
         if not self.recent_latency_s:
             return 0.0
         return 1e3 * float(np.percentile(np.asarray(self.recent_latency_s), p))
+
+    def request_percentile_ms(self, p: float) -> float:
+        """Per-request latency percentile (queue wait + batch wall time)."""
+        if not self.recent_request_latency_s:
+            return 0.0
+        return 1e3 * float(
+            np.percentile(np.asarray(self.recent_request_latency_s), p)
+        )
 
     @property
     def p50_ms(self) -> float:
@@ -78,6 +118,18 @@ class ServiceStats:
     @property
     def p99_ms(self) -> float:
         return self.percentile_ms(99.0)
+
+    @property
+    def request_p50_ms(self) -> float:
+        return self.request_percentile_ms(50.0)
+
+    @property
+    def request_p95_ms(self) -> float:
+        return self.request_percentile_ms(95.0)
+
+    @property
+    def request_p99_ms(self) -> float:
+        return self.request_percentile_ms(99.0)
 
 
 class FeatureService:
@@ -184,9 +236,15 @@ class FeatureService:
         return self.store.query(rows, mode=self.mode)
 
     def _observe(
-        self, latency_s: float, n_requests: int, scenario: Optional[str]
+        self,
+        latency_s: float,
+        n_requests: int,
+        scenario: Optional[str],
+        request_latencies_s: Optional[np.ndarray] = None,
     ) -> None:
         self.stats.observe(latency_s, n_requests)
+        if request_latencies_s is not None:
+            self.stats.observe_requests(request_latencies_s)
 
     def request(self, rows: Dict[str, np.ndarray],
                 ingest: bool = True,
@@ -195,37 +253,76 @@ class FeatureService:
         them afterwards (the online-learning pattern of the paper).
 
         Batches from :class:`BatchScheduler` carry a ``__valid__`` mask over
-        padding rows (the last real row repeated up to the shape bucket).
-        The mask is stripped before querying and honored on ingest — padding
-        rows are duplicates of a real row, so ingesting them would corrupt
-        window state (double-counted sums, inflated counts).
+        padding rows (the last real row repeated up to the shape bucket)
+        and a ``__wait_us__`` per-row queue-wait column.  All ``__``-meta
+        columns are stripped before querying; the mask is honored on ingest
+        — padding rows are duplicates of a real row, so ingesting them
+        would corrupt window state (double-counted sums, inflated counts).
+        The wait column attributes per-request latency: each request's
+        sample is its queue wait plus this batch's wall time.
 
         ``scenario`` selects which view answers on a multi-scenario
         deployment (see :meth:`build_multi`); ingested rows land in the
         shared store once, serving every scenario.
         """
-        t0 = time.perf_counter()
+        tel = get_telemetry()
+        t0 = tel.clock.now()
         valid = rows.get("__valid__")
-        rows = {c: v for c, v in rows.items() if c != "__valid__"}
-        out = self._compute(rows, scenario)
-        out = {k: np.asarray(v) for k, v in out.items()}
-        if ingest:
-            real = rows
+        wait_us = rows.get("__wait_us__")
+        rows = {c: v for c, v in rows.items() if not c.startswith("__")}
+        n_rows = len(next(iter(rows.values())))
+        n_real = int(np.asarray(valid, bool).sum()) if valid is not None else n_rows
+        with tel.tracer.span(
+            "request", service=self.name,
+            scenario=scenario or "", rows=n_real,
+        ):
+            out = self._compute(rows, scenario)
+            out = {k: np.asarray(v) for k, v in out.items()}
+            if ingest:
+                real = rows
+                if valid is not None:
+                    valid = np.asarray(valid, bool)
+                    real = {c: np.asarray(v)[valid] for c, v in rows.items()}
+                if len(next(iter(real.values()))):
+                    key = np.asarray(real[self.view.schema.key])
+                    ts = np.asarray(real[self.view.schema.ts])
+                    order = np.lexsort((ts, key))
+                    self.store.ingest(
+                        {c: np.asarray(v)[order] for c, v in real.items()}
+                    )
+        dt = tel.clock.now() - t0
+        # per-request latency = that request's queue wait + batch wall time
+        if wait_us is not None:
+            waits_s = np.asarray(wait_us, np.float64)[:n_rows] / 1e6
             if valid is not None:
-                valid = np.asarray(valid, bool)
-                real = {c: np.asarray(v)[valid] for c, v in rows.items()}
-            if len(next(iter(real.values()))):
-                key = np.asarray(real[self.view.schema.key])
-                ts = np.asarray(real[self.view.schema.ts])
-                order = np.lexsort((ts, key))
-                self.store.ingest(
-                    {c: np.asarray(v)[order] for c, v in real.items()}
-                )
-        dt = time.perf_counter() - t0
-        n = len(next(iter(rows.values())))
-        self._observe(
-            dt, int(valid.sum()) if valid is not None else n, scenario
-        )
+                waits_s = waits_s[np.asarray(valid, bool)]
+            else:
+                waits_s = waits_s[:n_real]
+        else:
+            waits_s = np.zeros(n_real, np.float64)
+        req_lat = waits_s + dt
+        m = tel.metrics
+        m.counter(
+            "service_requests_total", "requests served", "1",
+            labels=("service", "scenario"),
+        ).inc(n_real, service=self.name, scenario=scenario or "")
+        m.histogram(
+            "request_latency_seconds",
+            "per-request latency (queue wait + batch wall)", "s",
+            labels=("service",),
+        ).observe_array(req_lat, service=self.name)
+        if wait_us is not None and len(waits_s):
+            m.histogram(
+                "queue_wait_seconds", "scheduler queue wait per request",
+                "s", labels=("service",),
+            ).observe_array(waits_s, service=self.name)
+        if valid is not None and n_rows:
+            m.gauge(
+                "batch_occupancy_ratio",
+                "real rows / padded batch rows, last batch", "1",
+                labels=("service",),
+            ).set(n_real / n_rows, service=self.name)
+        self._observe(dt, n_real, scenario, req_lat)
         return out
 
     def feature_matrix(
@@ -292,9 +389,17 @@ class MultiScenarioService(FeatureService):
                 f"scenario {view.name!r} is already deployed on "
                 f"{self.name!r}; hot_deploy adds new scenarios"
             )
-        report = self.plane.evolve(
-            list(self.plane.views.values()) + [view], **plan_overrides
-        )
+        tel = get_telemetry()
+        with tel.tracer.span(
+            "hot_deploy", service=self.name, scenario=view.name
+        ):
+            report = self.plane.evolve(
+                list(self.plane.views.values()) + [view], **plan_overrides
+            )
+        tel.metrics.counter(
+            "hot_deploys_total", "scenarios hot-deployed onto live planes",
+            "1", labels=("service",),
+        ).inc(service=self.name)
         self.view = self.plane.merged
         self.scenario_stats.setdefault(view.name, ServiceStats())
         if self.registry is not None:
@@ -318,9 +423,15 @@ class MultiScenarioService(FeatureService):
             )
         return self.plane.query(scenario, rows, mode=self.mode)
 
-    def _observe(self, latency_s, n_requests, scenario):
+    def _observe(self, latency_s, n_requests, scenario,
+                 request_latencies_s=None):
         self.stats.observe(latency_s, n_requests)
         self.scenario_stats[scenario].observe(latency_s, n_requests)
+        if request_latencies_s is not None:
+            self.stats.observe_requests(request_latencies_s)
+            self.scenario_stats[scenario].observe_requests(
+                request_latencies_s
+            )
 
     def _scenario_features(self, scenario):
         if scenario is None:
@@ -341,7 +452,10 @@ class BatchScheduler:
     legacy immediate-drain behaviour).
 
     Time is injectable (``now_us``) so schedulers are testable and
-    replayable; real callers omit it and get a monotonic clock.
+    replayable; real callers omit it and read the plane clock —
+    ``repro.obs.get_telemetry().clock`` — so a :class:`repro.obs.FakeClock`
+    installed via ``use_telemetry`` drives the scheduler, the registry,
+    and every span from the same counter.
     """
 
     def __init__(
@@ -359,7 +473,7 @@ class BatchScheduler:
 
     def _clock_us(self, now_us: Optional[int]) -> int:
         # a scheduler must live entirely on one clock: mixing an injected
-        # test clock with the real monotonic clock would compare epochs
+        # test clock with the plane's monotonic clock would compare epochs
         # microseconds vs ~hours apart and either stall queued requests
         # forever or flush every batch instantly — fail loudly instead
         injected = now_us is not None
@@ -371,7 +485,7 @@ class BatchScheduler:
                 "call or on none (instance started with "
                 f"{'injected' if self._injected_clock else 'monotonic'} time)"
             )
-        return int(now_us) if injected else time.monotonic_ns() // 1_000
+        return int(now_us) if injected else get_telemetry().clock.now_us()
 
     def submit(self, row: Dict, now_us: Optional[int] = None) -> None:
         self.queue.append(row)
@@ -408,18 +522,35 @@ class BatchScheduler:
             n = min(n, max_batch)
         bucket = next((b for b in self.buckets if b >= n), self.buckets[-1])
         n = min(n, bucket)
+        pop_us = self._clock_us(now_us)
         rows, self.queue = self.queue[:n], self.queue[n:]
-        del self._arrival_us[:n]
+        arrivals, self._arrival_us = (
+            self._arrival_us[:n], self._arrival_us[n:]
+        )
         cols = {
             k: np.asarray([r[k] for r in rows])
             for k in rows[0]
         }
+        waits = np.asarray(
+            [max(pop_us - a, 0) for a in arrivals], np.int64
+        )
         # pad to bucket by repeating the last row (masked out by caller)
         pad = bucket - n
         if pad:
             cols = {k: np.concatenate([v, np.repeat(v[-1:], pad, 0)])
                     for k, v in cols.items()}
+            waits = np.concatenate([waits, np.repeat(waits[-1:], pad)])
         cols["__valid__"] = np.arange(bucket) < n
+        cols["__wait_us__"] = waits
+        m = get_telemetry().metrics
+        m.counter(
+            "padding_rows_total", "filler rows added to reach shape bucket",
+            "1", labels=("layer",),
+        ).inc(pad, layer="scheduler")
+        m.gauge(
+            "padding_waste_ratio", "filler rows / bucket rows, last batch",
+            "1", labels=("layer",),
+        ).set(pad / bucket, layer="scheduler")
         return cols
 
 
