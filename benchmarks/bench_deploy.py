@@ -30,7 +30,7 @@ from benchmarks import common
 from benchmarks.common import emit
 from repro.core import (
     Col, FeatureRegistry, FeatureView, OfflineEngine, OnlineFeatureStore,
-    ScenarioPlane, range_window, w_count, w_mean, w_sum,
+    ScenarioPlane, Signature, range_window, w_count, w_mean, w_sum,
 )
 from repro.core.consistency import verify_view
 from repro.data.synthetic import FRAUD_SCHEMA, fraud_stream
@@ -111,6 +111,7 @@ def run() -> None:
     assert registry.versions("fraud_v1") == [1, 2]
 
     hot_deploy_section()
+    backfill_section()
 
 
 # ---------------------------------------------------------------------------
@@ -118,14 +119,16 @@ def run() -> None:
 # ---------------------------------------------------------------------------
 
 
-def _hot_setup(rows: int, accts: int):
+def _hot_setup(rows: int, accts: int, capacity: int = 256):
     from repro.data.synthetic import MULTITABLE_DB, multitable_stream
     from repro.scenarios import multi_scenario_views
 
     rng = np.random.default_rng(17)
-    # t_max/bucket_size < num_buckets: no bucket-ring wraparound, and
-    # capacity > rows/key: no ring aging — the horizon inside which the
-    # migration's bit-exactness contract is unconditional
+    # t_max/bucket_size < num_buckets: no bucket-ring wraparound.  With
+    # the default capacity > rows/key there is no ring aging either — the
+    # horizon inside which the migration's bit-exactness contract is
+    # unconditional; the backfill sections shrink ``capacity`` below
+    # rows/key on purpose to force aged-out history.
     tabs = multitable_stream(
         rng, rows, num_accounts=accts, num_merchants=16, t_max=60_000
     )
@@ -133,7 +136,7 @@ def _hot_setup(rows: int, accts: int):
     sec = {t: c for t, c in tabs.items() if t != "transactions"}
     views = multi_scenario_views()
     kw = dict(
-        num_keys=accts, capacity=256, num_buckets=1024, bucket_size=64,
+        num_keys=accts, capacity=capacity, num_buckets=1024, bucket_size=64,
         secondary_num_keys={"merchants": 16},
     )
 
@@ -147,7 +150,7 @@ def _hot_setup(rows: int, accts: int):
             plane.ingest_table(t, bykey(sec[t], kc))
         plane.ingest(bykey(tx, "account"))
 
-    return views, kw, warm, tx
+    return views, kw, warm, tx, tabs
 
 
 def _state_equal(a, b) -> bool:
@@ -168,7 +171,7 @@ def hot_deploy_section() -> None:
     rows = common.scaled(HOT_ROWS, 300)
     accts = common.scaled(HOT_ACCTS, 32)
     shards = common.scaled(HOT_SHARDS, 4)
-    views, kw, warm, tx = _hot_setup(rows, accts)
+    views, kw, warm, tx, _ = _hot_setup(rows, accts)
 
     svc = FeatureService.build_multi(
         "hot_plane", views[:2], sharded=True, num_shards=shards, **kw
@@ -200,12 +203,79 @@ def hot_deploy_section() -> None:
          "state migration vs rebuild+replay; bit-exactness asserted")
 
 
-def migration_exactness_check(rows: int = 600, shards: int = 4) -> None:
-    """CI gate (scripts/ci.sh): hot-deploy == cold rebuild + full replay,
-    bit-for-bit, on a warm sharded plane.  Raises on any divergence."""
+def backfill_section() -> None:
+    """Hot deploy needing aged-out history: offline backfill vs rebuild.
+
+    The plane runs with ``capacity`` far below rows/key, so primary rings
+    have aged out most of the stream by deploy time.  Growing capacity on
+    hot deploy then *requires* history the rings no longer hold — the
+    diff that used to report ``exact=False``.  With a
+    :class:`~repro.offline.BackfillSource` the migration re-derives the
+    aged-out rows offline and stays bit-exact; we report the splice cost
+    against the cold rebuild + full replay it replaces.
+    """
+    from repro.data.synthetic import MULTITABLE_DB
+    from repro.obs import get_telemetry
+    from repro.offline import BackfillSource
     from repro.serve.service import FeatureService
 
-    views, kw, warm, _ = _hot_setup(rows, 64)
+    rows = common.scaled(HOT_ROWS, 600)
+    shards = common.scaled(HOT_SHARDS, 4)
+    accts = 16  # few keys: every key's ring wraps at capacity 16
+    views, kw, warm, tx, tabs = _hot_setup(rows, accts, capacity=16)
+
+    svc = FeatureService.build_multi(
+        "bf_plane", views[:2], sharded=True, num_shards=shards, **kw
+    )
+    warm(svc.plane)
+    probe = {c: v[:16] for c, v in tx.items()}
+    for v in views[:2]:
+        svc.plane.query(v.name, probe)
+
+    src = BackfillSource(MULTITABLE_DB, tabs)
+    tel = get_telemetry()
+    t0 = time.perf_counter()
+    report = svc.hot_deploy(views[2], backfill=src, capacity=64)
+    svc.plane.query(views[2].name, probe)
+    t_hot = time.perf_counter() - t0
+    assert report.exact, report.notes
+    assert report.backfilled, "expected an aged-out-history backfill"
+    root = tel.tracer.last_root("hot_deploy")
+    spans = root.find("backfill") if root else []
+    bf_ms = 1e3 * spans[0].duration_s if spans else float("nan")
+
+    t0 = time.perf_counter()
+    cold = ScenarioPlane(views, num_shards=shards, **dict(kw, capacity=64))
+    warm(cold)
+    cold.query(views[2].name, probe)
+    t_cold = time.perf_counter() - t0
+    assert _state_equal(svc.plane, cold), "backfilled state != rebuild+replay"
+
+    emit("deploy", "backfill_splice_ms", bf_ms, "ms",
+         f"re-derive aged-out rows for capacity 16->64 grow "
+         f"({rows} rows, {shards} shards)")
+    emit("deploy", "backfill_hot_deploy_ms", 1e3 * t_hot, "ms",
+         "hot deploy incl. backfill splice + first query compile")
+    emit("deploy", "backfill_cold_rebuild_ms", 1e3 * t_cold, "ms",
+         "rebuild at new capacity + re-ingest full stream")
+    emit("deploy", "backfill_speedup", t_cold / max(t_hot, 1e-9), "x",
+         "backfilled hot deploy vs rebuild+replay; bit-exactness asserted")
+
+
+def migration_exactness_check(rows: int = 600, shards: int = 4) -> None:
+    """CI gate (scripts/ci.sh): hot-deploy == cold rebuild + full replay,
+    bit-for-bit, on a warm sharded plane.  Raises on any divergence.
+
+    Two phases: (1) the within-retention migration (no backfill needed);
+    (2) a previously-refused diff — a new Signature lane plus a capacity
+    grow on a plane whose rings have aged out most of the stream — made
+    bit-exact by an offline :class:`~repro.offline.BackfillSource`.
+    """
+    from repro.data.synthetic import MULTITABLE_DB
+    from repro.offline import BackfillSource
+    from repro.serve.service import FeatureService
+
+    views, kw, warm, _, _ = _hot_setup(rows, 64)
     svc = FeatureService.build_multi(
         "gate_plane", views[:2], sharded=True, num_shards=shards, **kw
     )
@@ -221,6 +291,50 @@ def migration_exactness_check(rows: int = 600, shards: int = 4) -> None:
     )
     print(
         f"migration exactness gate OK: {report.describe().splitlines()[0]}"
+    )
+
+    # phase 2: beyond the retention horizon.  16-row rings age out ~60%
+    # of the stream; the Signature lane is new (underivable from stored
+    # lanes) and the capacity grow needs aged-out rows — refused without
+    # a backfill source, bit-exact with one.
+    views, kw, warm, _, tabs = _hot_setup(rows, 16, capacity=16)
+    w1h = range_window(3600, bucket=64)
+    sig_view = FeatureView(
+        name="merchant_mix",
+        features={
+            "sig_cnt_1h": w_count(
+                Signature((Col("merchant"),), bits=8), w1h
+            ),
+            "sig_sum_1h": w_sum(
+                Signature((Col("merchant"),), bits=8), w1h
+            ),
+        },
+        database=MULTITABLE_DB,
+    )
+    svc = FeatureService.build_multi(
+        "gate_backfill", views[:2], sharded=True, num_shards=shards, **kw
+    )
+    warm(svc.plane)
+    try:
+        svc.hot_deploy(sig_view, capacity=64)
+        raise AssertionError("expected refusal without a backfill source")
+    except ValueError as e:
+        assert "backfill" in str(e), e
+    report = svc.hot_deploy(
+        sig_view, backfill=BackfillSource(MULTITABLE_DB, tabs), capacity=64
+    )
+    assert report.exact, f"backfilled migration not exact: {report.notes}"
+    assert report.backfilled, "expected backfilled deficits in the report"
+    cold = ScenarioPlane(
+        views[:2] + [sig_view], num_shards=shards, **dict(kw, capacity=64)
+    )
+    warm(cold)
+    assert _state_equal(svc.plane, cold), (
+        "backfilled state != rebuild+replay"
+    )
+    print(
+        "backfill exactness gate OK: previously-refused diff "
+        f"({len(report.backfilled)} deficits spliced) now bit-exact"
     )
 
 

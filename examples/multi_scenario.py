@@ -48,8 +48,10 @@ HIST_ROWS = 2_000
 T_MAX = 40_000
 N_REQUESTS = 180
 
+# capacity is small on purpose: ~31 rows/key age down to the newest 16,
+# so the offline-bridge section below genuinely needs aged-out history
 STORE_KW = dict(
-    num_keys=NUM_ACCOUNTS, capacity=256, num_buckets=512, bucket_size=64,
+    num_keys=NUM_ACCOUNTS, capacity=16, num_buckets=512, bucket_size=64,
     secondary_num_keys={"merchants": NUM_MERCHANTS},
 )
 
@@ -149,6 +151,42 @@ def main() -> None:
           f"(per-request p50={svc.stats.request_p50_ms:.2f}ms "
           f"p99={svc.stats.request_p99_ms:.2f}ms)")
 
+    # -- the offline bridge: hot deploy beyond the retention horizon ----------
+    # merchant_mix wants a 6h window of a *hash* lane: the rings retain
+    # only the newest 16 rows/key (~5.5h of a ~31-row/key stream) and a
+    # Signature lane can never be synthesized from stored f32 columns —
+    # without offline history this deployment must refuse; with a
+    # BackfillSource it re-derives the aged-out state and goes live
+    # bit-exactly (capacity grows 16 -> 64 so the window fits)
+    from repro.core import Col, FeatureView, Signature, range_window, w_count, w_sum
+    from repro.offline import BackfillSource
+
+    w6h = range_window(21_600, bucket=64)
+    sig_view = FeatureView(
+        name="merchant_mix",
+        features={
+            "sig_cnt_6h": w_count(Signature((Col("merchant"),), bits=8), w6h),
+            "sig_sum_6h": w_sum(Signature((Col("merchant"),), bits=8), w6h),
+        },
+        database=MULTITABLE_DB,
+        description="merchant-mix signature counts (offline-backfilled)",
+    )
+    print(f"\nhot-deploying {sig_view.name!r} (6h hash-lane window vs "
+          "16-row rings):")
+    try:
+        svc.hot_deploy(sig_view, capacity=64)
+    except ValueError as e:
+        print(f"  without offline history: REFUSED — {str(e)[:110]}...")
+    report = svc.hot_deploy(
+        sig_view,
+        backfill=BackfillSource(MULTITABLE_DB, tables),
+        capacity=64,
+    )
+    assert report.exact, report.notes
+    print("  with BackfillSource: " + report.describe().splitlines()[0])
+    for b in report.backfilled:
+        print(f"    backfilled: {b}")
+
     # -- the telemetry plane: freshness, compile time, migration spans -------
     from repro.obs import get_telemetry
 
@@ -176,6 +214,17 @@ def main() -> None:
             print("  hot-deploy span tree (⏚ = device-fenced):")
             print("    " + root.tree().replace("\n", "\n    "))
     assert any(r.name == "hot_deploy" for r in tel.tracer.roots())
+    backfill_spans = [
+        s for r in tel.tracer.roots() for s in r.find("backfill")
+    ]
+    assert backfill_spans, "the offline-bridge deploy traced no backfill"
+    bf_rows = tel.metrics.metrics().get("backfill_rows_total")
+    if bf_rows is not None:
+        for s in bf_rows.snapshot()["series"]:
+            print(
+                f"  backfill  {s['labels']['table']:15s} "
+                f"{s['value']:.0f} history rows re-derived offline"
+            )
     print(f"  snapshot: {len(snap['metrics'])} metrics — render with "
           "`python -m repro.obs.report`")
 

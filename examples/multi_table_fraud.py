@@ -104,6 +104,23 @@ def main() -> None:
     for f in ("credit_limit", "outflow_sum_1h", "limit_utilization"):
         print(f"  {f:18s} {np.asarray(out[f])}")
 
+    # ---- the offline half: point-in-time training-set export ---------------
+    # same view definitions, full history, label rows sampled across the
+    # stream (including beyond any online ring's retention horizon); the
+    # registry records the export as lineage next to the serving deploys
+    from repro.offline import export_training_set
+
+    training = export_training_set(
+        view, tx, n=256, seed=7, label="amount", secondary=secondary,
+        registry=registry,
+    )
+    print(f"\n{training.describe()}")
+    dep = registry.deployments(view.name)[-1]
+    print(
+        f"registry records: service={dep['service']!r} "
+        f"({dep['description']})"
+    )
+
 
 if __name__ == "__main__":
     main()

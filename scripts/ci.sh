@@ -21,12 +21,19 @@ python -m repro.obs.check schema
 python -m repro.obs.check overhead
 # migration-exactness gate: hot-deploying scenario #3 onto a warm sharded
 # plane must equal a cold rebuild + full replay bit-for-bit (the live
-# plane-evolution contract), and must not re-ingest carried tables
+# plane-evolution contract), and must not re-ingest carried tables; phase 2
+# covers the previously-refused regime — aged-out history + a new hash
+# lane — made bit-exact by an offline BackfillSource
 python -c "from benchmarks.bench_deploy import migration_exactness_check; migration_exactness_check()"
-# benchmark smoke includes bench_deploy's hot_deploy section (hot-add vs
-# rebuild+replay timing) and bench_shard's multi-scenario row (3 views on
-# one mesh vs isolated stores, bit-exactness gated) so the deploy path and
-# cross-view routing can't silently rot
+# offline-bridge gate: a training set exported from the serving view
+# definitions must equal an online replay row-for-row, at label times
+# beyond the rings' retention horizon, single-device and sharded
+python -m repro.offline.check
+# benchmark smoke includes bench_deploy's hot_deploy + backfill sections
+# (hot-add and backfill-splice vs rebuild+replay timing, bit-exactness
+# asserted) and bench_shard's multi-scenario row (3 views on one mesh vs
+# isolated stores, bit-exactness gated) so the deploy path and cross-view
+# routing can't silently rot
 python -m benchmarks.run --smoke
 # compile-time budget: offline MIN/MAX at N=5k must compile in < 30 s (the
 # seed's sparse-table formulation took ~150 s; keep the blowup dead)

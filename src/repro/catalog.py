@@ -70,6 +70,18 @@ def build_catalog() -> str:
                         else ""
                     ),
                 )
+            if v.name in scen.exported:
+                # the scenario's example also exports a point-in-time
+                # training set from these definitions
+                # (repro.offline.export_training_set records the same
+                # lineage when handed a registry)
+                registry.deploy(
+                    f"export:{v.name}", v.name, v.version,
+                    description=(
+                        "point-in-time training-set export "
+                        "(offline bridge)"
+                    ),
+                )
         sections += [
             f"## {scen.title} (`{scen.name}`)",
             "",

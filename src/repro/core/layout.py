@@ -230,6 +230,8 @@ def plan_layout(
     secondary_num_keys: Optional[Dict[str, int]] = None,
     secondary_capacity: Optional[int] = None,
     ttl: Optional[int] = None,
+    table_capacity: Optional[Dict[str, int]] = None,
+    table_ttl: Optional[Dict[str, int]] = None,
     raw_lanes: bool = False,
 ) -> StoreLayout:
     """Compute the one :class:`StoreLayout` for a list of feature views.
@@ -248,6 +250,17 @@ def plan_layout(
     stored columns.  Replicated LAST JOIN *slices* of dual-use tables
     stay narrow (join-argument lanes only) — that is the point of the
     split.
+
+    ``table_capacity`` / ``table_ttl`` override ring capacity and TTL
+    *per table* (keyed by table name, primary included) — the planner's
+    retention knobs.  Capacity is the true retention lever: a ring
+    retains its last ``capacity`` rows per key, so a short-capacity table
+    ages rows out (and a migration over it needs the offline backfill
+    bridge to stay exact) while a long one carries history verbatim.
+    TTL is a *query-time* visibility mask (rows older than ``ttl`` are
+    invisible to windows but still occupy slots); per-table TTLs let a
+    fast-moving union stream expire early while the primary looks back
+    further.
 
     Placement policy (``num_shards`` set):
 
@@ -277,13 +290,32 @@ def plan_layout(
         for t in collect_tables(list(v.features.values())):
             sec_schemas.setdefault(t, v.database.table(t))
 
+    # per-table retention overrides (capacity = hard retention, ttl =
+    # query-time visibility); unknown table names fail loudly
+    tcap = dict(table_capacity or {})
+    tttl = dict(table_ttl or {})
+    known = {schema.name, *sec_names}
+    for d, what in ((tcap, "table_capacity"), (tttl, "table_ttl")):
+        bad = sorted(set(d) - known)
+        if bad:
+            raise ValueError(
+                f"{what} names unknown table(s) {bad}; the planned views "
+                f"reference {sorted(known)}"
+            )
+    p_cap = int(tcap.get(schema.name, capacity))
+    p_ttl = tttl.get(schema.name, ttl)
+    p_ttl = None if p_ttl is None else int(p_ttl)
+
     # window-fit validation, naming the offending feature (pre-agg buckets
     # must cover a non-union RANGE window's span; see online._preagg_parts).
     # Matches the store's own check: a TTL retention policy clamps every
     # window's effective lookback, so it bounds the bucket need too.
     for wk, wa in waggs.items():
         if wa.window.mode == "range" and not wa.union:
-            span = wa.window.size if ttl is None else min(wa.window.size, ttl)
+            span = (
+                wa.window.size if p_ttl is None
+                else min(wa.window.size, p_ttl)
+            )
             need = span // bucket_size + 2
             if need > num_buckets:
                 feats = _feature_names_of_wagg(views, wk)
@@ -371,15 +403,18 @@ def plan_layout(
         serves=("window",),
         num_keys=int(num_keys),
         ring_keys=per_shard_keys if sharded else int(num_keys),
-        capacity=int(capacity),
+        capacity=p_cap,
         lanes=primary_lanes,
-        ttl=ttl,
+        ttl=p_ttl,
     )
     bucket = BucketPlan(num_buckets=int(num_buckets), bucket_size=int(bucket_size))
 
     rings: List[RingPlan] = []
     for t in sec_names:
         tsch = sec_schemas[t]
+        cap_t = int(tcap.get(t, sec_cap))
+        ttl_t = tttl.get(t)
+        ttl_t = None if ttl_t is None else int(ttl_t)
         is_union = t in union_tables
         is_join = t in join_tables
         if sharded and is_union and is_join:
@@ -392,8 +427,9 @@ def plan_layout(
                     serves=("union",),
                     num_keys=global_nk[t],
                     ring_keys=per_shard_keys,
-                    capacity=sec_cap,
+                    capacity=cap_t,
                     lanes=lane_list(tsch.columns, sec_union_args[t]),
+                    ttl=ttl_t,
                 )
             )
             rings.append(
@@ -403,7 +439,8 @@ def plan_layout(
                     serves=("join",),
                     num_keys=global_nk[t],
                     ring_keys=global_nk[t],
-                    capacity=sec_cap,
+                    capacity=cap_t,
+                    ttl=ttl_t,
                     lanes=tuple(
                         LaneSlot(
                             e.key, e,
@@ -425,10 +462,11 @@ def plan_layout(
                 serves=serves,
                 num_keys=global_nk[t],
                 ring_keys=per_shard_keys if part else global_nk[t],
-                capacity=sec_cap,
+                capacity=cap_t,
                 lanes=lane_list(
                     tsch.columns, sec_join_args[t] + sec_union_args[t]
                 ),
+                ttl=ttl_t,
             )
         )
 

@@ -34,6 +34,17 @@ horizon is exceeded the migration still succeeds but flags
 ``report.exact = False`` with a note naming what was lost; the
 hot-deploy CI gate (:mod:`benchmarks.bench_deploy`) runs inside the
 horizon and asserts bit-exactness outright.
+
+Beyond-the-horizon migrations close the gap through the **offline
+backfill bridge** (:mod:`repro.offline.backfill`): every inexactness
+site records a structured :class:`Deficit` naming the state it could not
+reconstruct, and :func:`migrate_state` accepts a ``backfill=`` source.
+When one is passed, lanes that cannot be synthesized from stored f32
+columns (hash/signature exprs, un-materialized raw columns) are
+*deferred* — zero-filled and recorded as deficits — instead of refusing,
+and the caller (:meth:`OnlineFeatureStore.adopt_layout`) splices
+offline-re-derived state over every deficit before the new layout goes
+live, restoring ``report.exact``.
 """
 
 from __future__ import annotations
@@ -51,9 +62,35 @@ from repro.core.layout import LaneSlot, LayoutDiff, RingPlan
 from repro.core.online import OnlineState
 from repro.obs import get_telemetry
 
-__all__ = ["MigrationReport", "migrate_state"]
+__all__ = ["Deficit", "MigrationReport", "migrate_state"]
 
 _TS_MIN = np.int32(-2147483648)
+
+
+@dataclasses.dataclass(frozen=True)
+class Deficit:
+    """One piece of state a migration could not reconstruct exactly.
+
+    ``target`` is ``'ring'`` or ``'bucket'``; ``ring`` indexes the new
+    layout's secondary rings (``None`` = the primary ring / the bucket
+    store).  ``lanes`` names the affected lane keys, or ``None`` when the
+    whole structure is deficient (aged-out rows, bucket-slot remap after
+    wraparound).  Deficits are exactly what the offline backfill bridge
+    (:mod:`repro.offline.backfill`) knows how to re-derive from history.
+    """
+
+    target: str                       # 'ring' | 'bucket'
+    table: str
+    ring: Optional[int] = None        # new.tables index; None = primary
+    lanes: Optional[Tuple] = None     # affected lane keys; None = all
+    reason: str = ""
+
+    def describe(self) -> str:
+        what = (
+            "all lanes" if self.lanes is None
+            else ", ".join(repr(k) for k in self.lanes)
+        )
+        return f"{self.target} {self.table} [{what}]: {self.reason}"
 
 
 @dataclasses.dataclass
@@ -69,6 +106,20 @@ class MigrationReport:
     new_programs: List[str] = dataclasses.field(default_factory=list)
     exact: bool = True
     notes: List[str] = dataclasses.field(default_factory=list)
+    deficits: List[Deficit] = dataclasses.field(default_factory=list)
+    backfilled: List[str] = dataclasses.field(default_factory=list)
+    # inexactness NOT repairable from offline history (e.g. key-domain
+    # shrink dropping out-of-domain rows) — the backfill splice never
+    # restores report.exact while this is set
+    hard_inexact: bool = False
+
+    def add_deficit(self, d: Deficit) -> None:
+        """Record a repairable inexactness: the migration proceeds, the
+        report flips inexact, and the deficit tells the backfill bridge
+        exactly what to re-derive."""
+        self.deficits.append(d)
+        self.exact = False
+        self.notes.append(d.reason)
 
     def describe(self) -> str:
         lines = [
@@ -81,10 +132,13 @@ class MigrationReport:
             ("fresh", self.fresh),
             ("dropped", self.dropped),
             ("synthesized", self.synthesized_lanes),
+            ("backfilled", self.backfilled),
             ("new programs", self.new_programs),
         ):
             if items:
                 lines.append(f"  {tag}: {', '.join(items)}")
+        for d in self.deficits:
+            lines.append(f"  deficit: {d.describe()}")
         for n in self.notes:
             lines.append(f"  note: {n}")
         return "\n".join(lines)
@@ -132,6 +186,25 @@ def _collect_cols(e) -> List[str]:
     return out
 
 
+def _synth_refusal(slot: LaneSlot, src_plan: RingPlan, ctx: str) -> Optional[str]:
+    """Why ``slot`` cannot be synthesized from ``src_plan``'s stored
+    lanes (None when it can)."""
+    if not slot.synthesizable:
+        return (
+            f"lane {slot.key!r} of {ctx} contains hash/signature nodes "
+            "whose evaluation is dtype-sensitive — it cannot be "
+            "synthesized bit-exactly from stored f32 columns"
+        )
+    for name in _collect_cols(slot.expr):
+        if ("col", name) not in src_plan.lane_keys:
+            return (
+                f"new lane {slot.key!r} of {ctx} needs raw column "
+                f"{name!r}, which the running layout does not materialize "
+                "(plan with raw_lanes=True to make the store evolvable)"
+            )
+    return None
+
+
 def _synth_lane(
     slot: LaneSlot,
     src_plan: RingPlan,
@@ -143,14 +216,14 @@ def _synth_lane(
 
     Bit-exact vs ingest-time evaluation for pure f32 row math (see
     :func:`repro.core.layout.synthesizable`); anything else requires a
-    rebuild and fails loudly here.
+    rebuild (or an offline backfill source) and fails loudly here.
     """
-    if not slot.synthesizable:
+    why = _synth_refusal(slot, src_plan, ctx)
+    if why is not None:
         raise ValueError(
-            f"cannot hot-deploy: lane {slot.key!r} of {ctx} contains "
-            "hash/signature nodes whose evaluation is dtype-sensitive — "
-            "it cannot be synthesized bit-exactly from stored f32 "
-            "columns; rebuild the plane for this deployment"
+            f"cannot hot-deploy: {why}; rebuild the plane for this "
+            "deployment, or pass a backfill= source covering "
+            f"table {ctx!r}"
         )
     with get_telemetry().tracer.span(
         "migrate.synthesize", table=ctx, lane=str(slot.key)
@@ -158,14 +231,6 @@ def _synth_lane(
         cols: Dict[str, jnp.ndarray] = {}
         for name in _collect_cols(slot.expr):
             ck = ("col", name)
-            if ck not in src_plan.lane_keys:
-                raise ValueError(
-                    f"cannot hot-deploy: new lane {slot.key!r} of {ctx} "
-                    f"needs raw column {name!r}, which the running layout "
-                    "does not materialize (plan with raw_lanes=True to "
-                    "make the store evolvable); rebuild the plane for "
-                    "this deployment"
-                )
             cols[name] = jnp.asarray(vals_src[..., src_plan.lane_of(ck)])
         if cols:
             v = eval_rowlevel(slot.expr, cols, {}).astype(jnp.float32)
@@ -184,17 +249,27 @@ def _map_lanes(
     written: Optional[np.ndarray],
     report: MigrationReport,
     ctx: str,
+    defer=None,                 # callable(slot, why) -> bool
 ) -> np.ndarray:
     """(..., F_dst) lane block: carried lanes copied by key, new lanes
-    synthesized (zeroed on never-written slots, matching a fresh ring)."""
+    synthesized (zeroed on never-written slots, matching a fresh ring).
+
+    ``defer`` is the backfill hook: when a new lane cannot be synthesized
+    and ``defer(slot, why)`` accepts it, the lane is left zero-filled and
+    recorded as a deficit for the offline splice instead of refusing.
+    """
     F_dst = max(len(dst_plan.lanes), 1)
     out = np.zeros(vals_src.shape[:-1] + (F_dst,), np.float32)
     for j, slot in enumerate(dst_plan.lanes):
         if slot.key in src_plan.lane_keys:
             out[..., j] = vals_src[..., src_plan.lane_of(slot.key)]
-        else:
-            v = _synth_lane(slot, src_plan, vals_src, report, ctx)
-            out[..., j] = np.where(written, v, 0.0) if written is not None else v
+            continue
+        if defer is not None:
+            why = _synth_refusal(slot, src_plan, ctx)
+            if why is not None and defer(slot, why):
+                continue  # zero-filled; the backfill splice overwrites
+        v = _synth_lane(slot, src_plan, vals_src, report, ctx)
+        out[..., j] = np.where(written, v, 0.0) if written is not None else v
     return out
 
 
@@ -205,6 +280,7 @@ def _recap(
     C_new: int,
     report: MigrationReport,
     ctx: str,
+    ring_ix: Optional[int],
 ):
     """Re-lay ring slots for a capacity change, reproducing the cursor
     arithmetic (row at absolute index a lands in slot a % C)."""
@@ -225,11 +301,14 @@ def _recap(
             new_ts[si, ki, a % C_new] = ts[si, ki, a % C_old]
             new_vals[si, ki, a % C_new] = vals[si, ki, a % C_old]
     if C_new > C_old and np.any(cur > C_old):
-        report.exact = False
-        report.notes.append(
-            f"{ctx}: capacity grew {C_old}->{C_new} but rows had already "
-            "aged out — a cold rebuild would retain more history"
-        )
+        report.add_deficit(Deficit(
+            target="ring", table=ctx, ring=ring_ix, lanes=None,
+            reason=(
+                f"{ctx}: capacity grew {C_old}->{C_new} but rows had "
+                "already aged out — a cold rebuild would retain more "
+                "history"
+            ),
+        ))
     return new_ts, new_vals
 
 
@@ -239,6 +318,8 @@ def _relane_ring(
     ring: st.RingStore,
     sharded: bool,
     report: MigrationReport,
+    ring_ix: Optional[int] = None,
+    defer=None,
 ) -> st.RingStore:
     """Same key domain & placement: permute/append/synthesize lanes, then
     re-lay capacity if it changed."""
@@ -248,8 +329,12 @@ def _relane_ring(
         ts, vals, cur = _host_ring(ring, sharded)
         ctx = dst_plan.table
         written = _written_mask(cur, src_plan.capacity)
-        vals = _map_lanes(src_plan, dst_plan, vals, written, report, ctx)
-        ts, vals = _recap(ts, vals, cur, dst_plan.capacity, report, ctx)
+        vals = _map_lanes(
+            src_plan, dst_plan, vals, written, report, ctx, defer=defer
+        )
+        ts, vals = _recap(
+            ts, vals, cur, dst_plan.capacity, report, ctx, ring_ix
+        )
         report.migrated.append(dst_plan.describe())
         return _mk_ring(ts, vals, cur, sharded)
 
@@ -300,6 +385,8 @@ def _reroute_ring(
     store,
     sharded: bool,
     report: MigrationReport,
+    ring_ix: Optional[int] = None,
+    defer=None,
 ) -> st.RingStore:
     """Placement change (partitioned <-> replicated, e.g. building a
     dual-use table's replicated join slice from its partitioned union
@@ -309,7 +396,8 @@ def _reroute_ring(
         partitioned=dst_plan.partitioned,
     ):
         return _reroute_ring_impl(
-            src_plan, dst_plan, ring, store, sharded, report
+            src_plan, dst_plan, ring, store, sharded, report, ring_ix,
+            defer,
         )
 
 
@@ -320,6 +408,8 @@ def _reroute_ring_impl(
     store,
     sharded: bool,
     report: MigrationReport,
+    ring_ix: Optional[int] = None,
+    defer=None,
 ) -> st.RingStore:
     S = store.num_shards if sharded else 1
     streams = _decode_streams(
@@ -331,21 +421,29 @@ def _reroute_ring_impl(
     ts_n = np.full((S, K_t, C_t), _TS_MIN, np.int32)
     vals_n = np.zeros((S, K_t, C_t, F_dst), np.float32)
     cur_n = np.zeros((S, K_t), np.int32)
+    deficient = False
     for g, (ts_g, vl_g, c) in streams.items():
         if g >= dst_plan.num_keys:
             report.notes.append(
                 f"{ctx}: dropped rows of out-of-domain key {g}"
             )
             report.exact = False
+            report.hard_inexact = True
             continue
-        rows = _map_lanes(src_plan, dst_plan, vl_g, None, report, ctx)
+        rows = _map_lanes(
+            src_plan, dst_plan, vl_g, None, report, ctx, defer=defer
+        )
         r = len(ts_g)
-        if min(c, C_t) > r:
-            report.exact = False
-            report.notes.append(
-                f"{ctx}: key {g} lost {min(c, C_t) - r} aged-out rows vs "
-                "a cold rebuild"
-            )
+        if min(c, C_t) > r and not deficient:
+            deficient = True
+            report.add_deficit(Deficit(
+                target="ring", table=dst_plan.table, ring=ring_ix,
+                lanes=None,
+                reason=(
+                    f"{ctx}: key {g} lost {min(c, C_t) - r} aged-out rows "
+                    "vs a cold rebuild"
+                ),
+            ))
         rr = min(r, C_t)
         a = np.arange(c - rr, c, dtype=np.int64)
         if dst_plan.partitioned:
@@ -457,11 +555,14 @@ def _migrate_bucket(
         if np.any(bucket >= NB_o):
             # some slot has cycled at least once -> older buckets of the
             # finer/coarser new ring may be unrecoverable
-            report.exact = False
-            report.notes.append(
-                f"primary: num_buckets {NB_o}->{NB_n} after bucket-ring "
-                "wraparound — a cold rebuild would retain different buckets"
-            )
+            report.add_deficit(Deficit(
+                target="bucket", table=dst_p.table, lanes=None,
+                reason=(
+                    f"primary: num_buckets {NB_o}->{NB_n} after "
+                    "bucket-ring wraparound — a cold rebuild would retain "
+                    "different buckets"
+                ),
+            ))
         order = np.argsort(bucket, axis=-1, kind="stable")
         b_s = np.take_along_axis(bucket, order, -1)
         st_s = np.take_along_axis(stats, order[..., None, None], 2)
@@ -501,11 +602,28 @@ def _migrate_bucket(
     ring_lost = bool(
         np.any(cur_h > min(src_p.capacity, dst_p.capacity))
     )
+    # primary-ring lanes the migration zero-filled for the backfill
+    # splice: their ring values are NOT usable as a fold source
+    deferred = {
+        k
+        for d in report.deficits
+        if d.target == "ring" and d.ring is None and d.lanes
+        for k in d.lanes
+    }
     for j, slot in enumerate(dst_p.lanes):
         if slot.key in src_p.lane_keys:
             i = src_p.lane_of(slot.key)
             stats_out[..., j, :] = stats[..., i, :]
             bitmap_out[..., j] = bitmap[..., i]
+        elif slot.key in deferred:
+            # identities stay in place; the splice re-folds from history
+            report.add_deficit(Deficit(
+                target="bucket", table=dst_p.table, lanes=(slot.key,),
+                reason=(
+                    f"primary: bucket states for deferred lane "
+                    f"{slot.key!r} await the backfill splice"
+                ),
+            ))
         else:
             st_j, bm_j = _rebuild_bucket_lane(
                 vals_h[..., j], ts_h, cur_h, bucket, bsize
@@ -513,12 +631,14 @@ def _migrate_bucket(
             stats_out[..., j, :] = st_j
             bitmap_out[..., j] = bm_j
             if ring_lost:
-                report.exact = False
-                report.notes.append(
-                    f"primary: bucket states for new lane {slot.key!r} "
-                    "rebuilt from ring-retained rows only (older rows had "
-                    "aged out)"
-                )
+                report.add_deficit(Deficit(
+                    target="bucket", table=dst_p.table, lanes=(slot.key,),
+                    reason=(
+                        f"primary: bucket states for new lane {slot.key!r} "
+                        "rebuilt from ring-retained rows only (older rows "
+                        "had aged out)"
+                    ),
+                ))
     if not sharded:
         stats_out, bitmap_out, bucket = (
             stats_out[0], bitmap_out[0], bucket[0]
@@ -539,14 +659,42 @@ def _migrate_bucket(
 # ---------------------------------------------------------------------------
 
 
+def _make_deferrer(backfill, plan: RingPlan, ring_ix, report):
+    """Build the per-ring lane-deferral hook: a new lane that cannot be
+    synthesized is zero-filled and recorded as a deficit — but only when
+    the backfill source actually holds the table's history columns, so a
+    migration never silently defers into an unservable splice."""
+    if backfill is None:
+        return None
+
+    def defer(slot: LaneSlot, why: str) -> bool:
+        if not backfill.covers(plan.table, slot.expr):
+            return False
+        report.add_deficit(Deficit(
+            target="ring", table=plan.table, ring=ring_ix,
+            lanes=(slot.key,),
+            reason=f"{why} — deferred to the offline backfill splice",
+        ))
+        return True
+
+    return defer
+
+
 def migrate_state(
     diff: LayoutDiff,
     old_state: OnlineState,
     store,  # OnlineFeatureStore already switched to diff.new
+    backfill=None,  # repro.offline.backfill.BackfillSource (duck-typed)
 ) -> Tuple[OnlineState, MigrationReport]:
     """Transform ``old_state`` (laid out per ``diff.old``) into a state
     laid out per ``diff.new``.  Returns host-or-device arrays; the caller
-    places them (:meth:`OnlineFeatureStore._place_state`)."""
+    places them (:meth:`OnlineFeatureStore._place_state`).
+
+    ``backfill`` only changes *refusal* behaviour here: lanes that cannot
+    be synthesized from stored columns are deferred (zero-filled +
+    recorded in ``report.deficits``) when the source covers their table.
+    The actual splice happens in the caller, against the full report.
+    """
     sharded = diff.new.num_shards is not None
     S = diff.new.num_shards or 1
     report = MigrationReport(diff_summary=diff.summary())
@@ -563,7 +711,10 @@ def migrate_state(
         else:
             ring = _relane_ring(
                 diff.old.primary, diff.new.primary, old_state.ring,
-                sharded, report,
+                sharded, report, ring_ix=None,
+                defer=_make_deferrer(
+                    backfill, diff.new.primary, None, report
+                ),
             )
         if diff.bucket_carried:
             with tracer.span("migrate.carry", table="bucket"):
@@ -598,14 +749,17 @@ def migrate_state(
             ):
                 sec.append(
                     _relane_ring(
-                        src_plan, plan, old_state.sec[src], sharded, report
+                        src_plan, plan, old_state.sec[src], sharded,
+                        report, ring_ix=i,
+                        defer=_make_deferrer(backfill, plan, i, report),
                     )
                 )
             else:
                 sec.append(
                     _reroute_ring(
                         src_plan, plan, old_state.sec[src], store, sharded,
-                        report,
+                        report, ring_ix=i,
+                        defer=_make_deferrer(backfill, plan, i, report),
                     )
                 )
         for i in diff.dropped:

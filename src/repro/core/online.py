@@ -127,6 +127,9 @@ class OnlineFeatureStore:
         bucket_size: int = 64,
         secondary_num_keys: Optional[Dict[str, int]] = None,
         secondary_capacity: Optional[int] = None,
+        ttl: Optional[int] = None,
+        table_capacity: Optional[Dict[str, int]] = None,
+        table_ttl: Optional[Dict[str, int]] = None,
         layout: Optional[StoreLayout] = None,
     ):
         if layout is None:
@@ -140,6 +143,9 @@ class OnlineFeatureStore:
                 bucket_size=bucket_size,
                 secondary_num_keys=secondary_num_keys,
                 secondary_capacity=secondary_capacity,
+                ttl=ttl,
+                table_capacity=table_capacity,
+                table_ttl=table_ttl,
             )
         self._apply_layout(view, layout)
         self.state = self._init_state()
@@ -293,7 +299,7 @@ class OnlineFeatureStore:
 
     # -- live evolution -------------------------------------------------------
 
-    def adopt_layout(self, view, layout: StoreLayout):
+    def adopt_layout(self, view, layout: StoreLayout, backfill=None):
         """Evolve this live store to a new (view, layout) in place.
 
         Diffs the old plan against ``layout``
@@ -305,6 +311,14 @@ class OnlineFeatureStore:
         store stay valid: they re-trace against the evolved state on
         their next call, and their trace-time subsets are matched by
         structural key, not position.
+
+        ``backfill`` (a :class:`repro.offline.backfill.BackfillSource`)
+        closes the retention horizon: state the migration could not
+        reconstruct (aged-out ring rows, bucket states of lanes that
+        cannot be synthesized from stored columns) is re-derived from
+        offline history and spliced in *before* the new layout goes
+        live — so a deficient splice refuses atomically, exactly like a
+        refused migration.
 
         Returns the :class:`~repro.core.migrate.MigrationReport`.
         """
@@ -319,7 +333,15 @@ class OnlineFeatureStore:
         # the live plane exactly as it was — still serving.  The routing
         # attributes migrate_state reads (permutation, shard count) are
         # invariant across any diff diff_layouts accepts.
-        state, report = migrate.migrate_state(diff, self.state, self)
+        state, report = migrate.migrate_state(
+            diff, self.state, self, backfill=backfill
+        )
+        if backfill is not None and report.deficits:
+            # the splice also runs against the untouched store (routing /
+            # permutation attrs are diff-invariant); it raises — leaving
+            # the plane serving the old layout — when history cannot
+            # cover a deficit
+            state = backfill.splice(diff, state, report, self, view)
         self._apply_layout(view, layout)
         with tracer.span("migrate.place", kind="device") as sp:
             self.state = self._place_state(state)
@@ -508,27 +530,33 @@ class OnlineFeatureStore:
 
     # -- window masks -------------------------------------------------------------
 
-    def _window_span(self, wa: WindowAgg) -> int:
+    def _window_span(self, wa: WindowAgg, ttl: Optional[int] = None) -> int:
         """Effective RANGE lookback: the window size, clamped by the
-        layout's TTL retention policy when one is set (rows older than
-        the TTL are expired, so no window — RANGE or ROWS — may see
-        them; ROWS windows apply the same cutoff as an eligibility
-        mask in :meth:`_window_mask`)."""
-        if self._ttl is not None:
-            return min(wa.window.size, self._ttl)
+        TTL retention policy when one is set (rows older than the TTL
+        are expired, so no window — RANGE or ROWS — may see them; ROWS
+        windows apply the same cutoff as an eligibility mask in
+        :meth:`_window_mask`).  ``ttl`` is the governing ring's policy;
+        ``None`` falls back to the primary's."""
+        ttl = self._ttl if ttl is None else ttl
+        if ttl is not None:
+            return min(wa.window.size, ttl)
         return wa.window.size
 
-    def _window_mask(self, wa: WindowAgg, ts_buf, valid, ts_q) -> jnp.ndarray:
+    def _window_mask(
+        self, wa: WindowAgg, ts_buf, valid, ts_q,
+        ttl: Optional[int] = None,
+    ) -> jnp.ndarray:
+        ttl = self._ttl if ttl is None else ttl
         not_future = ts_buf <= ts_q[:, None]
         if wa.window.mode == "range":
-            lo = ts_q - jnp.int32(self._window_span(wa)) + 1
+            lo = ts_q - jnp.int32(self._window_span(wa, ttl)) + 1
             return valid & not_future & (ts_buf >= lo[:, None])
         # rows mode: last (size-1) eligible rows; the request row is the
         # size-th.  Rank from the newest backwards.  TTL-expired rows are
         # not eligible (the retention policy is window-mode-independent).
         eligible = valid & not_future
-        if self._ttl is not None:
-            eligible &= ts_buf > (ts_q - jnp.int32(self._ttl))[:, None]
+        if ttl is not None:
+            eligible &= ts_buf > (ts_q - jnp.int32(ttl))[:, None]
         newer = jnp.cumsum(eligible[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1]
         rank_from_new = newer - eligible.astype(jnp.int32)  # 0 == newest
         return eligible & (rank_from_new < wa.window.size - 1)
@@ -697,9 +725,15 @@ class OnlineFeatureStore:
                 )
             for rank, t in enumerate(wa.union):
                 ts_t, lanes_t, valid_t = sec_gathers[t]
-                lane_ix = self._ring_lane_of[self._union_ring_ix[t]]
+                ring_ix = self._union_ring_ix[t]
+                lane_ix = self._ring_lane_of[ring_ix]
                 g_t = lanes_t[..., lane_ix[wa.arg.key]]
-                m_t = self._window_mask(wa, ts_t, valid_t, ts_q)
+                # union rows expire on their *own* ring's TTL when the
+                # layout sets one (per-table knob); else the primary's
+                m_t = self._window_mask(
+                    wa, ts_t, valid_t, ts_q,
+                    ttl=self._ring_plans[ring_ix].ttl,
+                )
                 acc = spec.combine(
                     acc, spec.fold_rows(g_t, ts_t, m_t, jnp.int32(rank))
                 )

@@ -154,7 +154,12 @@ class ScenarioPlane:
 
     # -- live evolution ----------------------------------------------------------
 
-    def evolve(self, new_views: Iterable[FeatureView], **plan_overrides):
+    def evolve(
+        self,
+        new_views: Iterable[FeatureView],
+        backfill=None,
+        **plan_overrides,
+    ):
         """Hot-swap the plane to serve ``new_views`` — a state migration,
         not a rebuild.
 
@@ -174,7 +179,11 @@ class ScenarioPlane:
         Returns the :class:`~repro.core.migrate.MigrationReport`; within
         the retention horizon the migrated plane is bit-identical to a
         cold rebuild + full replay (``report.exact``), which the
-        hot-deploy gate asserts.
+        hot-deploy gate asserts.  ``backfill`` (a
+        :class:`repro.offline.backfill.BackfillSource`) extends that
+        bit-exactness *beyond* the horizon: aged-out ring rows and
+        bucket states are re-derived from offline history and spliced
+        into the migrating state before the new layout goes live.
         """
         from repro.obs import get_telemetry
 
@@ -185,7 +194,9 @@ class ScenarioPlane:
         with tracer.span("hot_deploy.plan", views=len(new_views)):
             new_layout = plan_layout(new_views, raw_lanes=True, **kwargs)
             new_merged = merge_views(new_views, name=self.merged.name)
-        report = self.store.adopt_layout(new_merged, new_layout)
+        report = self.store.adopt_layout(
+            new_merged, new_layout, backfill=backfill
+        )
         old_views = self.views
         self._plan_kwargs = kwargs
         self.layout = new_layout

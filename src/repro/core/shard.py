@@ -135,6 +135,9 @@ class ShardedOnlineStore(OnlineFeatureStore):
         bucket_size: int = 64,
         secondary_num_keys: Optional[Dict[str, int]] = None,
         secondary_capacity: Optional[int] = None,
+        ttl: Optional[int] = None,
+        table_capacity: Optional[Dict[str, int]] = None,
+        table_ttl: Optional[Dict[str, int]] = None,
         mesh: Optional[Mesh] = None,
         hash_routing: bool = True,
         layout: Optional[StoreLayout] = None,
@@ -152,6 +155,9 @@ class ShardedOnlineStore(OnlineFeatureStore):
                 hash_routing=hash_routing,
                 secondary_num_keys=secondary_num_keys,
                 secondary_capacity=secondary_capacity,
+                ttl=ttl,
+                table_capacity=table_capacity,
+                table_ttl=table_ttl,
             )
         if layout.num_shards is None:
             raise ValueError(

@@ -43,6 +43,9 @@ EXPECTED_METRICS: Dict[str, Tuple[str, str, Tuple[str, ...]]] = {
     "ring_occupancy_ratio": ("gauge", "1", ("table", "placement")),
     "ring_evicted_rows_total": ("gauge", "1", ("table", "placement")),
     "hot_deploys_total": ("counter", "1", ("service",)),
+    "backfill_rows_total": ("counter", "1", ("table",)),
+    "export_rows_total": ("counter", "1", ("view",)),
+    "export_freshness_seconds": ("histogram", "s", ("view",)),
 }
 
 # populated only when a layout sets a TTL — optional in the golden set
@@ -54,6 +57,7 @@ EXPECTED_SPAN_NAMES = {
     "request", "query.route", "query.compute", "query.scatter", "ingest",
     "hot_deploy", "hot_deploy.plan", "hot_deploy.compile",
     "migrate", "migrate.diff", "migrate.carry", "migrate.place",
+    "backfill", "backfill.ring", "backfill.bucket", "export",
 }
 
 
@@ -117,6 +121,52 @@ def _workload(tel):
             now += 250
         router.drain(now_us=now)
         svc.store.record_gauges()
+
+        # offline bridge: a hot deploy needing aged-out history (40
+        # rows/key vs 8-row rings) spliced from offline storage, plus a
+        # training-set export — the backfill + export metric families
+        from repro.core import ScenarioPlane, Signature
+        from repro.data.synthetic import MULTITABLE_DB, multitable_stream
+        from repro.offline import BackfillSource, export_training_set
+        from repro.scenarios import multi_scenario_views, multi_table_view
+
+        tabs = multitable_stream(
+            np.random.default_rng(5), 160, num_accounts=4,
+            num_merchants=4, t_max=20_000,
+        )
+        mviews = multi_scenario_views()[:2]
+        sig = FeatureView(
+            name="merchant_mix",
+            features={
+                "sig_cnt": w_count(
+                    Signature((Col("merchant"),), bits=8),
+                    range_window(3600, bucket=64),
+                ),
+            },
+            database=MULTITABLE_DB,
+        )
+        plane = ScenarioPlane(
+            mviews, num_keys=4, capacity=8, num_buckets=512,
+            bucket_size=64, secondary_num_keys={"merchants": 4},
+        )
+        for t in plane.store._sec_names:
+            kc = MULTITABLE_DB.table(t).key
+            cols = tabs[t]
+            o = np.lexsort((cols["ts"], cols[kc]))
+            plane.ingest_table(t, {c: v[o] for c, v in cols.items()})
+        tx = tabs["transactions"]
+        o = np.lexsort((tx["ts"], tx["account"]))
+        plane.ingest({c: v[o] for c, v in tx.items()})
+        report = plane.evolve(
+            mviews + [sig],
+            backfill=BackfillSource(MULTITABLE_DB, tabs),
+            capacity=32,
+        )
+        assert report.exact and report.backfilled, report.describe()
+        export_training_set(
+            multi_table_view(), tx, n=8,
+            secondary={t: c for t, c in tabs.items() if t != "transactions"},
+        )
     return tel
 
 

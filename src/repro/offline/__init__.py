@@ -1,0 +1,39 @@
+"""Offline half of the feature lifecycle — backfill bridge + training-set
+export (FeatInsight's offline scenario, ROADMAP item 3).
+
+Two consumers of the same offline history (:class:`BackfillSource`):
+
+* **Backfill** (:mod:`repro.offline.backfill`): re-derives aged-out ring
+  rows and bucket pre-aggregate states from per-table history and splices
+  them into a migrating plane, so hot deployments that need state beyond
+  the rings' retention horizon stay bit-exact instead of refusing or
+  reporting ``exact=False``.
+* **Export** (:mod:`repro.offline.export`): point-in-time-correct
+  training sets from the *same* :class:`~repro.core.view.FeatureView`
+  definitions that serve online, verified row-for-row against an online
+  replay — training/serving consistency as a generated artifact.
+"""
+
+from repro.offline.backfill import (
+    BackfillAction,
+    BackfillPlan,
+    BackfillSource,
+)
+from repro.offline.export import (
+    ExportCheck,
+    TrainingSet,
+    export_training_set,
+    sample_label_rows,
+    verify_export,
+)
+
+__all__ = [
+    "BackfillAction",
+    "BackfillPlan",
+    "BackfillSource",
+    "ExportCheck",
+    "TrainingSet",
+    "export_training_set",
+    "sample_label_rows",
+    "verify_export",
+]

@@ -216,7 +216,11 @@ class Scenario:
     ``hot_deployed`` names the views this scenario deploys onto the LIVE
     plane via ``MultiScenarioService.hot_deploy`` (rather than at launch)
     — the catalog's deploy history records them as hot deploys, matching
-    what the example actually does.
+    what the example actually does.  ``exported`` names the views whose
+    example also exports a point-in-time training set from the same
+    definitions (``repro.offline.export_training_set``) — the catalog's
+    deploy history records that lineage under an ``export:`` service,
+    exactly as a registry-carrying export call would.
     """
 
     name: str
@@ -225,6 +229,7 @@ class Scenario:
     run: str
     views: Callable[[], List[FeatureView]]
     hot_deployed: tuple = ()
+    exported: tuple = ()
 
 
 def _one(builder: Callable[[], FeatureView]) -> Callable[[], List[FeatureView]]:
@@ -263,6 +268,7 @@ SCENARIOS: Dict[str, Scenario] = {
             ),
             run="PYTHONPATH=src python examples/multi_table_fraud.py",
             views=_one(multi_table_view),
+            exported=("fraud_multitable",),
         ),
         Scenario(
             name="sharded_serving",

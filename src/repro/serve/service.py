@@ -368,7 +368,7 @@ class MultiScenarioService(FeatureService):
     def scenarios(self) -> List[str]:
         return self.plane.scenarios
 
-    def hot_deploy(self, view: FeatureView, **plan_overrides):
+    def hot_deploy(self, view: FeatureView, backfill=None, **plan_overrides):
         """Deploy one more scenario onto the LIVE plane — no rebuild, no
         re-ingest, no downtime for the scenarios already serving.
 
@@ -382,6 +382,11 @@ class MultiScenarioService(FeatureService):
         (the view is registered first if the registry does not know it),
         and a fresh per-scenario :class:`ServiceStats` starts counting.
 
+        ``backfill`` (a :class:`repro.offline.backfill.BackfillSource`)
+        lets the deployment reach beyond the rings' retention horizon:
+        aged-out state the migration cannot reconstruct is re-derived
+        from offline history and spliced in, keeping ``report.exact``.
+
         Returns the :class:`~repro.core.migrate.MigrationReport`.
         """
         if view.name in self.plane.views:
@@ -394,7 +399,8 @@ class MultiScenarioService(FeatureService):
             "hot_deploy", service=self.name, scenario=view.name
         ):
             report = self.plane.evolve(
-                list(self.plane.views.values()) + [view], **plan_overrides
+                list(self.plane.views.values()) + [view],
+                backfill=backfill, **plan_overrides,
             )
         tel.metrics.counter(
             "hot_deploys_total", "scenarios hot-deployed onto live planes",

@@ -1,0 +1,322 @@
+"""Offline backfill bridge + point-in-time training-set export (ISSUE 7).
+
+Two contracts under test:
+
+* **Export**: ``export_training_set`` over a multi-table view (LAST JOINs
+  + a WINDOW UNION stream) equals an online replay row-for-row — at label
+  times *beyond* the online rings' retention horizon, across shard
+  counts — because both sides answer point-in-time per row.
+* **Backfill**: migrations that used to refuse or report ``exact=False``
+  because history aged out of the rings (capacity grow after wrap; a new
+  hash lane underivable from stored f32 columns) complete **bit-exactly**
+  when given a :class:`~repro.offline.BackfillSource`, verified against a
+  cold rebuild + full replay.  Unsynthesizable backfills still refuse
+  loudly, naming the view and features.
+
+Runs multi-device via conftest's host-platform device count.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    Col,
+    FeatureView,
+    ScenarioPlane,
+    Signature,
+    range_window,
+    w_count,
+    w_sum,
+)
+from repro.core.layout import plan_layout
+from repro.data.synthetic import MULTITABLE_DB, multitable_stream
+from repro.offline import BackfillSource, export_training_set, verify_export
+from repro.scenarios import multi_scenario_views, multi_table_view
+
+K = 16            # accounts: few keys so rings wrap fast
+NM = 8            # merchants
+ROWS = 600
+T_MAX = 60_000    # t_max/bucket_size=937 < num_buckets: no bucket wrap
+SMALL_CAP = 16    # << rows/key (~37): primary rings age out most rows
+GROWN_CAP = 64
+SEC_NK = {"merchants": NM}
+KW = dict(
+    num_keys=K, capacity=SMALL_CAP, num_buckets=1024, bucket_size=64,
+    secondary_num_keys=SEC_NK,
+)
+
+
+@pytest.fixture(scope="module")
+def tabs():
+    rng = np.random.default_rng(17)
+    return multitable_stream(
+        rng, ROWS, num_accounts=K, num_merchants=NM, t_max=T_MAX
+    )
+
+
+def bykey(d, kc):
+    o = np.lexsort((d["ts"], d[kc]))
+    return {c: v[o] for c, v in d.items()}
+
+
+def warm(plane, tabs):
+    sec = {t: c for t, c in tabs.items() if t != "transactions"}
+    for t in plane.store._sec_names:
+        kc = MULTITABLE_DB.table(t).key
+        plane.ingest_table(t, bykey(sec[t], kc))
+    plane.ingest(bykey(tabs["transactions"], "account"))
+
+
+def states_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a.store.state)
+    lb = jax.tree_util.tree_leaves(b.store.state)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb)
+    )
+
+
+def sig_view() -> FeatureView:
+    """A view whose window argument is a hash (Signature) lane — never
+    synthesizable from stored f32 columns, so deploying it onto a warm
+    plane used to be refused outright."""
+    w1h = range_window(3600, bucket=64)
+    return FeatureView(
+        name="merchant_mix",
+        features={
+            "sig_cnt_1h": w_count(Signature((Col("merchant"),), bits=8), w1h),
+            "sig_sum_1h": w_sum(Signature((Col("merchant"),), bits=8), w1h),
+        },
+        database=MULTITABLE_DB,
+    )
+
+
+# ---------------------------------------------------------------------------
+# training-set export == online replay
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def training(tabs):
+    view = multi_table_view()
+    secondary = {t: c for t, c in tabs.items() if t != "transactions"}
+    return export_training_set(
+        view, tabs["transactions"], n=64, seed=3, secondary=secondary,
+    )
+
+
+def test_labels_straddle_retention_horizon(tabs, training):
+    """The sampled label rows must include rows the online rings have
+    aged out by end of replay — otherwise the export test would only
+    cover the easy, still-retained regime."""
+    tx = tabs["transactions"]
+    key, ts = tx["account"], tx["ts"]
+    newer = np.array([
+        int(((key == key[i]) & (ts > ts[i])).sum()) for i in training.rows
+    ])
+    assert (newer >= SMALL_CAP).any(), (
+        "no label row beyond the retention horizon; shrink capacity or "
+        "grow the stream"
+    )
+    assert (newer < SMALL_CAP).any(), "no label row inside the horizon"
+
+
+@pytest.mark.parametrize("shards", [1, 4, 8])
+def test_export_matches_online_replay(tabs, training, shards):
+    view = multi_table_view()
+    secondary = {t: c for t, c in tabs.items() if t != "transactions"}
+    check = verify_export(
+        view, tabs["transactions"], training,
+        num_keys=K,
+        capacity=SMALL_CAP,
+        secondary=secondary,
+        secondary_num_keys=SEC_NK,
+        num_shards=None if shards == 1 else shards,
+    )
+    assert check.passed, check.summary()
+    assert check.label_rows == len(training)
+
+
+# ---------------------------------------------------------------------------
+# backfilled migrations: previously inexact / refused -> bit-exact
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_grow_inexact_without_backfill(tabs):
+    views = multi_scenario_views()
+    plane = ScenarioPlane(views[:2], num_shards=4, **KW)
+    warm(plane, tabs)
+    report = plane.evolve(views[:3], capacity=GROWN_CAP)
+    assert not report.exact
+    assert report.deficits, "expected an aged-out-history deficit"
+
+
+@pytest.mark.parametrize("shards", [None, 4])
+def test_capacity_grow_backfill_bit_exact(tabs, shards):
+    views = multi_scenario_views()
+    plane = ScenarioPlane(views[:2], num_shards=shards, **KW)
+    warm(plane, tabs)
+    src = BackfillSource(MULTITABLE_DB, tabs)
+    report = plane.evolve(views[:3], backfill=src, capacity=GROWN_CAP)
+    assert report.exact, report.notes
+    assert report.backfilled, "expected spliced deficits in the report"
+
+    cold = ScenarioPlane(
+        views[:3], num_shards=shards, **dict(KW, capacity=GROWN_CAP)
+    )
+    warm(cold, tabs)
+    assert states_equal(plane, cold), "backfilled state != rebuild+replay"
+
+    probe = {c: v[:16] for c, v in tabs["transactions"].items()}
+    hot_q = plane.query(views[2].name, probe)
+    cold_q = cold.query(views[2].name, probe)
+    for f, v in hot_q.items():
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(cold_q[f]))
+
+
+def test_refused_hash_lane_backfill_bit_exact(tabs):
+    views = multi_scenario_views()
+    target = views[:2] + [sig_view()]
+    plane = ScenarioPlane(views[:2], num_shards=4, **KW)
+    warm(plane, tabs)
+
+    # without a source: refused outright (hash lanes are unsynthesizable)
+    with pytest.raises(ValueError, match="rebuild"):
+        plane.evolve(target, capacity=GROWN_CAP)
+
+    src = BackfillSource(MULTITABLE_DB, tabs)
+    report = plane.evolve(target, backfill=src, capacity=GROWN_CAP)
+    assert report.exact, report.notes
+    assert report.backfilled
+
+    cold = ScenarioPlane(
+        target, num_shards=4, **dict(KW, capacity=GROWN_CAP)
+    )
+    warm(cold, tabs)
+    assert states_equal(plane, cold), "backfilled state != rebuild+replay"
+
+    probe = {c: v[:16] for c, v in tabs["transactions"].items()}
+    hot_q = plane.query("merchant_mix", probe)
+    cold_q = cold.query("merchant_mix", probe)
+    for f, v in hot_q.items():
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(cold_q[f]))
+
+
+# ---------------------------------------------------------------------------
+# unsynthesizable backfills refuse loudly, naming the offender
+# ---------------------------------------------------------------------------
+
+
+def test_splice_refuses_missing_column_naming_view(tabs):
+    views = multi_scenario_views()
+    plane = ScenarioPlane(views[:2], num_shards=4, **KW)
+    warm(plane, tabs)
+    # history lacks 'amount' — the primary ring rebuild cannot re-derive
+    # its lanes, so the splice must refuse (atomically, before anything
+    # goes live) and say which view is blocked and what is missing
+    crippled = {
+        t: {c: v for c, v in cols.items() if c != "amount"}
+        for t, cols in tabs.items()
+    }
+    src = BackfillSource(MULTITABLE_DB, crippled)
+    with pytest.raises(ValueError) as ei:
+        plane.evolve(views[:3], backfill=src, capacity=GROWN_CAP)
+    msg = str(ei.value)
+    assert "cannot backfill" in msg
+    assert "amount" in msg
+    assert "extend the backfill source" in msg
+
+
+def test_splice_refuses_missing_table(tabs):
+    views = multi_scenario_views()
+    plane = ScenarioPlane(views[:2], num_shards=4, **KW)
+    warm(plane, tabs)
+    src = BackfillSource(
+        MULTITABLE_DB,
+        {t: c for t, c in tabs.items() if t != "transactions"},
+    )
+    with pytest.raises(ValueError, match="no history for table"):
+        plane.evolve(views[:3], backfill=src, capacity=GROWN_CAP)
+
+
+def test_source_validates_tables_and_columns(tabs):
+    with pytest.raises(KeyError):
+        BackfillSource(MULTITABLE_DB, {"nope": tabs["transactions"]})
+    with pytest.raises(ValueError, match="required"):
+        BackfillSource(
+            MULTITABLE_DB,
+            {"transactions": {
+                c: v for c, v in tabs["transactions"].items() if c != "ts"
+            }},
+        )
+    with pytest.raises(ValueError, match="ragged"):
+        BackfillSource(
+            MULTITABLE_DB,
+            {"transactions": dict(
+                tabs["transactions"], amount=tabs["transactions"]["amount"][:5]
+            )},
+        )
+
+
+# ---------------------------------------------------------------------------
+# per-table retention knobs (satellite: planner capacity/TTL overrides)
+# ---------------------------------------------------------------------------
+
+
+def test_per_table_capacity_selective_backfill(tabs):
+    """A short-retention table triggers backfill where a long one carries
+    verbatim: only the wires ring (capacity 4, wrapped) is deficient on a
+    grow; the roomy primary ring migrates exactly with no backfill."""
+    views = multi_scenario_views()
+    kw = dict(KW, capacity=128, table_capacity={"wires": 4})
+    plane = ScenarioPlane(views[:2], num_shards=4, **kw)
+    warm(plane, tabs)
+
+    probe_kw = dict(capacity=128, table_capacity={"wires": 32})
+    report = plane.evolve(views[:2], **probe_kw)
+    assert not report.exact
+    assert all("wires" in d.describe() for d in report.deficits), (
+        report.describe()
+    )
+
+    plane2 = ScenarioPlane(views[:2], num_shards=4, **kw)
+    warm(plane2, tabs)
+    src = BackfillSource(MULTITABLE_DB, tabs)
+    report2 = plane2.evolve(views[:2], backfill=src, **probe_kw)
+    assert report2.exact, report2.notes
+    assert all("wires" in b for b in report2.backfilled)
+
+    cold = ScenarioPlane(
+        views[:2], num_shards=4,
+        **dict(KW, capacity=128, table_capacity={"wires": 32}),
+    )
+    warm(cold, tabs)
+    assert states_equal(plane2, cold)
+
+
+def test_planner_knobs_land_on_rings_and_validate():
+    views = multi_scenario_views()
+    lay = plan_layout(
+        views, num_keys=K, capacity=32, num_buckets=1024,
+        secondary_num_keys=SEC_NK,
+        table_capacity={"wires": 8, "transactions": 64},
+        table_ttl={"wires": 4000},
+    )
+    assert lay.primary.capacity == 64 and lay.primary.ttl is None
+    by_table = {rp.table: rp for rp in lay.tables}
+    assert by_table["wires"].capacity == 8
+    assert by_table["wires"].ttl == 4000
+    assert all(
+        rp.capacity == 32 for t, rp in by_table.items() if t != "wires"
+    )
+    with pytest.raises(ValueError, match="unknown table"):
+        plan_layout(
+            views, num_keys=K, num_buckets=1024, secondary_num_keys=SEC_NK,
+            table_capacity={"nope": 8},
+        )
+    with pytest.raises(ValueError, match="unknown table"):
+        plan_layout(
+            views, num_keys=K, num_buckets=1024, secondary_num_keys=SEC_NK,
+            table_ttl={"nope": 60},
+        )
