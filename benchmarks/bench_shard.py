@@ -28,6 +28,7 @@ if __name__ == "__main__":
     force_host_devices(8)
 
 import time
+from typing import Dict
 
 import jax
 import numpy as np
@@ -131,6 +132,7 @@ def run() -> None:
 
     multi_scenario_section()
     wire_to_wire_section()
+    device_ab_section()
 
 
 def wire_to_wire_section() -> None:
@@ -405,6 +407,243 @@ def multi_scenario_section() -> None:
         "shard", "multi3_plane_speedup", t_iso / max(t_plane, 1e-9), "x",
         "exactness gate: plane == isolated bit-identical",
     )
+
+
+def route_compile_budget_check(store, max_caps_per_bucket: int = 2) -> int:
+    """Fused-program compile budget: per (program, mode, batch-shape
+    bucket) the device path may trace at most ``max_caps_per_bucket``
+    executables — the optimistic per-shard capacity plus the always-safe
+    overflow rerun.  More means the capacity guess is churning and every
+    skewed batch pays a fresh XLA compile.  Returns the fused trace count.
+    """
+    fused = [k for k in store._seen_traces if isinstance(k[2], tuple)]
+    per_bucket: Dict[tuple, set] = {}
+    for name, mode, (m, cap) in fused:
+        per_bucket.setdefault((name, mode, m), set()).add(cap)
+    for key, caps in sorted(per_bucket.items()):
+        if len(caps) > max_caps_per_bucket:
+            raise AssertionError(
+                f"fused route program compiled {len(caps)} capacities "
+                f"{sorted(caps)} for bucket {key} — budget is "
+                f"{max_caps_per_bucket} (optimistic + overflow)"
+            )
+    return len(fused)
+
+
+def device_ab_section() -> Dict:
+    """Host-routed vs device-routed request path A/B — the PR's claim.
+
+    The SAME request stream (same scheduler, same injected clock) runs
+    through two identical deployments, one ``device_routing=False`` (host
+    oracle), one ``device_routing=True`` (fused on-mesh program), at
+    shards {1, 4, 8}, single- and multi-scenario.  Hard gates:
+
+    * exactness — device answers == host answers bit-for-bit, pump by
+      pump, scenario by scenario (the non-negotiable);
+    * one fused dispatch per pump — ``route.device`` span count equals
+      the batch count (a mixed 3-scenario batch is still ONE dispatch);
+    * compile budget — :func:`route_compile_budget_check`.
+
+    Per-stage span timings (p50/p95 of ``query.route`` /
+    ``query.compute`` / ``route.device`` / ``query.scatter``) for both
+    flavours are persisted machine-readably to
+    ``benchmarks/BENCH_route.json``; the host-side routing share
+    (route + scatter spans) is the number the device path exists to
+    shrink, and ``device_wins`` records whether it did at each point.
+    """
+    import json
+    import os
+
+    from repro.core import Col, FeatureView, range_window, rows_window
+    from repro.core import w_count, w_mean, w_sum
+    from repro.obs import Telemetry, use_telemetry
+    from repro.serve.router import ShardRouter
+    from repro.serve.service import BatchScheduler, FeatureService
+
+    n_req = common.scaled(768, 120)
+    view = fraud_view()
+    amt = Col("amount")
+    w1 = range_window(600, bucket=64)
+    multi_views = [
+        FeatureView(
+            "ab_fraud", view.schema,
+            {"s": w_sum(amt, w1), "c5": w_count(amt, rows_window(5))},
+        ),
+        FeatureView("ab_risk", view.schema, {"m": w_mean(amt, w1)}),
+        FeatureView(
+            "ab_velocity", view.schema, {"c8": w_count(amt, rows_window(8))},
+        ),
+    ]
+
+    def drive(svc, scenarios):
+        router = ShardRouter(
+            svc,
+            BatchScheduler(
+                buckets=(1, 4, 16, 64), max_batch=64, max_wait_us=2_000
+            ),
+        )
+        r = np.random.default_rng(11)
+        outs = []
+        now = 0
+        for i in range(n_req):
+            row = dict(
+                card=int(r.integers(0, NUM_CARDS)),
+                ts=int(T_MAX + 1 + i),
+                amount=float(r.gamma(1.5, 60.0)),
+                mcc=int(r.integers(0, 32)),
+                device=int(r.integers(0, 8)),
+                geo=int(r.integers(0, 16)),
+            )
+            router.submit(
+                row, now_us=now,
+                scenario=(
+                    scenarios[i % len(scenarios)] if scenarios else None
+                ),
+            )
+            now += 150
+            got = router.pump(now_us=now)
+            if got is not None:
+                outs.append(got)
+        got = router.drain(now_us=now)
+        if got is not None:
+            outs.append(got)
+        return outs, router
+
+    def span_stat(snap, name, stat):
+        for s in snap["metrics"].get("span_seconds", {"series": ()})[
+            "series"
+        ]:
+            if s["labels"].get("name") == name:
+                return (
+                    int(s["count"])
+                    if stat == "count"
+                    else float(s[stat]) * 1e3
+                )
+        return 0
+    results: Dict = {
+        "devices": len(jax.devices()),
+        "smoke": bool(common.SMOKE),
+        "requests": n_req,
+        "points": {},
+    }
+    for flavour in ("single", "multi"):
+        scenarios = [v.name for v in multi_views] if flavour == "multi" else None
+        for S in (1, 4, 8):
+            point: Dict = {}
+            outs_by_path: Dict[str, list] = {}
+            for path in ("host", "device"):
+                tel = Telemetry(max_series=512)
+                with use_telemetry(tel):
+                    if flavour == "single":
+                        svc = FeatureService.build(
+                            f"ab_{path}_s{S}", view, num_keys=NUM_CARDS,
+                            sharded=True, num_shards=S, capacity=256,
+                            num_buckets=512, bucket_size=64,
+                            device_routing=(path == "device"),
+                        )
+                    else:
+                        svc = FeatureService.build_multi(
+                            f"ab_{path}_multi_s{S}", multi_views,
+                            num_keys=NUM_CARDS, sharded=True, num_shards=S,
+                            capacity=256, num_buckets=512, bucket_size=64,
+                            device_routing=(path == "device"),
+                        )
+                    outs, _router = drive(svc, scenarios)
+                    snap = tel.snapshot()
+                outs_by_path[path] = outs
+                host_ms = (
+                    span_stat(snap, "query.route", "p50")
+                    + span_stat(snap, "query.scatter", "p50")
+                )
+                point[path] = {
+                    "batches": int(svc.stats.batches),
+                    "route_p50_ms": span_stat(snap, "query.route", "p50"),
+                    "route_p95_ms": span_stat(snap, "query.route", "p95"),
+                    "compute_p50_ms": span_stat(
+                        snap, "query.compute", "p50"
+                    ),
+                    "compute_p95_ms": span_stat(
+                        snap, "query.compute", "p95"
+                    ),
+                    "route_device_p50_ms": span_stat(
+                        snap, "route.device", "p50"
+                    ),
+                    "route_device_p95_ms": span_stat(
+                        snap, "route.device", "p95"
+                    ),
+                    "scatter_p50_ms": span_stat(
+                        snap, "query.scatter", "p50"
+                    ),
+                    "scatter_p95_ms": span_stat(
+                        snap, "query.scatter", "p95"
+                    ),
+                    "host_route_scatter_p50_ms": host_ms,
+                    "fused_dispatches": span_stat(
+                        snap, "route.device", "count"
+                    ),
+                    "request_p50_ms": svc.stats.request_p50_ms,
+                    "request_p95_ms": svc.stats.request_p95_ms,
+                }
+                if path == "device":
+                    # one fused dispatch per pumped batch, even mixed
+                    assert point[path]["fused_dispatches"] == int(
+                        svc.stats.batches
+                    ), (
+                        f"{flavour} S={S}: {point[path]['fused_dispatches']}"
+                        f" fused dispatches != {svc.stats.batches} batches"
+                    )
+                    point["fused_traces"] = route_compile_budget_check(
+                        svc.store
+                    )
+                else:
+                    assert point[path]["fused_dispatches"] == 0
+            # exactness gate: identical streams, bit-identical answers
+            a, b = outs_by_path["host"], outs_by_path["device"]
+            assert len(a) == len(b), (len(a), len(b))
+            for i, (oa, ob) in enumerate(zip(a, b)):
+                if scenarios is None:
+                    oa, ob = {"": oa}, {"": ob}
+                assert set(oa) == set(ob)
+                for s in oa:
+                    for f in oa[s]:
+                        np.testing.assert_array_equal(
+                            oa[s][f], ob[s][f],
+                            err_msg=f"{flavour} S={S} pump={i} {s}/{f}",
+                        )
+            point["device_wins"] = bool(
+                point["device"]["host_route_scatter_p50_ms"]
+                < point["host"]["host_route_scatter_p50_ms"]
+            )
+            tag = f"{flavour}_s{S}"
+            results["points"][tag] = point
+            emit(
+                "shard", f"ab_{tag}_host_route_scatter_p50_ms",
+                point["host"]["host_route_scatter_p50_ms"], "ms",
+                "host-routed flavour: host route+scatter share",
+            )
+            emit(
+                "shard", f"ab_{tag}_device_route_scatter_p50_ms",
+                point["device"]["host_route_scatter_p50_ms"], "ms",
+                f"device flavour; wins={point['device_wins']}; "
+                "exactness gate passed",
+            )
+    out_path = os.path.join(os.path.dirname(__file__), "BENCH_route.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("shard", "bench_route_json", 1, "file", out_path)
+    # the device path must shrink the host routing share once routing is
+    # real work (S >= 4); at S=1 both flavours route trivially.  The
+    # margin is 4-10x in practice, so this holds even at smoke sizes.
+    for flavour in ("single", "multi"):
+        for S in (4, 8):
+            p = results["points"][f"{flavour}_s{S}"]
+            assert p["device_wins"], (
+                f"device path did not win host route+scatter at "
+                f"{flavour} S={S} "
+                f"(host {p['host']['host_route_scatter_p50_ms']:.3f} ms vs "
+                f"device {p['device']['host_route_scatter_p50_ms']:.3f} ms)"
+            )
+    return results
 
 
 if __name__ == "__main__":

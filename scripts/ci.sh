@@ -35,6 +35,24 @@ python -m repro.offline.check
 # isolated stores, bit-exactness gated) so the deploy path and cross-view
 # routing can't silently rot
 python -m benchmarks.run --smoke
+# device-routing A/B gate: bench_shard's host-vs-device section (part of
+# the benchmark smoke above) hard-gates bit-exactness, one fused dispatch
+# per batch, and the fused compile budget, and persists per-stage span
+# timings machine-readably; re-check the artifact here so a silently
+# skipped section cannot pass CI, and re-assert the headline claim —
+# device routing shrinks the host route+scatter share at shards >= 4
+python - <<'PY'
+import json
+data = json.load(open("benchmarks/BENCH_route.json"))
+pts = data["points"]
+want = {f"{f}_s{s}" for f in ("single", "multi") for s in (1, 4, 8)}
+assert set(pts) == want, sorted(pts)
+for tag in sorted(want):
+    assert pts[tag]["device"]["fused_dispatches"] == pts[tag]["device"]["batches"], tag
+    if tag.endswith(("_s4", "_s8")):
+        assert pts[tag]["device_wins"], tag
+print(f"BENCH_route.json OK: {len(pts)} A/B points, device wins at S>=4")
+PY
 # compile-time budget: offline MIN/MAX at N=5k must compile in < 30 s (the
 # seed's sparse-table formulation took ~150 s; keep the blowup dead)
 python -c "from benchmarks.bench_window_agg import compile_budget_check; compile_budget_check(5000, 30.0)"

@@ -1,5 +1,12 @@
 """Integer mix hashing in pure JAX (int32 lane pairs — no x64 requirement).
 
+Both directions of the host/device mirror matter now: the sharded plane's
+*ingest* routing stays host-side numpy (``mix32_np``), while the serving
+*query* path routes on device (``KeyPermutation.device_call``) so a whole
+request batch enters one fused program — shard id, per-shard rank, padded
+grid and gather-back all computed on the mesh.  The two are bit-exact by
+construction (identical constants, identical masked-shift formulation).
+
 TPUs have no 64-bit integer lanes worth using; we emulate a splitmix-style
 64-bit mixer on (hi, lo) int32 pairs so feature signatures hash identically
 on CPU (tests), TPU (target), and inside Pallas kernels.  All functions are
@@ -137,3 +144,44 @@ class KeyPermutation:
             out[bad] = self._once(out[bad])
             bad = out >= self.upper
         return out.reshape(np.shape(key))
+
+    # -- device mirror (the fused on-mesh request path) ---------------------
+
+    def _once_device(self, x: jnp.ndarray) -> jnp.ndarray:
+        """jnp mirror of :meth:`_once` — bit-exact because every Feistel
+        half stays below ``2**half`` and mix32 / mix32_np agree on the low
+        ``half`` bits (two's-complement masking is width-independent)."""
+        left = x >> self.half
+        right = x & self.mask
+        for r in range(self.rounds):
+            f = mix32(right, salt=self.salt + 0x9E37 * (r + 1)) & jnp.int32(
+                self.mask
+            )
+            left, right = right, left ^ f
+        return (left << self.half) | right
+
+    def device_call(self, key: jnp.ndarray) -> jnp.ndarray:
+        """Permuted ids computed on device, jit/vmap-safe; identical values
+        to :meth:`__call__` for every key in [0, upper).
+
+        Cycle-walking becomes a ``lax.while_loop`` re-permuting only the
+        out-of-domain lanes — the loop is data-dependent but terminates in
+        a handful of rounds (the walk expects ``size/upper`` < 4 steps).
+        """
+        import jax
+
+        if self.size > 0x7FFFFFFF:  # pragma: no cover - >2^31 key domains
+            raise ValueError(
+                f"device permutation needs an int32 domain; size "
+                f"{self.size} overflows (route on host instead)"
+            )
+        x = jnp.asarray(key, jnp.int32)
+        out = self._once_device(x)
+
+        def cond(o):
+            return jnp.any(o >= self.upper)
+
+        def body(o):
+            return jnp.where(o >= self.upper, self._once_device(o), o)
+
+        return jax.lax.while_loop(cond, body, out)

@@ -804,6 +804,9 @@ class OnlineFeatureStore:
                 layout=layout,
                 **store_kwargs,
             )
+        # routing flavour only exists on the sharded store; a single-device
+        # deployment accepts (and ignores) it so build(**kwargs) is uniform
+        store_kwargs.pop("device_routing", None)
         return OnlineFeatureStore(
             view, num_keys=num_keys, layout=layout, **store_kwargs
         )
@@ -955,6 +958,8 @@ class OnlineFeatureStore:
         columns: Dict[str, jnp.ndarray],
         mode: str = "preagg",
         program: Optional["QueryProgram"] = None,
+        valid: Optional[np.ndarray] = None,
+        route_info: Optional[Dict] = None,
     ) -> Dict[str, jnp.ndarray]:
         """Compute all view features for a batch of request rows.
 
@@ -964,8 +969,20 @@ class OnlineFeatureStore:
         ``program`` answers with a per-scenario :class:`QueryProgram`
         compiled by :meth:`compile_program` instead of this store's full
         view — the multi-scenario serving path.
+
+        ``valid`` optionally masks scheduler padding rows and
+        ``route_info`` (dict, filled in place) reports per-shard request
+        counts — one shard here; the sharded store computes the real
+        histogram as a routing by-product so callers never re-hash keys.
         """
         tel = get_telemetry()
+        if route_info is not None:
+            n_real = (
+                int(np.asarray(valid, bool).sum())
+                if valid is not None
+                else len(np.asarray(columns[self.schema.key]))
+            )
+            route_info["shard_counts"] = np.array([n_real], np.int64)
         key, ts_q, req_lanes, join_keys = self._request_arrays(
             columns, program
         )
@@ -1007,9 +1024,15 @@ class OnlineFeatureStore:
 
     def _note_query(self, tel, mode, program, padded_rows, t_call) -> None:
         """Query-side metrics: first-trace compile capture per
-        (program, mode, shape bucket) and preagg hit/fallback counters."""
+        (program, mode, shape bucket) and preagg hit/fallback counters.
+        ``padded_rows`` is any hashable shape key — an int bucket, or the
+        fused device path's (batch, bucket) pair."""
         name = program.view.name if program is not None else self.view.name
-        trace_key = (name, mode, int(padded_rows))
+        trace_key = (
+            name,
+            mode,
+            padded_rows if isinstance(padded_rows, tuple) else int(padded_rows),
+        )
         if trace_key not in self._seen_traces:
             self._seen_traces.add(trace_key)
             # first call at this shape = trace + XLA compile (+ one

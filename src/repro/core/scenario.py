@@ -129,6 +129,7 @@ class ScenarioPlane:
         num_shards: Optional[int] = None,
         name: str = "scenario_plane",
         mesh=None,
+        device_routing: bool = True,
         **store_kwargs,
     ):
         views = list(views)
@@ -144,7 +145,8 @@ class ScenarioPlane:
             from repro.core.shard import ShardedOnlineStore
 
             self.store = ShardedOnlineStore(
-                self.merged, layout=self.layout, mesh=mesh
+                self.merged, layout=self.layout, mesh=mesh,
+                device_routing=device_routing,
             )
         else:
             self.store = OnlineFeatureStore(self.merged, layout=self.layout)
@@ -258,10 +260,74 @@ class ScenarioPlane:
         self.store.ingest_table(table, columns)
 
     def query(
-        self, scenario: str, columns, mode: str = "preagg"
+        self, scenario: str, columns, mode: str = "preagg",
+        valid=None, route_info=None,
     ) -> Dict:
         """Answer one scenario's feature vector for a request batch —
         routed/compiled through that scenario's program against the shared
         state.  Returns {feature_name: (Q,) f32} in that view's naming
         (no plane prefix)."""
-        return self.store.query(columns, mode=mode, program=self.program(scenario))
+        return self.store.query(
+            columns, mode=mode, program=self.program(scenario),
+            valid=valid, route_info=route_info,
+        )
+
+    def query_mixed(
+        self, columns, tags, mode: str = "preagg",
+        valid=None, route_info=None,
+    ) -> Dict[str, Dict]:
+        """Answer a MIXED batch — rows tagged per-row with their scenario
+        — in ONE fused device dispatch (the device-resident request path;
+        needs a sharded store with ``device_routing=True``).
+
+        ``tags`` is a (Q,) array of scenario names; ``valid`` masks
+        scheduler padding.  The fused program computes the merged store's
+        full aggregation set for every row (bit-identical per answer to
+        each scenario's own program — all scenarios share the primary
+        schema, so a mixed batch carries every needed column); each
+        scenario's features are then finished from that superset, valid
+        rows only, in submission order within the scenario.  Returns
+        ``{scenario: {feature: rows}}`` like the per-group path.
+        """
+        import numpy as np
+
+        from repro.core.expr import eval_rowlevel
+        from repro.obs import get_telemetry
+
+        names = self.scenarios
+        index = {s: i for i, s in enumerate(names)}
+        tags = np.asarray(tags)
+        try:
+            scen = np.asarray([index[t] for t in tags], np.int32)
+        except KeyError as e:
+            raise KeyError(
+                f"unknown scenario {e.args[0]!r}; plane serves {names}"
+            ) from None
+        vals, q = self.store.route_and_query(
+            columns, scen, len(names), mode=mode, valid=valid,
+            route_info=route_info,
+        )
+        if route_info is not None:
+            route_info["scenario_names"] = list(names)
+        vmask = (
+            np.ones(q, bool) if valid is None else np.asarray(valid, bool)[:q]
+        )
+        keys = list(self.store._wagg_order) + list(self.store._ljoin_order)
+        out: Dict[str, Dict] = {}
+        with get_telemetry().tracer.span("query.scatter", rows=q):
+            pre_values = dict(
+                zip(keys, (np.asarray(v)[:q] for v in vals))
+            )
+            for s in names:
+                msk = vmask & (scen == index[s])
+                if not msk.any():
+                    continue
+                cols_s = {
+                    c: np.asarray(v)[:q][msk] for c, v in columns.items()
+                }
+                pv_s = {k: v[msk] for k, v in pre_values.items()}
+                out[s] = {
+                    fname: np.asarray(eval_rowlevel(fexpr, cols_s, pv_s))
+                    for fname, fexpr in self.views[s].features.items()
+                }
+        return out

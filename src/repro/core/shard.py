@@ -37,10 +37,27 @@ layer consumes):
   *join slice* (the LAST JOIN argument lanes) is copied per shard —
   recovering the S× memory the replicate-everything policy used to pay.
 
-Request path (the router's dataflow; see :mod:`repro.serve.router`):
-rows are bucketed by shard on the host, padded to a shared power-of-two
-per-shard shape bucket (compilation caching: one executable per bucket),
-executed as one fused sharded query, and scattered back to request order.
+Request path (the router's dataflow; see :mod:`repro.serve.router`) —
+two flavours, bit-identical by contract:
+
+* **Device routing** (default, ``device_routing=True``): the whole batch
+  enters ONE fused jit program that computes ``shard = feistel(key) % S``
+  on device (:meth:`~repro.core.hashing.KeyPermutation.device_call`),
+  ranks rows within their shard (:func:`repro.kernels.route.ops.
+  route_rank` — Pallas on TPU, XLA elsewhere), scatters them into a
+  capacity-bucketed (S, B) per-shard grid under the ``('shard',)``
+  sharding constraint, answers with the vmapped per-shard query, and
+  gathers answers back to request order device-side.  Mixed
+  multi-scenario batches ride the same program
+  (:meth:`ShardedOnlineStore.route_and_query` — the scenario-id column
+  is threaded through for the on-device (scenario, shard) histogram).
+  The optimistic per-shard capacity ``B ≈ 2·ceil(N/S)`` is checked by an
+  on-device overflow flag; pathological skew re-dispatches once at the
+  always-safe ``B = N``, so exactness never depends on the guess.
+* **Host routing** (``device_routing=False`` — the correctness oracle):
+  rows are bucketed by shard on the host, padded to a shared
+  power-of-two per-shard shape bucket, executed as one fused sharded
+  query, and scattered back to request order on CPU.
 
 Equality contract: every answer is **bit-identical** to the single-device
 :class:`~repro.core.online.OnlineFeatureStore` under the same ingest
@@ -62,6 +79,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.hashing import KeyPermutation
 from repro.core.layout import StoreLayout, plan_layout
 from repro.core.online import OnlineFeatureStore, OnlineState
+from repro.kernels.route.ops import route_rank
 
 __all__ = [
     "RoutePlan",
@@ -141,7 +159,9 @@ class ShardedOnlineStore(OnlineFeatureStore):
         mesh: Optional[Mesh] = None,
         hash_routing: bool = True,
         layout: Optional[StoreLayout] = None,
+        device_routing: bool = True,
     ):
+        self.device_routing = bool(device_routing)
         if layout is None:
             if num_keys is None:
                 raise ValueError("ShardedOnlineStore needs num_keys or layout")
@@ -215,6 +235,10 @@ class ShardedOnlineStore(OnlineFeatureStore):
         # they (and every per-scenario QueryProgram) are the vmapped
         # flavour; ingest needs its own wrapping for donation.
         super()._build_fns()
+        # fused route+query executables are cached per (program, mode,
+        # shape bucket) below and must re-trace after a layout adoption,
+        # exactly like the base query fns
+        self._fused_fns: Dict[Tuple, object] = {}
         self._ingest_fn = jax.jit(
             jax.vmap(self._ingest_pure), donate_argnums=(0,)
         )
@@ -381,16 +405,48 @@ class ShardedOnlineStore(OnlineFeatureStore):
         columns: Dict[str, jnp.ndarray],
         mode: str = "preagg",
         program=None,
+        valid: Optional[np.ndarray] = None,
+        route_info: Optional[Dict] = None,
     ) -> Dict[str, jnp.ndarray]:
-        """Route the request across shards, answer with the fused sharded
-        query, scatter back to request order (same contract as the base
-        store: {feature_name: (Q,) f32} in input row order).
+        """Answer a request batch in input row order (same contract as the
+        base store: {feature_name: (Q,) f32}).
+
+        ``device_routing=True`` (default) serves the batch through the
+        fused on-mesh path — routing, per-shard padding, the vmapped
+        query and the gather back to request order are all one jit
+        program (:meth:`_query_device_routed`).  ``device_routing=False``
+        keeps the host-routed path (:meth:`_query_host_routed`) — the
+        correctness oracle the parity tests compare against.
+
+        ``valid`` optionally marks scheduler padding rows so occupancy
+        accounting excludes them; ``route_info`` (a dict, filled in
+        place) returns the batch's valid-masked per-shard request counts
+        (``"shard_counts"``) so the router's skew histograms never
+        re-hash keys.
+        """
+        if self.device_routing:
+            return self._query_device_routed(
+                columns, mode, program, valid, route_info
+            )
+        return self._query_host_routed(
+            columns, mode, program, valid, route_info
+        )
+
+    def _query_host_routed(
+        self,
+        columns: Dict[str, jnp.ndarray],
+        mode: str,
+        program=None,
+        valid: Optional[np.ndarray] = None,
+        route_info: Optional[Dict] = None,
+    ) -> Dict[str, jnp.ndarray]:
+        """Host-routed request path (the ``device_routing=False`` oracle).
 
         Routing happens on the host straight from the request columns
         (normally numpy already); only the routed (S, bucket) grids are
-        uploaded — no device round-trip on the latency-critical path.
-        ``program`` serves one scenario's compiled sub-view against the
-        shared sharded state (see :meth:`OnlineFeatureStore.compile_program`).
+        uploaded.  ``program`` serves one scenario's compiled sub-view
+        against the shared sharded state (see
+        :meth:`OnlineFeatureStore.compile_program`).
 
         The three stages are traced separately — ``query.route`` (host:
         shard bucketing, padding, upload), ``query.compute`` (device,
@@ -439,16 +495,14 @@ class ShardedOnlineStore(OnlineFeatureStore):
                 ),
                 self._put(gkey_r),                          # global key
             )
-        pad_rows = self.num_shards * plan.bucket - q
-        m = tel.metrics
-        m.counter(
-            "padding_rows_total", "filler rows added to reach shape bucket",
-            "1", labels=("layer",),
-        ).inc(pad_rows, layer="shard")
-        m.gauge(
-            "padding_waste_ratio", "filler rows / bucket rows, last batch",
-            "1", labels=("layer",),
-        ).set(pad_rows / max(self.num_shards * plan.bucket, 1), layer="shard")
+        vmask = (
+            np.ones(q, bool) if valid is None else np.asarray(valid, bool)[:q]
+        )
+        self._note_route(tel, "host", int(vmask.sum()), q, plan.bucket)
+        if route_info is not None:
+            route_info["shard_counts"] = np.bincount(
+                shard[vmask], minlength=self.num_shards
+            ).astype(np.int64)
         fn = self._query_fn(mode, program)
         t_call = tel.clock.now()
         with tel.tracer.span(
@@ -463,6 +517,347 @@ class ShardedOnlineStore(OnlineFeatureStore):
                 columns, self._scatter_back(plan, vals, q), program
             )
         return out
+
+    # -- fused device-resident request path ------------------------------------
+
+    def _route_bucket(self, m: int) -> int:
+        """Optimistic per-shard grid capacity for an m-row batch: twice
+        the even-split share, power-of-two (compilation caching), floored
+        at 16 and capped at m (the always-safe bound — no shard can own
+        more rows than the batch has).  The fused program's on-device
+        overflow flag catches the rare skew beyond 2x and re-dispatches
+        at the cap, so this is a latency guess, never a correctness one."""
+        per = -(-m // self.num_shards)
+        b = 1 << max(2 * per - 1, 0).bit_length()
+        cap = 1 << max(m - 1, 0).bit_length()
+        return int(min(max(16, b), max(cap, 1)))
+
+    def _route_query_pure(
+        self,
+        state: OnlineState,
+        key,
+        ts_q,
+        req_lanes,
+        join_keys,
+        scen,
+        valid,
+        *,
+        bucket: int,
+        num_scen: int,
+        use_preagg: bool,
+        wagg_order=None,
+        ljoin_order=None,
+        req_lane_of=None,
+        join_col_index=None,
+    ):
+        """The fused on-mesh request program: route, pad, answer, gather.
+
+        (a) ``shard = feistel(key) % S`` via the device Feistel mirror;
+        (b) rank-within-shard (route kernel) scatters rows into the
+        (S, bucket) per-shard grid, laid over the mesh by a ``('shard',)``
+        sharding constraint (GSPMD keeps per-shard compute on its
+        device); (c) the unchanged vmapped per-shard query answers every
+        grid row; (d) answers gather back to request order device-side.
+        Returns (answers, per-(scenario, shard) valid-row counts, overflow
+        flag).  Unscattered grid slots hold zeros — key 0 of each shard,
+        a harmless read-only recompute discarded by the gather.
+        """
+        S = self.num_shards
+        B = bucket
+        key = jnp.asarray(key, jnp.int32)
+        routed = (
+            self._perm.device_call(key) if self._perm is not None else key
+        )
+        shard = routed % S
+        local = routed // S
+        rank, counts = route_rank(shard, num_shards=S)
+        overflow = jnp.any(counts > B)
+        slot = jnp.minimum(rank, B - 1)
+
+        def to_grid(arr):
+            g = jnp.zeros((S, B) + arr.shape[1:], arr.dtype)
+            return g.at[shard, rank].set(arr, mode="drop")
+
+        spec = NamedSharding(self.mesh, P("shard"))
+        grids = jax.tree.map(
+            lambda g: jax.lax.with_sharding_constraint(g, spec),
+            (
+                to_grid(local),
+                to_grid(jnp.asarray(ts_q, jnp.int32)),
+                to_grid(jnp.asarray(req_lanes, jnp.float32)),
+                tuple(
+                    to_grid(jnp.asarray(j, jnp.int32)) for j in join_keys
+                ),
+                to_grid(key),
+            ),
+        )
+        vals = jax.vmap(
+            functools.partial(
+                self._query_pure,
+                use_preagg=use_preagg,
+                wagg_order=wagg_order,
+                ljoin_order=ljoin_order,
+                req_lane_of=req_lane_of,
+                join_col_index=join_col_index,
+            )
+        )(state, *grids)
+        rep = NamedSharding(self.mesh, P())
+        out = tuple(
+            jax.lax.with_sharding_constraint(v[shard, slot], rep)
+            for v in vals
+        )
+        scounts = (
+            jnp.zeros((num_scen, S), jnp.int32)
+            .at[jnp.asarray(scen, jnp.int32), shard]
+            .add(jnp.asarray(valid, jnp.int32))
+        )
+        return out, scounts, overflow
+
+    def _route_query_fn(self, mode: str, program, bucket: int, num_scen: int):
+        key = (
+            program.view.name if program is not None else "",
+            mode,
+            int(bucket),
+            int(num_scen),
+        )
+        fn = self._fused_fns.get(key)
+        if fn is None:
+            subset = (
+                {}
+                if program is None
+                else dict(
+                    wagg_order=program.wagg_order,
+                    ljoin_order=program.ljoin_order,
+                    req_lane_of=program.req_lane_of,
+                    join_col_index=program.join_col_index,
+                )
+            )
+            fn = jax.jit(
+                functools.partial(
+                    self._route_query_pure,
+                    bucket=int(bucket),
+                    num_scen=int(num_scen),
+                    use_preagg=(mode != "naive"),
+                    **subset,
+                )
+            )
+            self._fused_fns[key] = fn
+        return fn
+
+    def _note_route(
+        self, tel, path: str, n_rows: int, q: int, bucket: int
+    ) -> None:
+        """Routing telemetry shared by both paths: rows routed per path
+        plus the shard-layer padding accounting."""
+        pad_rows = self.num_shards * bucket - q
+        m = tel.metrics
+        m.counter(
+            "route_rows_total",
+            "request rows routed to shards, per routing path", "1",
+            labels=("path",),
+        ).inc(int(n_rows), path=path)
+        m.counter(
+            "padding_rows_total", "filler rows added to reach shape bucket",
+            "1", labels=("layer",),
+        ).inc(pad_rows, layer="shard")
+        m.gauge(
+            "padding_waste_ratio", "filler rows / bucket rows, last batch",
+            "1", labels=("layer",),
+        ).set(
+            pad_rows / max(self.num_shards * bucket, 1), layer="shard"
+        )
+
+    def _pad_request(self, key_h, ts_h, lanes, jks, valid_h, scen):
+        """Pad flat request arrays to the power-of-two shape bucket by
+        repeating the last row (read-only recompute; ``valid`` marks the
+        filler so device-side histograms exclude it)."""
+        q = int(key_h.shape[0])
+        m = max(16, 1 << max(q - 1, 0).bit_length())
+        if m != q:
+            pad = m - q
+            key_h = np.concatenate([key_h, np.repeat(key_h[-1:], pad)])
+            ts_h = np.concatenate([ts_h, np.repeat(ts_h[-1:], pad)])
+            lanes = jnp.concatenate(
+                [lanes, jnp.broadcast_to(lanes[-1:], (pad, lanes.shape[1]))]
+            )
+            jks = tuple(
+                np.concatenate([j, np.repeat(j[-1:], pad)]) for j in jks
+            )
+            valid_h = np.concatenate([valid_h, np.zeros(pad, bool)])
+            scen = np.concatenate([scen, np.repeat(scen[-1:], pad)])
+        return key_h, ts_h, lanes, jks, valid_h, scen, m
+
+    def _route_dispatch(
+        self, tel, mode, program, key_h, ts_h, lanes, jks, scen, valid_h,
+        m: int, num_scen: int, q: int,
+    ):
+        """One fused device dispatch under the ``route.device`` span (plus
+        the rare overflow re-dispatch at the safe capacity, inside the
+        same span so span count == dispatches per batch stays 1)."""
+        B = self._route_bucket(m)
+        pname = program.view.name if program is not None else ""
+        t_call = tel.clock.now()
+        with tel.tracer.span(
+            "route.device", kind="device", mode=mode, program=pname,
+            rows=q, padded=m, bucket=B, shards=self.num_shards,
+        ) as sp:
+            fn = self._route_query_fn(mode, program, B, num_scen)
+            vals, scounts, ovf = fn(
+                self.state, key_h, ts_h, lanes, jks, scen, valid_h
+            )
+            vals, scounts = sp.fence((vals, scounts))
+            if bool(np.asarray(ovf)):
+                # optimistic capacity missed (pathological skew): rerun at
+                # the always-safe bucket == batch size; bit-exactness never
+                # depends on the optimistic guess
+                B = 1 << max(m - 1, 0).bit_length()
+                fn = self._route_query_fn(mode, program, B, num_scen)
+                vals, scounts, _ = fn(
+                    self.state, key_h, ts_h, lanes, jks, scen, valid_h
+                )
+                vals, scounts = sp.fence((vals, scounts))
+        scounts_h = np.asarray(scounts, np.int64)
+        self._note_route(tel, "device", scounts_h.sum(), q, B)
+        self._note_query(tel, mode, program, (m, B), t_call)
+        return vals, scounts_h
+
+    def _query_device_routed(
+        self,
+        columns: Dict[str, jnp.ndarray],
+        mode: str,
+        program=None,
+        valid: Optional[np.ndarray] = None,
+        route_info: Optional[Dict] = None,
+    ) -> Dict[str, jnp.ndarray]:
+        """Single-program request path: one fused dispatch per batch.
+
+        Host work shrinks to array conversion (``query.route`` span) and
+        the post-expression finish (``query.scatter`` span); everything
+        between — routing, padding, per-shard compute, gather-back — is
+        the fenced ``route.device`` device span.
+        """
+        from repro.obs import get_telemetry
+
+        tel = get_telemetry()
+        self._validate_join_cols(columns, program)
+        key_h = self._check_range(
+            np.asarray(columns[self.schema.key]).astype(np.int32, copy=False),
+            None,
+        )
+        q = int(key_h.shape[0])
+        pname = program.view.name if program is not None else ""
+        with tel.tracer.span(
+            "query.route", mode=mode, program=pname, rows=q
+        ):
+            ts_h = np.asarray(columns[self.schema.ts]).astype(
+                np.int32, copy=False
+            )
+            lane_exprs = None if program is None else program.lane_exprs
+            join_cols = (
+                self._join_cols if program is None else program.join_cols
+            )
+            lanes = jnp.asarray(self._lanes(columns, lane_exprs))
+            jks = tuple(
+                np.asarray(columns[c]).astype(np.int32, copy=False)
+                for c in join_cols
+            )
+            vmask = (
+                np.ones(q, bool)
+                if valid is None
+                else np.asarray(valid, bool)[:q]
+            )
+            key_p, ts_p, lanes_p, jks_p, valid_p, scen_p, m = (
+                self._pad_request(
+                    key_h, ts_h, lanes, jks, vmask, np.zeros(q, np.int32)
+                )
+            )
+        vals, scounts = self._route_dispatch(
+            tel, mode, program, key_p, ts_p, lanes_p, jks_p, scen_p,
+            valid_p, m, 1, q,
+        )
+        if route_info is not None:
+            route_info["shard_counts"] = scounts.sum(axis=0)
+        with tel.tracer.span("query.scatter", rows=q):
+            out = self._finish_query(
+                columns, tuple(np.asarray(v)[:q] for v in vals), program
+            )
+        return out
+
+    def route_and_query(
+        self,
+        columns: Dict[str, jnp.ndarray],
+        scen: np.ndarray,
+        num_scen: int,
+        mode: str = "preagg",
+        valid: Optional[np.ndarray] = None,
+        route_info: Optional[Dict] = None,
+    ):
+        """Fused route+query for a MIXED multi-scenario batch — one device
+        dispatch for rows tagged with ``scen`` (scenario ids in
+        [0, num_scen)), against the merged store's FULL aggregation set.
+
+        Every scenario of a plane shares the primary schema, so a mixed
+        batch carries every column the merged program needs; computing
+        the full (wagg + ljoin) set per row is bit-identical to each
+        scenario's own program (per-answer compute depends only on that
+        row's values).  Returns ``(vals, q)`` — the merged-order answer
+        tuple still on device, (m,) arrays to slice to ``[:q]`` — and the
+        caller (:meth:`repro.core.scenario.ScenarioPlane.query_mixed`)
+        selects each scenario's features from the superset.  ``route_info``
+        gains the on-device valid-masked ``"scenario_shard_counts"``
+        (num_scen, S) histogram.
+        """
+        from repro.obs import get_telemetry
+
+        if not self.device_routing:
+            raise RuntimeError(
+                "route_and_query is the fused device path; this store was "
+                "built with device_routing=False (host-routed oracle)"
+            )
+        tel = get_telemetry()
+        self._validate_join_cols(columns, None)
+        key_h = self._check_range(
+            np.asarray(columns[self.schema.key]).astype(np.int32, copy=False),
+            None,
+        )
+        q = int(key_h.shape[0])
+        scen_h = np.asarray(scen, np.int32)
+        if scen_h.size and (
+            scen_h.min() < 0 or scen_h.max() >= num_scen
+        ):
+            raise ValueError(
+                f"scenario ids out of range [0, {num_scen}): "
+                f"[{scen_h.min()}, {scen_h.max()}]"
+            )
+        with tel.tracer.span(
+            "query.route", mode=mode, program="", rows=q
+        ):
+            ts_h = np.asarray(columns[self.schema.ts]).astype(
+                np.int32, copy=False
+            )
+            lanes = jnp.asarray(self._lanes(columns, None))
+            jks = tuple(
+                np.asarray(columns[c]).astype(np.int32, copy=False)
+                for c in self._join_cols
+            )
+            vmask = (
+                np.ones(q, bool)
+                if valid is None
+                else np.asarray(valid, bool)[:q]
+            )
+            key_p, ts_p, lanes_p, jks_p, valid_p, scen_p, m = (
+                self._pad_request(key_h, ts_h, lanes, jks, vmask, scen_h)
+            )
+        # padding repeats the last row's scenario tag but valid=False, so
+        # the device histogram never counts it
+        vals, scounts = self._route_dispatch(
+            tel, mode, None, key_p, ts_p, lanes_p, jks_p, scen_p, valid_p,
+            m, int(num_scen), q,
+        )
+        if route_info is not None:
+            route_info["scenario_shard_counts"] = scounts
+            route_info["shard_counts"] = scounts.sum(axis=0)
+        return vals, q
 
     # -- observability ---------------------------------------------------------
 

@@ -1,0 +1,74 @@
+"""jit'd wrapper for the route-rank kernel.
+
+``route_rank(shard, num_shards)`` -> (rank_within_shard, per-shard
+counts), dispatching between the Pallas TPU kernel and the XLA
+reference (identical integer results).  This is the routing primitive of
+the fused device-resident request path (:meth:`repro.core.shard.
+ShardedOnlineStore.query` with ``device_routing=True``): shard ids come
+from the on-device Feistel permutation, ranks place each row in its
+shard's padded grid, counts drive the overflow check and the skew
+histograms — one program, no host round-trip.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.route.ref import route_rank_ref
+from repro.kernels.route.route import ROUTE_LANE, route_rank_pallas
+
+__all__ = ["route_rank"]
+
+# beyond this the (rows, 128) id tile and its cumsums still fit VMEM with
+# lots of headroom; serving batches are orders of magnitude smaller, so
+# the cap exists only to keep an accidental huge call off the kernel
+_ROUTE_PALLAS_MAX_ROWS = 1 << 20
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_shards", "impl", "interpret")
+)
+def route_rank(
+    shard: jnp.ndarray,  # (N,) int32 shard ids in [0, num_shards)
+    *,
+    num_shards: int,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(rank (N,) int32, counts (S,) int32): rank of each row within its
+    shard in batch order, and rows per shard."""
+    n = shard.shape[0]
+    if impl == "auto":
+        impl = (
+            "pallas"
+            if jax.default_backend() == "tpu" and n <= _ROUTE_PALLAS_MAX_ROWS
+            else "xla"
+        )
+    if impl == "xla":
+        return route_rank_ref(shard, num_shards)
+    # lane-major 2-D tiling; padding gets the inert id S (claimed by no
+    # grid step, so pad lanes rank as 0 and count into no shard)
+    rows = -(-n // ROUTE_LANE)
+    rows += (-rows) % 8
+    m = rows * ROUTE_LANE
+    padded = jnp.full((m,), num_shards, jnp.int32).at[:n].set(
+        jnp.asarray(shard, jnp.int32)
+    )
+    rank2d = route_rank_pallas(
+        padded.reshape(rows, ROUTE_LANE),
+        num_shards=num_shards,
+        interpret=interpret,
+    )
+    rank = rank2d.reshape(m)[:n]
+    counts = jnp.sum(
+        (
+            jnp.asarray(shard, jnp.int32)[:, None]
+            == jnp.arange(num_shards, dtype=jnp.int32)[None, :]
+        ).astype(jnp.int32),
+        axis=0,
+    )
+    return rank, counts

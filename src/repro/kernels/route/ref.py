@@ -1,0 +1,38 @@
+"""XLA reference for the route-rank kernel (and the CPU/GPU fast path).
+
+``route_rank_ref`` is the whole contract: given per-row shard ids, the
+rank of each row *within its shard* in batch order, plus the per-shard
+row counts.  That pair is exactly what the fused device-resident request
+path needs to scatter a mixed batch into its (S, bucket) per-shard grid
+and gather answers back to request order — all device-side.
+
+The formulation is a one-hot running sum (a segmented prefix count), so
+results are deterministic integers: the Pallas kernel and this reference
+agree bit-for-bit, which the kernel parity test asserts in interpret
+mode on CPU.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["route_rank_ref"]
+
+
+def route_rank_ref(
+    shard: jnp.ndarray, num_shards: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(rank_within_shard (N,) int32, counts (S,) int32) in batch order.
+
+    Rows whose shard id falls outside [0, num_shards) (grid padding uses
+    ``num_shards`` as an inert id) get rank 0 and count into no shard.
+    """
+    shard = jnp.asarray(shard, jnp.int32)
+    oh = (
+        shard[:, None] == jnp.arange(num_shards, dtype=jnp.int32)[None, :]
+    ).astype(jnp.int32)  # (N, S)
+    rank = jnp.sum((jnp.cumsum(oh, axis=0) - oh) * oh, axis=1)
+    counts = jnp.sum(oh, axis=0)
+    return rank.astype(jnp.int32), counts.astype(jnp.int32)

@@ -35,6 +35,7 @@ EXPECTED_METRICS: Dict[str, Tuple[str, str, Tuple[str, ...]]] = {
     "padding_waste_ratio": ("gauge", "1", ("layer",)),
     "span_seconds": ("histogram", "s", ("name", "kind")),
     "shard_dispatch_rows_total": ("counter", "1", ("scenario", "shard")),
+    "route_rows_total": ("counter", "1", ("path",)),
     "query_compile_seconds": ("histogram", "s", ("program", "mode")),
     "preagg_hits_total": ("counter", "1", ("agg",)),
     "preagg_fallback_total": ("counter", "1", ("agg",)),
@@ -54,7 +55,8 @@ OPTIONAL_METRICS: Dict[str, Tuple[str, str, Tuple[str, ...]]] = {
 }
 
 EXPECTED_SPAN_NAMES = {
-    "request", "query.route", "query.compute", "query.scatter", "ingest",
+    "request", "query.route", "query.compute", "query.scatter",
+    "route.device", "ingest",
     "hot_deploy", "hot_deploy.plan", "hot_deploy.compile",
     "migrate", "migrate.diff", "migrate.carry", "migrate.place",
     "backfill", "backfill.ring", "backfill.bucket", "export",
@@ -119,7 +121,21 @@ def _workload(tel):
                 now_us=now, scenario="velocity",
             )
             now += 250
+        # a couple of requests through the retained host-routed oracle
+        # flavour, so route_rows_total{path=host} and the host path's
+        # query.compute span stay exercised alongside route.device
+        svc.store.device_routing = False
+        for i in range(4):
+            router.submit(
+                dict(
+                    card=i, ts=102_000 + i, amount=5.0, mcc=0, device=0,
+                    geo=0,
+                ),
+                now_us=now, scenario="fraud",
+            )
+            now += 250
         router.drain(now_us=now)
+        svc.store.device_routing = True
         svc.store.record_gauges()
 
         # offline bridge: a hot deploy needing aged-out history (40

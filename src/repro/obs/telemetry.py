@@ -203,6 +203,26 @@ class Counter(_MetricBase):
         slot = self._slot(labels, lambda: [0.0])
         slot[0] += n
 
+    def inc_along(
+        self,
+        label: str,
+        values: Sequence[str],
+        counts: Sequence[float],
+        **labels: str,
+    ) -> None:
+        """Vectorized ``inc``: fold an aligned batch of
+        (``label=values[i]``, ``counts[i]``) increments into the series
+        that differ only in ``label`` (the remaining labels are fixed) in
+        ONE call.  Zero counts are skipped, so hot paths can hand a dense
+        histogram (e.g. rows per shard) without a per-series ``inc`` loop
+        or series churn for empty buckets."""
+        if not self.enabled:
+            return
+        for v, n in zip(values, counts):
+            if n:
+                slot = self._slot({**labels, label: str(v)}, lambda: [0.0])
+                slot[0] += float(n)
+
     def value(self, **labels: str) -> float:
         key = _label_values(self.label_names, labels, self.name)
         s = self._series.get(key)

@@ -6,31 +6,37 @@ out the way OpenMLDB partitions online table state across nodes):
     submit(row) ──> BatchScheduler          (coalesce: max_batch / max_wait_us)
         │
         ▼ next_batch()  — padded shape bucket + __valid__ mask
-    FeatureService.request
+    FeatureService.request / request_mixed
         │
         ▼ ShardedOnlineStore.query          (one fused program on the mesh)
-        │     host: bucket rows by shard = perm(key) % S, pad each shard's
-        │     rows to a shared power-of-two bucket, device_put with
-        │     NamedSharding('shard'); device: vmapped per-shard query
-        │     (ring + bucket pre-agg + secondary rings, zero cross-shard
-        │     collectives); host: scatter answers back to request order
+        │     device (default, ``device_routing=True``): shard =
+        │     feistel(key) % S, rank-within-shard (Pallas route kernel on
+        │     TPU), scatter into per-shard grids, vmapped per-shard query,
+        │     gather back to request order — ALL inside one jit program;
+        │     the host sees one dispatch and one transfer per batch.
+        │     host (``device_routing=False`` oracle): bucket rows by shard
+        │     on the host, pad per shard, device_put with
+        │     NamedSharding('shard'), query, scatter back on the host.
         ▼
     per-request feature rows (submission order)
 
 :class:`ShardRouter` owns that loop and the serving-side observability:
 per-shard request occupancy (skew monitoring) and the service's latency
-percentiles.  It is store-agnostic — a single-device store degrades to
-S=1 — so services opt into sharding purely via
-``FeatureService.build(..., sharded=True)``.
+percentiles.  The histograms are fed by the store's own routing counts
+(``route_info``) — the router never re-hashes keys.  It is
+store-agnostic — a single-device store degrades to S=1 — so services opt
+into sharding purely via ``FeatureService.build(..., sharded=True)``.
 
 **Multi-scenario routing** (``FeatureService.build_multi``): requests are
-submitted with a scenario tag and coalesce in ONE queue; each popped batch
-is partitioned by scenario on the host, and every scenario group runs
-through its own compiled program against the shared sharded state — so
-rows are effectively bucketed by (scenario, shard), padded per bucket
-inside the store, and scattered back to request order per scenario.
-Occupancy is tracked per (scenario, shard) in
-:meth:`ShardRouter.scenario_shard_histogram`.
+submitted with a scenario tag and coalesce in ONE queue.  With device
+routing the whole mixed batch goes through
+:meth:`~repro.serve.service.MultiScenarioService.request_mixed` — ONE
+fused dispatch answers every (scenario, shard) bucket, and per-scenario
+rows come back in submission order.  With the host oracle each popped
+batch is partitioned by scenario on the host and every group runs its own
+program (the legacy per-group path, bit-identical).  Occupancy is tracked
+per (scenario, shard) in :meth:`ShardRouter.scenario_shard_histogram`
+under both flavours.
 """
 
 from __future__ import annotations
@@ -41,6 +47,7 @@ import numpy as np
 
 from repro.obs import get_telemetry
 from repro.serve.service import (
+    SCENARIO_COL,
     BatchScheduler,
     FeatureService,
     MultiScenarioService,
@@ -48,7 +55,7 @@ from repro.serve.service import (
 
 __all__ = ["ShardRouter"]
 
-_SCENARIO_COL = "__scenario__"
+_SCENARIO_COL = SCENARIO_COL
 
 
 class ShardRouter:
@@ -129,45 +136,38 @@ class ShardRouter:
             )
         self.scheduler.submit(row, now_us=now_us)
 
-    def _count_shards(
-        self,
-        keys: np.ndarray,
-        valid: Optional[np.ndarray],
-        scenario: Optional[str],
+    def _note_route(
+        self, counts: np.ndarray, scenario: Optional[str]
     ) -> None:
-        """Fold one batch's keys into the skew histograms.
+        """Fold one batch's routed-row counts into the skew histograms.
 
-        The histograms count *requests*, never padding: filler rows repeat
-        a real row's key, so counting them would inflate exactly the shard
-        that real row routed to and skew reads as worse than it is.
-        Filtering is structural — every call site hands the batch's
-        ``__valid__`` mask (or None for an all-real batch) and the padded
-        rows are dropped here; the plane's padding cost is reported
-        explicitly by the ``padding_rows_total`` / ``padding_waste_ratio``
-        telemetry instead of leaking into occupancy.
+        ``counts`` is the per-shard histogram the store computed WHILE
+        routing (``route_info["shard_counts"]`` /
+        ``["scenario_shard_counts"]``), so the router never re-hashes keys
+        to learn where rows went.  Padding is already excluded: the store
+        masks filler rows before counting, so the histograms count real
+        requests only and the plane's padding cost stays in the
+        ``padding_rows_total`` / ``padding_waste_ratio`` telemetry.  The
+        per-(scenario, shard) dispatch counter is one vectorized
+        ``inc_along`` update, not a per-shard ``inc`` loop.
         """
-        keys = np.asarray(keys)
-        if valid is not None:
-            keys = keys[np.asarray(valid, bool)[: len(keys)]]
-        store = self.service.store
-        if hasattr(store, "shard_of"):
-            hist = np.bincount(
-                store.shard_of(keys), minlength=self.num_shards
-            )
-        else:
-            hist = np.zeros(self.num_shards, np.int64)
-            hist[0] = len(keys)
+        hist = np.zeros(self.num_shards, np.int64)
+        counts = np.asarray(counts, np.int64)
+        hist[: len(counts)] += counts
         self.shard_requests += hist
         if scenario is not None:
             self.scenario_shard_requests[scenario] += hist
-        c = get_telemetry().metrics.counter(
+        get_telemetry().metrics.counter(
             "shard_dispatch_rows_total",
             "request rows dispatched per (scenario, shard)", "1",
             labels=("scenario", "shard"),
             max_series=1024,
+        ).inc_along(
+            "shard",
+            [str(i) for i in range(self.num_shards)],
+            hist,
+            scenario=scenario or "",
         )
-        for sh in np.nonzero(hist)[0]:
-            c.inc(int(hist[sh]), scenario=scenario or "", shard=str(int(sh)))
 
     def pump(
         self, now_us: Optional[int] = None, flush: bool = False
@@ -186,16 +186,40 @@ class ShardRouter:
             float(valid.sum()) / max(len(valid), 1),
             service=self.service.name,
         )
-        key_col = self.service.view.schema.key
         if self.scenarios is None:
-            out = self.service.request(batch, ingest=self.ingest)
-            self._count_shards(np.asarray(batch[key_col]), valid, None)
+            ri: Dict = {}
+            out = self.service.request(
+                batch, ingest=self.ingest, route_info=ri
+            )
+            self._note_route(ri["shard_counts"], None)
             return {k: np.asarray(v)[valid] for k, v in out.items()}
-        # multi-scenario: partition the popped batch by scenario tag (in
+        if getattr(self.service.store, "device_routing", False):
+            # device routing: the mixed batch is ONE fused dispatch — the
+            # store routes, answers, and histograms every (scenario,
+            # shard) bucket inside a single jit program
+            ri = {}
+            results = self.service.request_mixed(
+                batch, ingest=self.ingest, route_info=ri
+            )
+            scounts = np.asarray(ri["scenario_shard_counts"])
+            for i, s in enumerate(ri["scenario_names"]):
+                self._note_route(scounts[i], s)
+            return {
+                s: {k: np.asarray(v) for k, v in cols.items()}
+                for s, cols in results.items()
+            }
+        # host oracle: partition the popped batch by scenario tag (in
         # submission order within each group) and run each group through
-        # its own program — the (scenario, shard) bucketing of the plane
+        # its own program — the (scenario, shard) bucketing of the plane.
+        # Ingest is deferred until EVERY group is answered so the whole
+        # batch is served as-of batch start, exactly the point-in-time
+        # semantics the fused dispatch has (one program cannot interleave
+        # per-group ingest into its own answers) — without the deferral
+        # a later group would see an earlier group's rows from the same
+        # batch and the two flavours could not be bit-identical.
         tags = np.asarray(batch[_SCENARIO_COL])
-        results: Dict[str, Dict[str, np.ndarray]] = {}
+        results = {}
+        groups = []
         for s in self.scenarios:
             m = valid & (tags == s)
             if not m.any():
@@ -205,10 +229,26 @@ class ShardRouter:
                 for c, v in batch.items()
                 if c not in ("__valid__", _SCENARIO_COL)
             }
-            out = self.service.request(rows_s, ingest=self.ingest, scenario=s)
+            ri = {}
+            out = self.service.request(
+                rows_s, ingest=False, scenario=s, route_info=ri
+            )
             # rows_s was masked by `m`, so every row is a real request
-            self._count_shards(rows_s[key_col], None, s)
+            self._note_route(ri["shard_counts"], s)
             results[s] = {k: np.asarray(v) for k, v in out.items()}
+            groups.append(rows_s)
+        if self.ingest:
+            schema = self.service.view.schema
+            for rows_s in groups:
+                data = {
+                    c: np.asarray(v)
+                    for c, v in rows_s.items()
+                    if not c.startswith("__")
+                }
+                order = np.lexsort((data[schema.ts], data[schema.key]))
+                self.service.store.ingest(
+                    {c: v[order] for c, v in data.items()}
+                )
         return results
 
     def drain(
@@ -228,14 +268,16 @@ class ShardRouter:
             return {
                 k: np.concatenate([o[k] for o in outs]) for k in outs[0]
             }
-        merged: Dict[str, Dict[str, np.ndarray]] = {}
+        # collect every pump's per-scenario chunks first, concatenate each
+        # scenario ONCE at the end — pumps arrive in submission order, so
+        # chunk order is row order and a single concat per (scenario,
+        # feature) preserves it without O(pumps) repeated reallocation
+        merged: Dict[str, Dict[str, List[np.ndarray]]] = {}
         for o in outs:
             for s, cols in o.items():
-                if s not in merged:
-                    merged[s] = {k: [v] for k, v in cols.items()}
-                else:
-                    for k, v in cols.items():
-                        merged[s][k].append(v)
+                dst = merged.setdefault(s, {})
+                for k, v in cols.items():
+                    dst.setdefault(k, []).append(v)
         return {
             s: {k: np.concatenate(vs) for k, vs in cols.items()}
             for s, cols in merged.items()

@@ -30,7 +30,12 @@ __all__ = [
     "MultiScenarioService",
     "BatchScheduler",
     "ScoringService",
+    "SCENARIO_COL",
 ]
+
+# meta column carrying the per-row scenario tag of a mixed batch (set by
+# ShardRouter.submit, consumed by MultiScenarioService.request_mixed)
+SCENARIO_COL = "__scenario__"
 
 
 @dataclasses.dataclass
@@ -226,14 +231,20 @@ class FeatureService:
     # -- per-request hooks (MultiScenarioService overrides both) -------------
 
     def _compute(
-        self, rows: Dict[str, np.ndarray], scenario: Optional[str]
+        self,
+        rows: Dict[str, np.ndarray],
+        scenario: Optional[str],
+        valid: Optional[np.ndarray] = None,
+        route_info: Optional[Dict] = None,
     ) -> Dict[str, np.ndarray]:
         if scenario is not None:
             raise ValueError(
                 f"service {self.name!r} is single-scenario; scenario= tags "
                 "need a FeatureService.build_multi deployment"
             )
-        return self.store.query(rows, mode=self.mode)
+        return self.store.query(
+            rows, mode=self.mode, valid=valid, route_info=route_info
+        )
 
     def _observe(
         self,
@@ -248,7 +259,8 @@ class FeatureService:
 
     def request(self, rows: Dict[str, np.ndarray],
                 ingest: bool = True,
-                scenario: Optional[str] = None) -> Dict[str, np.ndarray]:
+                scenario: Optional[str] = None,
+                route_info: Optional[Dict] = None) -> Dict[str, np.ndarray]:
         """Compute features for a batch of request rows; optionally ingest
         them afterwards (the online-learning pattern of the paper).
 
@@ -263,7 +275,10 @@ class FeatureService:
 
         ``scenario`` selects which view answers on a multi-scenario
         deployment (see :meth:`build_multi`); ingested rows land in the
-        shared store once, serving every scenario.
+        shared store once, serving every scenario.  ``route_info`` (dict,
+        filled in place) surfaces the store's per-shard routing counts to
+        the caller — the router's skew histograms read them instead of
+        re-hashing keys.
         """
         tel = get_telemetry()
         t0 = tel.clock.now()
@@ -276,7 +291,9 @@ class FeatureService:
             "request", service=self.name,
             scenario=scenario or "", rows=n_real,
         ):
-            out = self._compute(rows, scenario)
+            out = self._compute(
+                rows, scenario, valid=valid, route_info=route_info
+            )
             out = {k: np.asarray(v) for k, v in out.items()}
             if ingest:
                 real = rows
@@ -421,13 +438,119 @@ class MultiScenarioService(FeatureService):
             )
         return report
 
-    def _compute(self, rows, scenario):
+    def _compute(self, rows, scenario, valid=None, route_info=None):
         if scenario is None:
             raise ValueError(
                 f"multi-scenario service {self.name!r} needs scenario= "
                 f"(one of {self.scenarios})"
             )
-        return self.plane.query(scenario, rows, mode=self.mode)
+        return self.plane.query(
+            scenario, rows, mode=self.mode, valid=valid, route_info=route_info
+        )
+
+    def request_mixed(
+        self,
+        rows: Dict[str, np.ndarray],
+        ingest: bool = True,
+        route_info: Optional[Dict] = None,
+    ) -> Dict[str, Dict[str, np.ndarray]]:
+        """Serve one mixed multi-scenario batch with ONE fused dispatch.
+
+        The batch carries a per-row ``__scenario__`` tag
+        (:data:`SCENARIO_COL`, set by ``ShardRouter.submit``) alongside the
+        usual ``__valid__`` / ``__wait_us__`` meta columns.  Instead of
+        partitioning by scenario on the host and running one store query
+        per group, the whole batch enters :meth:`~repro.core.scenario.
+        ScenarioPlane.query_mixed` — one fused on-device route+query
+        program for all scenarios and shards — and the answer comes back
+        as ``{scenario: {feature: rows}}`` with each scenario's rows in
+        submission order, bit-identical to the per-group path.
+
+        Ingest preserves the legacy stream semantics exactly: real rows
+        are grouped by scenario (scenario order), each group sorted by
+        (key, ts), and ingested group-by-group — the same order the
+        per-group path produced.  Stats/metrics are recorded per scenario
+        (each request's latency sample is its queue wait plus this fused
+        batch's wall time) plus the aggregate, and ``batches`` counts ONE
+        batch, reflecting the single dispatch.
+        """
+        if SCENARIO_COL not in rows:
+            raise ValueError(
+                f"request_mixed needs a {SCENARIO_COL!r} tag column "
+                "(per-row scenario names; ShardRouter.submit sets it)"
+            )
+        tel = get_telemetry()
+        t0 = tel.clock.now()
+        tags = np.asarray(rows[SCENARIO_COL])
+        valid = rows.get("__valid__")
+        wait_us = rows.get("__wait_us__")
+        data = {c: v for c, v in rows.items() if not c.startswith("__")}
+        n_rows = len(next(iter(data.values())))
+        vmask = (
+            np.asarray(valid, bool)[:n_rows]
+            if valid is not None
+            else np.ones(n_rows, bool)
+        )
+        n_real = int(vmask.sum())
+        with tel.tracer.span(
+            "request", service=self.name, scenario="mixed", rows=n_real
+        ):
+            out = self.plane.query_mixed(
+                data, tags, mode=self.mode, valid=vmask,
+                route_info=route_info,
+            )
+            if ingest and n_real:
+                key_c = self.view.schema.key
+                ts_c = self.view.schema.ts
+                for s in self.scenarios:
+                    m = vmask & (tags == s)
+                    if not m.any():
+                        continue
+                    grp = {c: np.asarray(v)[m] for c, v in data.items()}
+                    order = np.lexsort(
+                        (np.asarray(grp[ts_c]), np.asarray(grp[key_c]))
+                    )
+                    self.store.ingest({c: v[order] for c, v in grp.items()})
+        dt = tel.clock.now() - t0
+        if wait_us is not None:
+            waits_s = np.asarray(wait_us, np.float64)[:n_rows] / 1e6
+        else:
+            waits_s = np.zeros(n_rows, np.float64)
+        agg_waits = waits_s[vmask]
+        req_lat = agg_waits + dt
+        m = tel.metrics
+        sreq = m.counter(
+            "service_requests_total", "requests served", "1",
+            labels=("service", "scenario"),
+        )
+        m.histogram(
+            "request_latency_seconds",
+            "per-request latency (queue wait + batch wall)", "s",
+            labels=("service",),
+        ).observe_array(req_lat, service=self.name)
+        if wait_us is not None and len(agg_waits):
+            m.histogram(
+                "queue_wait_seconds", "scheduler queue wait per request",
+                "s", labels=("service",),
+            ).observe_array(agg_waits, service=self.name)
+        if valid is not None and n_rows:
+            m.gauge(
+                "batch_occupancy_ratio",
+                "real rows / padded batch rows, last batch", "1",
+                labels=("service",),
+            ).set(n_real / n_rows, service=self.name)
+        self.stats.observe(dt, n_real)
+        self.stats.observe_requests(req_lat)
+        for s in self.scenarios:
+            msk = vmask & (tags == s)
+            n_s = int(msk.sum())
+            if not n_s:
+                continue
+            sreq.inc(n_s, service=self.name, scenario=s)
+            st = self.scenario_stats[s]
+            st.observe(dt, n_s)
+            st.observe_requests(waits_s[msk] + dt)
+        return out
 
     def _observe(self, latency_s, n_requests, scenario,
                  request_latencies_s=None):

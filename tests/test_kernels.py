@@ -255,3 +255,41 @@ def test_fold_levels_windowed_query_vs_bruteforce():
     xs, jn = np.asarray(x), np.asarray(j)
     ref = np.array([xs[jn[i]:i + 1].min() for i in range(N)])
     np.testing.assert_array_equal(out, ref)
+
+
+# -- route-rank (device-resident request routing) ---------------------------
+
+from repro.kernels.route.ops import route_rank
+from repro.kernels.route.ref import route_rank_ref
+
+
+@pytest.mark.parametrize("n,S", [(1, 1), (16, 4), (33, 8), (257, 3), (512, 8)])
+def test_route_rank_pallas_matches_ref(n, S):
+    """Pallas rank-within-shard == one-hot cumsum oracle, exactly —
+    rank is batch-order position within the row's shard, counts are
+    rows per shard."""
+    rng = np.random.default_rng(n + S)
+    shard = rng.integers(0, S, n).astype(np.int32)
+    r_ref, c_ref = route_rank_ref(jnp.asarray(shard), S)
+    r_pal, c_pal = route_rank(
+        jnp.asarray(shard), num_shards=S, impl="pallas", interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(r_ref), np.asarray(r_pal))
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
+    # rank is a bijection into [0, count) per shard
+    for s in range(S):
+        got = np.sort(np.asarray(r_ref)[shard == s])
+        np.testing.assert_array_equal(got, np.arange(len(got)))
+
+
+def test_route_rank_skewed_and_empty_shards():
+    """All rows on one shard (worst skew) and shards owning nothing."""
+    n, S = 96, 8
+    shard = np.full(n, 5, np.int32)
+    rank, counts = route_rank(
+        jnp.asarray(shard), num_shards=S, impl="pallas", interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(rank), np.arange(n))
+    want = np.zeros(S, np.int32)
+    want[5] = n
+    np.testing.assert_array_equal(np.asarray(counts), want)

@@ -185,3 +185,157 @@ def test_shard_router_end_to_end_matches_single():
     assert router.shard_histogram().sum() == len(rows)
     assert sharded.stats.requests == len(rows)
     assert sharded.stats.p99_ms >= sharded.stats.p50_ms > 0.0
+
+
+# -- device-resident mixed-batch routing --------------------------------------
+
+
+def _multi_views():
+    amt = Col("amount")
+    w1 = range_window(600, bucket=64)
+    return [
+        FeatureView(
+            "mx_fraud", FRAUD_SCHEMA,
+            {"s": w_sum(amt, w1), "c5": w_count(amt, rows_window(5))},
+        ),
+        FeatureView("mx_risk", FRAUD_SCHEMA, {"m": w_mean(amt, w1)}),
+        FeatureView(
+            "mx_velocity", FRAUD_SCHEMA, {"c8": w_count(amt, rows_window(8))},
+        ),
+    ]
+
+
+def _span_counts(tel):
+    counts = {}
+
+    def walk(s):
+        counts[s.name] = counts.get(s.name, 0) + 1
+        for c in s.children:
+            walk(c)
+
+    for s in tel.tracer.roots():
+        walk(s)
+    return counts
+
+
+def _drive_mixed(device_routing, n_req=26, pumps_of=9):
+    """Build a 3-scenario sharded service, push an interleaved stream
+    through the router in several pumps, return (per-pump outputs,
+    drained output, router, span counts)."""
+    from repro.obs import Telemetry, use_telemetry
+
+    views = _multi_views()
+    names = [v.name for v in views]
+    rng = np.random.default_rng(91)
+    rows = _rows(rng, n_req)
+    tel = Telemetry()
+    with use_telemetry(tel):
+        svc = FeatureService.build_multi(
+            "mx", views, num_keys=32, sharded=True, num_shards=4,
+            capacity=64, device_routing=device_routing,
+        )
+        router = ShardRouter(
+            svc, BatchScheduler(buckets=(1, 4, 16), max_batch=pumps_of)
+        )
+        pump_outs = []
+        for i, row in enumerate(rows):
+            router.submit(row, scenario=names[i % 3])
+            if (i + 1) % pumps_of == 0:
+                got = router.pump()
+                assert got is not None
+                pump_outs.append(got)
+        drained = router.drain()
+    return pump_outs, drained, router, _span_counts(tel), svc
+
+
+def test_mixed_pump_is_one_fused_dispatch():
+    """Tentpole acceptance: a mixed 3-scenario batch is served by ONE
+    fused device dispatch — one ``route.device`` span and one request
+    span per pump — where the host oracle runs one request per scenario
+    group and never touches ``route.device``."""
+    _, _, _, spans_d, _ = _drive_mixed(True)
+    _, _, _, spans_h, _ = _drive_mixed(False)
+    n_batches = 3  # 26 requests, pumps of 9 -> 9 + 9 + 8 (drain)
+    assert spans_d.get("route.device") == n_batches
+    assert spans_d.get("request") == n_batches
+    assert "query.compute" not in spans_d  # host-path span, device run
+    assert "route.device" not in spans_h
+    assert spans_h.get("request") == 3 * n_batches  # one per group
+
+
+def test_mixed_router_device_equals_host():
+    """Mixed batches through the device-routed plane equal the host
+    oracle bit-for-bit, pump by pump, with identical (scenario, shard)
+    occupancy histograms — with ingest on, across multiple pumps."""
+    pumps_d, drain_d, router_d, _, _ = _drive_mixed(True)
+    pumps_h, drain_h, router_h, _, _ = _drive_mixed(False)
+    assert len(pumps_d) == len(pumps_h)
+    for i, (a, b) in enumerate(zip(pumps_d + [drain_d], pumps_h + [drain_h])):
+        assert set(a) == set(b)
+        for s in a:
+            for f in a[s]:
+                np.testing.assert_array_equal(
+                    a[s][f], b[s][f], err_msg=f"pump={i} {s}/{f}"
+                )
+    np.testing.assert_array_equal(
+        router_d.shard_histogram(), router_h.shard_histogram()
+    )
+    hd, hh = (
+        router_d.scenario_shard_histogram(),
+        router_h.scenario_shard_histogram(),
+    )
+    assert set(hd) == set(hh)
+    for s in hd:
+        np.testing.assert_array_equal(hd[s], hh[s], err_msg=s)
+        assert hd[s].sum() > 0
+    # per-scenario QPS accounting survives the fused dispatch
+    st_d, st_h = router_d.service.scenario_stats, router_h.service.scenario_stats
+    for s in st_d:
+        assert st_d[s].requests == st_h[s].requests > 0
+
+
+@pytest.mark.parametrize("device_routing", [True, False])
+def test_drain_submission_order_across_pumps(device_routing):
+    """Satellite regression: drain() must return each scenario's rows in
+    submission order even when the queue empties over MULTIPLE pumps —
+    verified against per-row single-request answers on a frozen store."""
+    from repro.obs import Telemetry, use_telemetry
+
+    views = _multi_views()
+    names = [v.name for v in views]
+    rng = np.random.default_rng(17)
+    rows = _rows(rng, 22)
+    with use_telemetry(Telemetry()):
+        svc = FeatureService.build_multi(
+            "ord", views, num_keys=32, sharded=True, num_shards=4,
+            capacity=64, device_routing=device_routing,
+        )
+        # warm state, then freeze (ingest=False below) so expected
+        # per-row answers don't depend on serving order
+        hist = _rows(rng, 60, t0=90_000)
+        cols = {k: np.asarray([r[k] for r in hist]) for k in hist[0]}
+        o = np.lexsort((cols["ts"], cols["card"]))
+        svc.store.ingest({c: v[o] for c, v in cols.items()})
+        router = ShardRouter(
+            svc, BatchScheduler(buckets=(1, 4), max_batch=4), ingest=False
+        )
+        tags = [names[i % 3] for i in range(len(rows))]
+        for row, tag in zip(rows, tags):
+            router.submit(row, scenario=tag)
+        out = router.drain()  # 22 rows, pumps of <= 4 -> >= 6 pumps
+        for s in names:
+            srows = [r for r, t in zip(rows, tags) if t == s]
+            feats = svc.plane.views[s].features
+            assert set(out[s]) == set(feats)
+            assert len(out[s][list(feats)[0]]) == len(srows)
+            for i, r in enumerate(srows):
+                one = svc.request(
+                    {k: np.asarray([v]) for k, v in r.items()},
+                    ingest=False, scenario=s,
+                )
+                for f in feats:
+                    np.testing.assert_array_equal(
+                        np.asarray(out[s][f])[i : i + 1],
+                        np.asarray(one[f]),
+                        err_msg=f"{s} row {i} feature {f}",
+                    )

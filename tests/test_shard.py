@@ -432,3 +432,152 @@ def test_hash_routing_same_answers(hash_routing):
             np.testing.assert_array_equal(
                 np.asarray(a[f]), np.asarray(b[f]), err_msg=f"{mode}:{f}"
             )
+
+
+# -- device-resident request path (fused on-mesh routing) -------------------
+
+
+def test_device_perm_matches_host():
+    """The device Feistel mirror returns the SAME permuted id as the host
+    numpy permutation for every key — the routing split (shard, local)
+    is bit-identical on both sides."""
+    import jax.numpy as jnp
+
+    from repro.core.hashing import KeyPermutation
+
+    for upper in (1, 2, 5, 16, 100, 1 << 14):
+        perm = KeyPermutation(upper, salt=upper)
+        keys = np.arange(upper, dtype=np.int64)[:4096]
+        host = perm(keys)
+        dev = np.asarray(perm.device_call(jnp.asarray(keys, jnp.int32)))
+        np.testing.assert_array_equal(host, dev, err_msg=f"upper={upper}")
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4, 8])
+def test_device_host_single_routing_parity(num_shards):
+    """Tentpole acceptance: the fused device-routed path == the
+    host-routed oracle == the single-device store, bit-for-bit, both
+    query modes, replayed with interleaved ingest — and the per-shard
+    routing histograms (``route_info``) are identical under both paths,
+    so skew monitoring cannot drift between flavours."""
+    rng = np.random.default_rng(500 + num_shards)
+    tx, sec = make_tables(rng, n=160)
+    view = multi_table_view()
+    kw = dict(num_keys=K, capacity=128, secondary_num_keys={"merchants": NM})
+    single = OnlineFeatureStore(view, **kw)
+    host = ShardedOnlineStore(
+        view, num_shards=num_shards, device_routing=False, **kw
+    )
+    dev = ShardedOnlineStore(
+        view, num_shards=num_shards, device_routing=True, **kw
+    )
+    assert not host.device_routing and dev.device_routing
+    stores = (single, host, dev)
+    for t in ("wires", "accounts", "merchants"):
+        kc = DB.table(t).key
+        for s in stores:
+            s.ingest_table(t, _bykey(sec[t], kc))
+    key, ts = tx["acct"], tx["ts"]
+    for idx in replay_rounds(key, ts):
+        batch = {c: v[idx] for c, v in tx.items()}
+        for mode in ("naive", "preagg"):
+            ri_h, ri_d = {}, {}
+            a = single.query(batch, mode=mode)
+            b = host.query(batch, mode=mode, route_info=ri_h)
+            c = dev.query(batch, mode=mode, route_info=ri_d)
+            for f in view.features:
+                np.testing.assert_array_equal(
+                    np.asarray(a[f]), np.asarray(b[f]),
+                    err_msg=f"host S={num_shards} {mode}:{f}",
+                )
+                np.testing.assert_array_equal(
+                    np.asarray(b[f]), np.asarray(c[f]),
+                    err_msg=f"device S={num_shards} {mode}:{f}",
+                )
+            np.testing.assert_array_equal(
+                ri_h["shard_counts"], ri_d["shard_counts"],
+                err_msg=f"S={num_shards} {mode} histogram",
+            )
+            assert ri_d["shard_counts"].sum() == len(batch["ts"])
+        srt = _bykey(batch, "acct")
+        for s in stores:
+            s.ingest(srt)
+
+
+def test_device_routing_padding_mask_honored():
+    """Filler rows (a real row repeated, ``valid=False``) must not leak
+    into answers or histograms on either path: real-row answers equal
+    the unpadded query's and both paths count only valid rows."""
+    rng = np.random.default_rng(31)
+    tx, sec = make_tables(rng, n=160)
+    view = multi_table_view()
+    kw = dict(num_keys=K, capacity=128, secondary_num_keys={"merchants": NM})
+    host = ShardedOnlineStore(view, num_shards=4, device_routing=False, **kw)
+    dev = ShardedOnlineStore(view, num_shards=4, device_routing=True, **kw)
+    for t in ("wires", "accounts", "merchants"):
+        kc = DB.table(t).key
+        for s in (host, dev):
+            s.ingest_table(t, _bykey(sec[t], kc))
+            s2 = s  # noqa: F841  (clarity: both stores get the stream)
+    for s in (host, dev):
+        s.ingest(_bykey(tx, "acct"))
+    q, pad = 13, 3
+    req = {c: v[:q] for c, v in tx.items()}
+    padded = {
+        c: np.concatenate([v, np.repeat(v[-1:], pad)]) for c, v in req.items()
+    }
+    valid = np.arange(q + pad) < q
+    for mode in ("naive", "preagg"):
+        ri_h, ri_d = {}, {}
+        bare = dev.query(req, mode=mode)
+        b = host.query(padded, mode=mode, valid=valid, route_info=ri_h)
+        c = dev.query(padded, mode=mode, valid=valid, route_info=ri_d)
+        for f in view.features:
+            np.testing.assert_array_equal(
+                np.asarray(b[f])[:q], np.asarray(c[f])[:q],
+                err_msg=f"{mode}:{f}",
+            )
+            np.testing.assert_array_equal(
+                np.asarray(bare[f]), np.asarray(c[f])[:q],
+                err_msg=f"unpadded {mode}:{f}",
+            )
+        np.testing.assert_array_equal(
+            ri_h["shard_counts"], ri_d["shard_counts"]
+        )
+        assert ri_d["shard_counts"].sum() == q  # filler rows never counted
+
+
+def test_device_route_overflow_fallback_exact():
+    """Pathological skew — every row the same key, S=8 — overflows the
+    optimistic per-shard capacity; the in-span safe re-dispatch keeps
+    answers bit-identical to the host oracle and compiles exactly one
+    extra capacity (the compile budget: optimistic + safe, never more)."""
+    rng = np.random.default_rng(77)
+    tx, sec = make_tables(rng, n=160)
+    view = multi_table_view()
+    kw = dict(num_keys=K, capacity=128, secondary_num_keys={"merchants": NM})
+    host = ShardedOnlineStore(view, num_shards=8, device_routing=False, **kw)
+    dev = ShardedOnlineStore(view, num_shards=8, device_routing=True, **kw)
+    for t in ("wires", "accounts", "merchants"):
+        kc = DB.table(t).key
+        for s in (host, dev):
+            s.ingest_table(t, _bykey(sec[t], kc))
+    for s in (host, dev):
+        s.ingest(_bykey(tx, "acct"))
+    n = 64
+    req = dict(
+        acct=np.full(n, 3, np.int32),          # all rows -> one shard
+        ts=np.full(n, 3_000, np.int32),
+        amount=rng.gamma(2.0, 10.0, n).astype(np.float32),
+        merchant=rng.integers(0, NM, n).astype(np.int32),
+    )
+    a = host.query(req, mode="preagg")
+    b = dev.query(req, mode="preagg")
+    for f in view.features:
+        np.testing.assert_array_equal(
+            np.asarray(a[f]), np.asarray(b[f]), err_msg=f
+        )
+    # optimistic capacity for m=64 over S=8 is 16 < 64 rows on one shard,
+    # so the overflow re-dispatch must have compiled the safe capacity too
+    caps = {k[2] for k in dev._fused_fns}  # (pname, mode, bucket, num_scen)
+    assert caps == {16, 64}, caps
