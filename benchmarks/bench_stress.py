@@ -1,0 +1,129 @@
+"""Generated-plane scale: deploy time, aggregate QPS, lane-pack stats.
+
+The paper's "100+ scenarios on one platform" claim, measured: deploy
+N∈{16, 64, 128} generated views (repro.stress.generate) onto one 8-shard
+``ScenarioPlane``, then drive mixed-scenario traffic through the fused
+device-routing path.  Emitted per N:
+
+* ``deploy_s`` — build_multi wall time (layout planning + per-view
+  program setup; program *compilation* is lazy, so this is the planner's
+  scaling story);
+* ``lanes_primary`` / ``lanes_shared`` — lane-pack stats: how many
+  physical lanes the plan packs, and how many window-agg lanes CSE
+  deduplicated across views (the shared-ingest accounting the generator
+  deliberately stresses);
+* ``mixed_qps`` — aggregate requests/s through ``query_mixed`` batches
+  tagged round-robin across all N scenarios;
+* telemetry snapshot counts (requests served, route rows) so the
+  instrumentation layer is exercised at high scenario counts.
+
+Smoke mode runs N=16 only (CI keeps the script from rotting); the full
+ladder is the on-demand scaling curve.
+"""
+
+from __future__ import annotations
+
+import sys
+
+if __name__ == "__main__":
+    from repro.hostdevices import force_host_devices
+
+    force_host_devices(8)
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit
+from repro.core import ScenarioPlane
+from repro.core.expr import collect_window_aggs
+from repro.data.synthetic import STRESS_DB, stress_stream
+from repro.obs import get_telemetry
+from repro.stress.generate import (
+    NUM_ENTITIES,
+    NUM_ITEMS,
+    T_MAX,
+    filter_table_knobs,
+    gen_store_kwargs,
+    gen_views,
+    stress_rng,
+)
+
+SHARDS = 8
+ROWS = 900
+BATCH = 64
+
+
+def _one_scale(n: int) -> None:
+    views = gen_views(0, n)
+    kwargs = filter_table_knobs(gen_store_kwargs(0, n), views)
+    t0 = time.perf_counter()
+    plane = ScenarioPlane(
+        views, num_keys=NUM_ENTITIES, num_shards=SHARDS,
+        name=f"stress{n}", **kwargs,
+    )
+    deploy_s = time.perf_counter() - t0
+    emit("stress", f"deploy_n{n}_s", deploy_s, "s",
+         note=f"{SHARDS} shards")
+
+    # lane-pack stats: physical lanes vs CSE-deduplicated window aggs
+    lay = plane.store.layout
+    exprs = [e for v in views for e in v.features.values()]
+    distinct = len(collect_window_aggs(exprs))
+    per_view = sum(
+        len(collect_window_aggs(list(v.features.values()))) for v in views
+    )
+    emit("stress", f"lanes_primary_n{n}", len(lay.primary.lanes), "lanes")
+    emit("stress", f"lanes_shared_n{n}", per_view - distinct, "lanes",
+         note=f"{per_view} per-view waggs -> {distinct} packed")
+
+    tabs = stress_stream(
+        stress_rng(0, n, "default", "data"), ROWS,
+        num_entities=NUM_ENTITIES, num_items=NUM_ITEMS, t_max=T_MAX,
+    )
+    for t in plane.store._sec_names:
+        sch = STRESS_DB.table(t)
+        cols = tabs[t]
+        order = np.lexsort((cols[sch.ts], cols[sch.key]))
+        plane.ingest_table(t, {c: v[order] for c, v in cols.items()})
+    ev = tabs["events"]
+    order = np.lexsort((ev["ts"], ev["entity"]))
+    plane.ingest({c: v[order] for c, v in ev.items()})
+
+    scens = plane.scenarios
+    batches = common.scaled(8, 2)
+    rng = stress_rng(0, n, "default", "bench-traffic")
+
+    def probe(i: int):
+        idx = np.arange((i * BATCH) % (ROWS - BATCH),
+                        (i * BATCH) % (ROWS - BATCH) + BATCH)
+        cols = {c: v[idx] for c, v in ev.items()}
+        tags = np.array(
+            [scens[int(t)] for t in rng.integers(len(scens), size=BATCH)]
+        )
+        return cols, tags
+
+    # compile the fused shape, then time the steady state
+    plane.query_mixed(*probe(0))
+    t0 = time.perf_counter()
+    for i in range(batches):
+        plane.query_mixed(*probe(i + 1))
+    dt = time.perf_counter() - t0
+    emit("stress", f"mixed_qps_n{n}", batches * BATCH / dt, "req/s",
+         note=f"{batches}x{BATCH} rows, {len(scens)} scenarios")
+
+    snap = get_telemetry().metrics.snapshot()
+    emit("stress", f"metrics_n{n}", len(snap), "series",
+         note="telemetry registry size at this scenario count")
+
+
+def run() -> None:
+    for n in ([16] if common.SMOKE else [16, 64, 128]):
+        _one_scale(n)
+
+
+if __name__ == "__main__":
+    common.header()
+    run()
+    print("bench_stress done", file=sys.stderr)

@@ -27,6 +27,7 @@ BENCHES = [
     "signature",         # §1 trillion-dim signatures
     "join",              # §1 multi-table plane: LAST JOIN + WINDOW UNION
     "shard",             # sharded serving plane: throughput vs shard count
+    "stress",            # generated-plane scale: N views deploy/QPS/lanes
 ]
 
 

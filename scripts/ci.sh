@@ -11,6 +11,17 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
   export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ ${XLA_FLAGS}}"
 fi
+# property-test flavour: the hypothesis sweeps in test_consistency /
+# test_aggregates / test_permutation activate automatically when
+# hypothesis (requirements.txt) is importable; otherwise the
+# deterministic always-on sweeps carry the same contracts — surface
+# which flavour this run gets so a silently skipped sweep is visible
+python - <<'PY'
+import importlib.util
+present = importlib.util.find_spec("hypothesis") is not None
+print("hypothesis:", "present — randomized property sweeps active"
+      if present else "absent — deterministic fallback sweeps only")
+PY
 python -m pytest -x -q "$@"
 # telemetry gates: (1) the metrics-snapshot schema is an interface other
 # tooling parses — a full workload must emit exactly the golden catalog
@@ -53,6 +64,12 @@ for tag in sorted(want):
         assert pts[tag]["device_wins"], tag
 print(f"BENCH_route.json OK: {len(pts)} A/B points, device wins at S>=4")
 PY
+# scenario-explosion smoke: 16 generated views on one 8-shard plane must
+# survive 2 hot-deploy churn waves with mixed-scenario traffic under both
+# routing flavours, fused-vs-host parity probes, plane==dedicated-store
+# spot checks, and a seeded rotating offline==online verification subset
+# (full sweep: `pytest -m stress`; failures shrink to a minimal repro)
+python -m repro.stress --smoke
 # compile-time budget: offline MIN/MAX at N=5k must compile in < 30 s (the
 # seed's sparse-table formulation took ~150 s; keep the blowup dead)
 python -c "from benchmarks.bench_window_agg import compile_budget_check; compile_budget_check(5000, 30.0)"

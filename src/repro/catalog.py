@@ -46,7 +46,7 @@ the services that deploy each view.
 
 def build_catalog() -> str:
     """Render the full catalog markdown (deterministic)."""
-    from repro.scenarios import SCENARIOS
+    from repro.scenarios import GENERATED, SCENARIOS
 
     registry = FeatureRegistry()
     sections = [_HEADER]
@@ -104,6 +104,20 @@ def build_catalog() -> str:
             ]
         for v in views:
             sections.append(v.describe(registry))
+    # Generated scenario families render a scale-aware structural census
+    # (agg/window/union/join counts + sample entries) instead of 100+
+    # full pages — still deterministic, so the staleness gate holds.
+    for fam in GENERATED.values():
+        sections += [
+            f"## {fam.title} (`{fam.name}`)",
+            "",
+            fam.description,
+            "",
+            f"Run: `{fam.run}`",
+            "",
+            fam.summary_md(),
+            "",
+        ]
     return "\n".join(sections).rstrip() + "\n"
 
 

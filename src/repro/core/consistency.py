@@ -92,6 +92,7 @@ def verify_view(
     secondary: Optional[Dict[str, Dict[str, np.ndarray]]] = None,
     secondary_num_keys: Optional[Dict[str, int]] = None,
     num_shards: Optional[int] = None,
+    device_routing: bool = True,
 ) -> ConsistencyReport:
     """Run the full offline-vs-online verification for one view.
 
@@ -100,6 +101,10 @@ def verify_view(
     instead of the single-device store — the sharded serving plane must
     satisfy the *same* offline↔online contract, and its answers are
     bit-identical to the single store's, so one tolerance serves both.
+    ``device_routing`` picks the sharded request flavour (the fused
+    on-mesh path by default; ``False`` replays through the host-routed
+    oracle), so the consistency contract is checkable under both —
+    ignored for single-device replays.
 
     Multi-table views pass their secondary tables via ``secondary``
     ({table: {col: (M,) array}}).  The replay then interleaves ingest
@@ -130,6 +135,7 @@ def verify_view(
         num_buckets=num_buckets,
         bucket_size=bucket_size,
         secondary_num_keys=secondary_num_keys,
+        device_routing=device_routing,
     )
     schema = view.schema
     key = np.asarray(columns[schema.key])
@@ -200,5 +206,10 @@ def verify_view(
         max_rel_err=max_rel,
         per_feature=per_feature,
         passed=ok,
-        mode=mode if num_shards is None else f"{mode}/shards={num_shards}",
+        mode=(
+            mode
+            if num_shards is None
+            else f"{mode}/shards={num_shards}"
+            + ("" if device_routing else "/host")
+        ),
     )

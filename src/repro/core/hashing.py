@@ -135,6 +135,20 @@ class KeyPermutation:
             left, right = right, left ^ f
         return (left << self.half) | right
 
+    def _once_inv(self, x: np.ndarray) -> np.ndarray:
+        """Inverse of one Feistel pass: run the rounds backwards.
+
+        Forward round r maps (L, R) -> (R, L ^ F_r(R)), so its inverse is
+        (L', R') -> (R' ^ F_r(L'), L') with the same round function —
+        Feistel networks invert without inverting F.
+        """
+        left = x >> self.half
+        right = x & self.mask
+        for r in reversed(range(self.rounds)):
+            f = mix32_np(left, salt=self.salt + 0x9E37 * (r + 1)) & self.mask
+            left, right = right ^ f, left
+        return (left << self.half) | right
+
     def __call__(self, key) -> np.ndarray:
         """Vectorized permuted ids; walks cycles until back in [0, upper)."""
         x = np.atleast_1d(np.asarray(key)).astype(np.int64)
@@ -142,6 +156,31 @@ class KeyPermutation:
         bad = out >= self.upper
         while bad.any():
             out[bad] = self._once(out[bad])
+            bad = out >= self.upper
+        return out.reshape(np.shape(key))
+
+    def inverse(self, key) -> np.ndarray:
+        """Exact inverse of :meth:`__call__` on [0, upper):
+        ``inverse(perm(k)) == k`` for every k in the domain.
+
+        Cycle-walking inverts by walking the same cycle backwards: every
+        intermediate value of the forward walk lies outside [0, upper), so
+        applying the inverse pass until the value re-enters the domain
+        retraces the forward walk exactly.  Vectorized host-side numpy,
+        like the forward map — migrations use it to decode routed ring
+        coordinates back to global keys without materializing a
+        full-domain lookup table.
+        """
+        x = np.atleast_1d(np.asarray(key)).astype(np.int64)
+        if x.size and (x.min() < 0 or x.max() >= self.upper):
+            raise ValueError(
+                f"inverse domain is [0, {self.upper}): "
+                f"got [{x.min()}, {x.max()}]"
+            )
+        out = self._once_inv(x)
+        bad = out >= self.upper
+        while bad.any():
+            out[bad] = self._once_inv(out[bad])
             bad = out >= self.upper
         return out.reshape(np.shape(key))
 

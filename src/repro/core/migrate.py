@@ -353,20 +353,20 @@ def _decode_streams(
     C = plan.capacity
     streams = {}
     if plan.partitioned:
-        inv = None
-        if store._perm is not None:
-            fwd = store._perm(np.arange(store._perm.upper))
-            inv = np.empty(store._perm.upper, np.int64)
-            inv[fwd] = np.arange(store._perm.upper)
+        perm = store._perm
         for s in range(S):
             occupied = np.nonzero(cur[s] > 0)[0]
-            for l in occupied:
-                routed = int(l) * S + s
-                g = int(inv[routed]) if inv is not None else routed
+            if not len(occupied):
+                continue
+            routed = occupied.astype(np.int64) * S + s
+            # algebraic Feistel inverse — O(occupied keys), not a
+            # full-domain forward sweep to build a lookup table
+            gids = perm.inverse(routed) if perm is not None else routed
+            for l, g in zip(occupied, gids):
                 c = int(cur[s, l])
                 r = min(c, C)
                 slots = np.arange(c - r, c, dtype=np.int64) % C
-                streams[g] = (ts[s, l, slots], vals[s, l, slots], c)
+                streams[int(g)] = (ts[s, l, slots], vals[s, l, slots], c)
     else:
         # replicas are identical; decode shard 0
         occupied = np.nonzero(cur[0] > 0)[0]

@@ -25,8 +25,9 @@ import numpy as np
 from repro.core.storage import Database, TableSchema
 
 __all__ = [
-    "FRAUD_SCHEMA", "RECO_SCHEMA", "MULTITABLE_DB",
+    "FRAUD_SCHEMA", "RECO_SCHEMA", "MULTITABLE_DB", "STRESS_DB",
     "fraud_stream", "reco_stream", "lm_stream", "multitable_stream",
+    "stress_stream",
 ]
 
 FRAUD_SCHEMA = TableSchema(
@@ -61,6 +62,119 @@ MULTITABLE_DB = Database(
         ),
     ),
 )
+
+
+STRESS_DB = Database(
+    name="stress_plane",
+    primary=TableSchema(
+        name="events", key="entity", ts="ts",
+        numeric=("amount", "quantity", "score", "item"),
+    ),
+    secondary=(
+        # union streams in the primary key space; `refunds` shares two
+        # numeric columns with the primary (so two-table union args can
+        # reference either), `clicks` only `amount` (so three-way unions
+        # exercise the schema-compatibility narrowing)
+        TableSchema(
+            name="refunds", key="entity", ts="ts",
+            numeric=("amount", "quantity"),
+        ),
+        TableSchema(name="clicks", key="entity", ts="ts", numeric=("amount",)),
+        # LAST JOIN targets: a profile table keyed like the primary and a
+        # dimension registry keyed by the `item` column
+        TableSchema(
+            name="profiles", key="entity", ts="ts",
+            numeric=("tier", "spend_limit"),
+        ),
+        TableSchema(
+            name="items", key="item", ts="ts",
+            numeric=("base_price", "popularity"),
+        ),
+    ),
+)
+
+
+def stress_stream(
+    rng: np.random.Generator,
+    n: int,
+    num_entities: int = 48,
+    num_items: int = 24,
+    t_max: int = 40_000,
+) -> Dict[str, Dict[str, np.ndarray]]:
+    """Matched synthetic data for :data:`STRESS_DB` ({table: {col: array}}).
+
+    Built for the stress generator's verification loop: primary
+    timestamps are globally unique (window tie-semantics trivially
+    well-defined, so offline==online stays exact for order-sensitive
+    aggregates), join targets carry a t=0 baseline row for every key plus
+    sporadic revisions, and the union streams are ~n/4 and ~n/6 rows in
+    the same entity id space.
+    """
+    ts = (
+        np.sort(rng.choice(t_max, size=n, replace=False))
+        if n <= t_max
+        else np.sort(rng.integers(0, t_max, n))
+    ).astype(np.int32)
+    events = dict(
+        entity=rng.integers(0, num_entities, n).astype(np.int32),
+        ts=ts,
+        amount=rng.gamma(1.8, 55.0, n).astype(np.float32),
+        quantity=rng.integers(1, 9, n).astype(np.float32),
+        score=rng.beta(2.0, 5.0, n).astype(np.float32),
+        item=rng.integers(0, num_items, n).astype(np.int32),
+    )
+
+    nr = max(n // 4, 1)
+    refunds = dict(
+        entity=rng.integers(0, num_entities, nr).astype(np.int32),
+        ts=np.sort(rng.integers(0, t_max, nr)).astype(np.int32),
+        amount=rng.gamma(2.0, 80.0, nr).astype(np.float32),
+        quantity=rng.integers(1, 5, nr).astype(np.float32),
+    )
+
+    nc = max(n // 6, 1)
+    clicks = dict(
+        entity=rng.integers(0, num_entities, nc).astype(np.int32),
+        ts=np.sort(rng.integers(0, t_max, nc)).astype(np.int32),
+        amount=rng.gamma(1.2, 10.0, nc).astype(np.float32),
+    )
+
+    updates = max(num_entities // 2, 1)
+    profiles = dict(
+        entity=np.concatenate(
+            [np.arange(num_entities), rng.integers(0, num_entities, updates)]
+        ).astype(np.int32),
+        ts=np.concatenate(
+            [np.zeros(num_entities), rng.integers(1, t_max, updates)]
+        ).astype(np.int32),
+        tier=rng.integers(0, 5, num_entities + updates).astype(np.float32),
+        spend_limit=rng.uniform(
+            200.0, 10_000.0, num_entities + updates
+        ).astype(np.float32),
+    )
+
+    refreshes = max(num_items // 2, 1)
+    items = dict(
+        item=np.concatenate(
+            [np.arange(num_items), rng.integers(0, num_items, refreshes)]
+        ).astype(np.int32),
+        ts=np.concatenate(
+            [np.zeros(num_items), rng.integers(1, t_max, refreshes)]
+        ).astype(np.int32),
+        base_price=rng.gamma(2.0, 30.0, num_items + refreshes).astype(
+            np.float32
+        ),
+        popularity=rng.beta(1.5, 4.0, num_items + refreshes).astype(
+            np.float32
+        ),
+    )
+    return {
+        "events": events,
+        "refunds": refunds,
+        "clicks": clicks,
+        "profiles": profiles,
+        "items": items,
+    }
 
 
 def fraud_stream(

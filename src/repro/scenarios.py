@@ -39,6 +39,8 @@ from repro.data.synthetic import FRAUD_SCHEMA, MULTITABLE_DB, RECO_SCHEMA
 __all__ = [
     "Scenario",
     "SCENARIOS",
+    "GeneratedFamily",
+    "GENERATED",
     "fraud_view",
     "reco_view",
     "multi_table_view",
@@ -292,6 +294,68 @@ SCENARIOS: Dict[str, Scenario] = {
             run="PYTHONPATH=src python examples/multi_scenario.py",
             views=multi_scenario_views,
             hot_deployed=("merchant_watch",),
+        ),
+    )
+}
+
+
+# ---------------------------------------------------------------------------
+# Generated scenario families (the stress suite's registry hook)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneratedFamily:
+    """A seeded family of GENERATED scenario views — the catalog entry for
+    the paper's "100+ scenarios" scale claim.
+
+    Unlike :class:`Scenario`, the views are not hand-written: they come
+    from the deterministic generator in :mod:`repro.stress.generate`, so
+    the catalog renders a scale-aware structural census instead of 100+
+    full entries.  ``(seed, n, profile)`` pins the family byte-exactly.
+    """
+
+    name: str
+    title: str
+    description: str
+    run: str
+    seed: int
+    n: int
+    profile: str
+
+    def views(self) -> List[FeatureView]:
+        from repro.stress.generate import gen_views
+
+        return gen_views(self.seed, self.n, self.profile)
+
+    def summary_md(self) -> str:
+        from repro.stress.generate import render_summary_md
+
+        return render_summary_md(
+            self.views(), seed=self.seed, n=self.n, profile=self.profile
+        )
+
+
+GENERATED: Dict[str, GeneratedFamily] = {
+    f.name: f
+    for f in (
+        GeneratedFamily(
+            name="stress",
+            title="Scenario explosion (generated stress suite)",
+            description=(
+                "128 seeded, deterministic feature views sampling the "
+                "entire expr IR surface — every Agg, both window modes, "
+                "WINDOW UNIONs over shared streams, multi-table LAST "
+                "JOINs, Signature/Hash lanes, evolve chains — deployed "
+                "onto one sharded plane and churned by the stress "
+                "harness (hot-deploy waves, mixed traffic under both "
+                "routing flavours, continuous sampled verification with "
+                "failure shrinking)."
+            ),
+            run="PYTHONPATH=src python -m repro.stress --smoke",
+            seed=0,
+            n=128,
+            profile="default",
         ),
     )
 }

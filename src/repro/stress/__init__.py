@@ -1,0 +1,38 @@
+"""Scenario explosion — the standing stress suite.
+
+FeatInsight's headline claim is 100+ real-world scenarios served from one
+platform with consistent offline/online feature computation; the repo's
+hand-written catalog has five.  This package closes the gap with a seeded,
+deterministic generator (:mod:`repro.stress.generate`) that composes the
+full expr IR into N>=100 feature views, and a churn harness
+(:mod:`repro.stress.harness`) that deploys them onto one sharded
+``ScenarioPlane``, hot-deploys more in waves, drives mixed-scenario
+traffic under both routing flavours, and continuously samples the
+offline==online verification — shrinking any failure down to a minimal,
+runnable repro script.
+
+Entry points::
+
+    python -m repro.stress --smoke      # N=16, fixed seed, 8 shards (CI)
+    python -m repro.stress --n 128      # the full sweep
+    pytest -m stress                    # the slow test-suite flavour
+"""
+
+from repro.stress.generate import (  # noqa: F401
+    NUM_ENTITIES,
+    NUM_ITEMS,
+    PROFILES,
+    T_MAX,
+    filter_table_knobs,
+    gen_store_kwargs,
+    gen_views,
+    render_summary_md,
+    stress_rng,
+    summarize_views,
+    view_fingerprint,
+)
+from repro.stress.harness import (  # noqa: F401
+    StressFailure,
+    StressReport,
+    run_stress,
+)

@@ -1,0 +1,108 @@
+"""KeyPermutation property coverage (ISSUE 9 satellite).
+
+The Feistel permutation is the sharded plane's routing primitive and —
+since the algebraic inverse — the migration decoder's too.  Three
+contracts, over randomized key domains including non-pow2 sizes:
+
+* bijectivity on [0, upper) and exact round-trips both ways:
+  ``inverse(perm(k)) == k`` and ``perm(inverse(k)) == k``;
+* host/device bit-exactness: ``device_call`` (the fused request path)
+  equals ``__call__`` (ingest routing) for every key;
+* ``mix32_np`` == ``mix32`` bit-exactness (the Feistel round function's
+  two implementations), including negative int32 inputs.
+
+Deterministic sweeps always run; richer randomized sweeps activate when
+``hypothesis`` is installed (requirements.txt), same gating pattern as
+tests/test_aggregates.py.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.hashing import KeyPermutation, mix32, mix32_np
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+# deliberately non-pow2-heavy: primes, pow2±1, tiny and mid-size domains
+UPPERS = [1, 2, 3, 5, 7, 12, 16, 17, 48, 100, 255, 256, 257, 1000, 4096, 5001]
+
+
+@pytest.mark.parametrize("upper", UPPERS)
+def test_bijection_and_roundtrip(upper):
+    perm = KeyPermutation(upper, salt=upper * 7 + 1)
+    k = np.arange(upper, dtype=np.int64)
+    fwd = perm(k)
+    # bijection onto the exact domain (cycle-walking never escapes it)
+    assert np.array_equal(np.sort(fwd), k)
+    # both round-trip directions are exact
+    assert np.array_equal(perm.inverse(fwd), k)
+    assert np.array_equal(perm(perm.inverse(k)), k)
+
+
+@pytest.mark.parametrize("upper", [7, 48, 257, 5001])
+def test_host_device_bit_exact(upper):
+    perm = KeyPermutation(upper, salt=3)
+    k = np.arange(upper, dtype=np.int64)
+    host = perm(k)
+    dev = np.asarray(perm.device_call(jnp.asarray(k, jnp.int32)))
+    assert np.array_equal(host, dev)
+
+
+def test_mix32_host_device_bit_exact():
+    rng = np.random.default_rng(9)
+    x = rng.integers(-(2**31), 2**31, size=4096, dtype=np.int64)
+    for salt in (0, 1, 0x9E37, 0x7FFFFFFF):
+        a = mix32_np(x, salt=salt)
+        b = np.asarray(mix32(jnp.asarray(x, jnp.int32), salt=salt))
+        assert np.array_equal(a, b), salt
+
+
+def test_inverse_rejects_out_of_domain():
+    perm = KeyPermutation(100)
+    with pytest.raises(ValueError):
+        perm.inverse(np.array([100]))
+    with pytest.raises(ValueError):
+        perm.inverse(np.array([-1]))
+
+
+def test_scalar_shape_preserved():
+    perm = KeyPermutation(48, salt=5)
+    v = perm(7)
+    assert np.shape(v) == ()
+    assert perm.inverse(v) == 7
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=60)
+    @given(
+        upper=st.integers(min_value=1, max_value=1 << 16),
+        salt=st.integers(min_value=0, max_value=2**31 - 1),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_roundtrip_randomized(upper, salt, seed):
+        perm = KeyPermutation(upper, salt=salt)
+        rng = np.random.default_rng(seed)
+        k = rng.integers(0, upper, size=min(upper, 512), dtype=np.int64)
+        assert np.array_equal(perm.inverse(perm(k)), k)
+        assert np.array_equal(perm(perm.inverse(k)), k)
+
+    @settings(deadline=None, max_examples=30)
+    @given(
+        upper=st.integers(min_value=1, max_value=1 << 14),
+        salt=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_host_device_randomized(upper, salt):
+        perm = KeyPermutation(upper, salt=salt)
+        k = np.arange(min(upper, 1024), dtype=np.int64)
+        host = perm(k)
+        dev = np.asarray(perm.device_call(jnp.asarray(k, jnp.int32)))
+        assert np.array_equal(host, dev)
