@@ -1,0 +1,227 @@
+"""Kernel-layer roofline: XLA vs Pallas for fold_levels + fused ingest.
+
+The two hot loops ISSUE 10 rewrote:
+
+* ``fold_levels`` — the doubling segmented combine behind offline
+  MIN/MAX and the preagg tail fold.  The grid-tiled kernel streams row
+  tiles through VMEM (the old 2^17-row cap is gone), so ``impl="auto"``
+  stays Pallas at every size on TPU.
+* ``fused_ingest`` — ring scatter + bucket pre-agg merge in ONE pass
+  over the batch, vs the split two-dispatch XLA sequence
+  (``ring_ingest`` + ``bucket_ingest``, preserved as the ``impl="xla"``
+  oracle).
+
+Sweeps N ∈ {10^5, 10^6, 10^7} (smoke: one tiny N) and persists the
+numbers machine-readably to ``benchmarks/BENCH_fold.json``, re-checked
+by ``scripts/ci.sh``: bit-exact parity is gated on EVERY backend (on CPU
+the Pallas kernels run via ``interpret=True`` at a small parity size —
+interpret timings are meaningless and never recorded); the
+"Pallas >= XLA at N >= 10^6" speed gate applies only where the kernels
+lower natively (TPU).
+
+Roofline context (why Pallas should win): per row, fold_levels moves
+~4·(2 + KL) bytes of HBM traffic (read x + seg once, write KL level
+planes); the XLA reference materializes every intermediate level
+round-trip.  A fused-ingest row moves the batch payload plus one ring
+slot write and amortized bucket-state RMW — the split sequence reads the
+batch twice and round-trips the bucket arrays.  Achieved GB/s = modeled
+bytes / median time, reported against the hardware model's HBM peak
+(``repro.launch.roofline.HBM_BW``) so the gap to roof is a number, not a
+vibe.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, timeit
+from repro.core import preagg as pg
+from repro.core import storage as st
+from repro.kernels.ingest.ops import fused_ingest
+from repro.kernels.window_agg.ops import fold_levels
+from repro.kernels.window_agg.ref import fold_num_levels
+from repro.launch.roofline import HBM_BW
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_fold.json")
+
+FOLD_OP = "max"  # exact value-pick: XLA/Pallas parity must be bit-exact
+
+# ingest state geometry (full mode): sized so the state arrays are
+# HBM-resident but dwarfed by the 10^7-row batch payload
+ING_K, ING_C, ING_F, ING_NB, ING_BS = 1024, 1024, 4, 256, 64
+
+
+def _fold_inputs(rng, n):
+    """(x, seg) for a segmented fold over ~n/4096-row key runs."""
+    key = np.sort(rng.integers(0, max(n // 4096, 4), n).astype(np.int32))
+    idx = np.arange(n, dtype=np.int32)
+    first = np.concatenate([[True], key[1:] != key[:-1]])
+    seg = np.maximum.accumulate(np.where(first, idx, 0)).astype(np.int32)
+    x = rng.standard_normal(n).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(seg)
+
+
+def _ingest_batch(rng, n, num_keys, t_max, f):
+    """(key, ts, vals) sorted by (key, ts) — one padded-free batch."""
+    key = np.sort(rng.integers(0, num_keys, n).astype(np.int32))
+    ts = rng.integers(0, t_max, n).astype(np.int32)
+    order = np.lexsort((ts, key))
+    vals = rng.standard_normal((n, f)).astype(np.float32)
+    return (jnp.asarray(key[order]), jnp.asarray(ts[order]),
+            jnp.asarray(vals))
+
+
+def _ingest_state(num_keys, cap, f, nb, bs):
+    ring = st.ring_init(num_keys, cap, f)
+    bagg = pg.bucket_init(num_keys, nb, f, bs)
+    return (ring.ts, ring.vals, ring.cursor,
+            bagg.stats, bagg.bitmap, bagg.bucket)
+
+
+def _fold_bytes(n: int) -> int:
+    """Modeled HBM traffic: read x + seg (4 B each), write KL levels."""
+    return n * 4 * (2 + fold_num_levels(n))
+
+
+def _ingest_bytes(n: int, f: int) -> int:
+    """Modeled HBM floor: read key/ts/vals, write ring ts/vals slots
+    (bucket-state RMW amortizes over rows and is excluded — the model is
+    a lower bound shared by both impls)."""
+    return n * (8 + 4 * f) + n * (4 + 4 * f)
+
+
+def _gbps(nbytes: int, seconds: float) -> float:
+    return nbytes / seconds / 1e9 if seconds > 0 else 0.0
+
+
+def _fold_point(rng, n: int, native_pallas: bool) -> dict:
+    x, seg = _fold_inputs(rng, n)
+    nbytes = _fold_bytes(n)
+    tx = timeit(lambda: fold_levels(x, seg, op=FOLD_OP, impl="xla"),
+                iters=3)
+    point = {
+        "rows": n,
+        "levels": fold_num_levels(n),
+        "bytes_moved": nbytes,
+        "xla": tx,
+        "xla_gbps": _gbps(nbytes, tx["median_s"]),
+        "pallas": None,
+        "pallas_gbps": None,
+    }
+    emit("fold", f"fold_xla_N{n}_ms", tx["median_s"] * 1e3, "ms",
+         f"{point['xla_gbps']:.1f} GB/s of {HBM_BW / 1e9:.0f} peak")
+    if native_pallas:
+        tp = timeit(lambda: fold_levels(x, seg, op=FOLD_OP, impl="pallas"),
+                    iters=3)
+        point["pallas"] = tp
+        point["pallas_gbps"] = _gbps(nbytes, tp["median_s"])
+        emit("fold", f"fold_pallas_N{n}_ms", tp["median_s"] * 1e3, "ms",
+             f"{point['pallas_gbps']:.1f} GB/s of {HBM_BW / 1e9:.0f} peak")
+    return point
+
+
+def _ingest_point(rng, n: int, native_pallas: bool) -> dict:
+    nk = min(ING_K, max(n // 64, 8))
+    batch = _ingest_batch(rng, n, nk, ING_NB * ING_BS, ING_F)
+    state = _ingest_state(nk, ING_C, ING_F, ING_NB, ING_BS)
+    nbytes = _ingest_bytes(n, ING_F)
+    tx = timeit(
+        lambda: fused_ingest(*state, *batch, bucket_size=ING_BS,
+                             impl="xla"),
+        iters=3,
+    )
+    point = {
+        "rows": n,
+        "bytes_moved": nbytes,
+        "split_xla": tx,
+        "split_xla_gbps": _gbps(nbytes, tx["median_s"]),
+        "fused_pallas": None,
+        "fused_pallas_gbps": None,
+    }
+    emit("fold", f"ingest_split_N{n}_ms", tx["median_s"] * 1e3, "ms",
+         f"{point['split_xla_gbps']:.1f} GB/s of {HBM_BW / 1e9:.0f} peak")
+    if native_pallas:
+        tp = timeit(
+            lambda: fused_ingest(*state, *batch, bucket_size=ING_BS,
+                                 impl="pallas"),
+            iters=3,
+        )
+        point["fused_pallas"] = tp
+        point["fused_pallas_gbps"] = _gbps(nbytes, tp["median_s"])
+        emit("fold", f"ingest_fused_N{n}_ms", tp["median_s"] * 1e3, "ms",
+             f"{point['fused_pallas_gbps']:.1f} GB/s of "
+             f"{HBM_BW / 1e9:.0f} peak")
+    return point
+
+
+def _parity(rng, native_pallas: bool) -> dict:
+    """Bit-exact XLA-vs-Pallas parity, gated on every backend — on CPU
+    via interpret mode at a small size (tier-1 covers the 2^17 straddle;
+    this keeps the bench itself honest end to end)."""
+    interp = not native_pallas
+    n_fold = common.scaled(8_192, 1_024)
+    x, seg = _fold_inputs(rng, n_fold)
+    ref = fold_levels(x, seg, op=FOLD_OP, impl="xla")
+    ker = fold_levels(x, seg, op=FOLD_OP, impl="pallas", interpret=interp)
+    fold_err = float(np.max(np.abs(np.asarray(ref) - np.asarray(ker))))
+
+    n_ing = common.scaled(2_048, 512)
+    nk = max(n_ing // 64, 8)
+    batch = _ingest_batch(rng, n_ing, nk, ING_NB * ING_BS, ING_F)
+    state = _ingest_state(nk, 64, ING_F, ING_NB, ING_BS)
+    out_x = fused_ingest(*state, *batch, bucket_size=ING_BS, impl="xla")
+    out_p = fused_ingest(*state, *batch, bucket_size=ING_BS,
+                         impl="pallas", interpret=interp)
+    ing_err = max(
+        float(np.max(np.abs(
+            np.asarray(a, np.float64) - np.asarray(b, np.float64)
+        )))
+        for a, b in zip(out_x, out_p)
+    )
+    emit("fold", "fold_parity_max_abs_err", fold_err, "abs",
+         f"N={n_fold}, interpret={interp}")
+    emit("fold", "ingest_parity_max_abs_err", ing_err, "abs",
+         f"N={n_ing}, interpret={interp}")
+    return {
+        "fold_rows": n_fold, "fold_max_abs_err": fold_err,
+        "ingest_rows": n_ing, "ingest_max_abs_err": ing_err,
+        "interpret": interp,
+    }
+
+
+def run() -> None:
+    rng = np.random.default_rng(11)
+    backend = jax.default_backend()
+    native = backend == "tpu"
+    sweep = [20_000] if common.SMOKE else [10**5, 10**6, 10**7]
+
+    results = {
+        "backend": backend,
+        "smoke": common.SMOKE,
+        "pallas_native": native,
+        "hbm_peak_gbps": HBM_BW / 1e9,
+        "fold_op": FOLD_OP,
+        "fold": {},
+        "ingest": {},
+    }
+    for n in sweep:
+        results["fold"][f"N{n}"] = _fold_point(rng, n, native)
+    for n in sweep:
+        results["ingest"][f"N{n}"] = _ingest_point(rng, n, native)
+    results["parity"] = _parity(rng, native)
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("fold", "artifact_points",
+         len(results["fold"]) + len(results["ingest"]), "points", OUT_PATH)
+
+
+if __name__ == "__main__":
+    run()

@@ -20,6 +20,7 @@ from benchmarks.common import emit, header
 BENCHES = [
     "feature_latency",   # §3.3 fraud: naive vs tuned vs featinsight
     "window_agg",        # §2 pre-aggregation vs window size + kernel check
+    "fold",              # kernel roofline: XLA vs Pallas fold + fused ingest
     "ingest",            # §3.2 millisecond updates / 720M orders/day
     "wide_view",         # Fig. 4: 784-feature banking view
     "deploy",            # §3.2 one-click deployment pipeline

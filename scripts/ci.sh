@@ -64,11 +64,38 @@ for tag in sorted(want):
         assert pts[tag]["device_wins"], tag
 print(f"BENCH_route.json OK: {len(pts)} A/B points, device wins at S>=4")
 PY
+# kernel-roofline gate: bench_fold (part of the benchmark smoke above)
+# persists XLA-vs-Pallas fold_levels + fused-vs-split ingest numbers to
+# BENCH_fold.json; re-check the artifact so a silently skipped section
+# cannot pass CI.  Bit-exact parity is gated on EVERY backend (interpret
+# mode on CPU); the speed claim — Pallas >= XLA at N >= 10^6 — only
+# where the kernels lower natively (TPU)
+python - <<'PY'
+import json
+data = json.load(open("benchmarks/BENCH_fold.json"))
+assert data["fold"] and data["ingest"], "empty BENCH_fold sections"
+par = data["parity"]
+assert par["fold_max_abs_err"] == 0.0, par
+assert par["ingest_max_abs_err"] == 0.0, par
+for sec, xk, pk in (("fold", "xla", "pallas"),
+                    ("ingest", "split_xla", "fused_pallas")):
+    for tag, pt in data[sec].items():
+        assert pt[xk]["median_s"] > 0, (sec, tag)
+        if data["pallas_native"] and pt["rows"] >= 10**6:
+            assert pt[pk]["median_s"] <= pt[xk]["median_s"], (
+                f"{sec} {tag}: Pallas slower than XLA on TPU")
+n = len(data["fold"]) + len(data["ingest"])
+print(f"BENCH_fold.json OK: {n} points, parity exact, "
+      f"backend={data['backend']}")
+PY
 # scenario-explosion smoke: 16 generated views on one 8-shard plane must
 # survive 2 hot-deploy churn waves with mixed-scenario traffic under both
 # routing flavours, fused-vs-host parity probes, plane==dedicated-store
 # spot checks, and a seeded rotating offline==online verification subset
-# (full sweep: `pytest -m stress`; failures shrink to a minimal repro)
+# (full sweep: `pytest -m stress`; failures shrink to a minimal repro).
+# Ingest inside the waves rides the fused-ingest dispatcher (impl="auto":
+# the one-pass Pallas kernel on TPU, its bit-identical XLA oracle here),
+# so the fused path is exercised under churn on every CI run
 python -m repro.stress --smoke
 # compile-time budget: offline MIN/MAX at N=5k must compile in < 30 s (the
 # seed's sparse-table formulation took ~150 s; keep the blowup dead)

@@ -42,6 +42,12 @@ State families (one per representation, shared by several aggs):
              sketch (top-k by (ts, rank, pos) of a union is associative)
              — TOPN_FREQ, now union-composable too.
 
+All four families are bucket-composable: the bucket store persists stat
+vectors and bitmaps for the lane/bitmap aggs, and per-bucket extreme /
+tail states (with a per-key arrival counter as the stored ``pos``) for
+FIRST / LAST / TOPN_FREQ — so every aggregate answers long RANGE windows
+from pre-aggregates and ``preagg_fallback_total`` stays at zero.
+
 The merge order matches :func:`repro.core.join.merge_streams`: at equal
 timestamps, earlier streams (union tables, in declaration order) sort
 *before* later ones, and the primary stream is last; within a stream,
@@ -476,12 +482,21 @@ class AggSpec:
         stats: jnp.ndarray,   # (Q, M, NUM_STATS) gathered bucket stat rows
         bitmap: jnp.ndarray,  # (Q, M) gathered bucket bitmaps
         ok: jnp.ndarray,      # (Q, M) bucket-valid mask
+        ext: Dict[str, jnp.ndarray] = None,  # gathered extreme/tail arrays
+        rank: jnp.ndarray = None,            # stream rank to stamp on states
     ) -> Dict[str, jnp.ndarray]:
         """Fold pre-aggregated bucket states (bucket_composable specs only).
 
         The bucket store persists full stat vectors and bitmaps — i.e. the
         lifted-and-combined states of this algebra — so composing a long
-        window is just more ``combine``.
+        window is just more ``combine``.  Extreme/tail specs read their
+        persisted merge-order states from ``ext`` instead: for extreme,
+        ``{ts, pos, val, has}`` each (Q, M, 2) with the trailing axis the
+        direction (0 = oldest, 1 = newest); for tail, ``{ts, pos, val,
+        valid}`` each (Q, M, T) newest-first per bucket.  Buckets cover
+        disjoint ts ranges, so cross-bucket ties never happen and the
+        stored per-key arrival ``pos`` only ever breaks ties within one
+        bucket — where it is exact.
         """
         if self.state == "lanes":
             return {
@@ -494,7 +509,51 @@ class AggSpec:
             return {
                 "bits": _or_reduce(jnp.where(ok, bitmap, jnp.int32(0)), 1)
             }
-        raise ValueError(f"{self.agg} states are not bucket-composable")
+        if ext is None:
+            raise ValueError(
+                f"{self.agg} bucket states need the store's extreme/tail "
+                "arrays (layout planned without them)"
+            )
+        if self.state == "extreme":
+            d = 1 if self.newest else 0
+            ts, pos = ext["ts"][..., d], ext["pos"][..., d]
+            val = ext["val"][..., d]
+            has = ext["has"][..., d] & ok
+            if self.newest:
+                ts_m = jnp.where(has, ts, _TS_MIN)
+                best_ts = jnp.max(ts_m, axis=1)
+                cand = has & (ts == best_ts[:, None])
+                pos_m = jnp.where(cand, pos, _TS_MIN)
+                best_pos = jnp.max(pos_m, axis=1)
+            else:
+                ts_m = jnp.where(has, ts, _TS_MAX)
+                best_ts = jnp.min(ts_m, axis=1)
+                cand = has & (ts == best_ts[:, None])
+                pos_m = jnp.where(cand, pos, _TS_MAX)
+                best_pos = jnp.min(pos_m, axis=1)
+            pick = jnp.argmax(cand & (pos == best_pos[:, None]), axis=1)
+            v = jnp.take_along_axis(val, pick[:, None], axis=1)[:, 0]
+            return {
+                "ts": best_ts,
+                "rank": jnp.broadcast_to(rank, best_ts.shape),
+                "pos": best_pos,
+                "val": v,
+                "has": has.any(axis=1),
+            }
+        # tail: every gathered bucket's tail entries, newest TOPN_TAIL kept
+        flat = lambda x: x.reshape(x.shape[0], -1)  # noqa: E731
+        valid = flat(ext["valid"] & ok[..., None])
+        state = {
+            "ts": flat(ext["ts"]),
+            "rank": jnp.broadcast_to(rank, valid.shape),
+            "pos": flat(ext["pos"]),
+            "val": flat(ext["val"]),
+            "valid": valid,
+        }
+        merged = _sort_tail_desc(state)
+        if merged["ts"].shape[-1] > TOPN_TAIL:
+            merged = {k: v[..., :TOPN_TAIL] for k, v in merged.items()}
+        return merged
 
     # -- finalize -----------------------------------------------------------
 
@@ -545,9 +604,13 @@ AGG_SPECS: Dict[Agg, AggSpec] = {
     Agg.DISTINCT_APPROX: AggSpec(
         Agg.DISTINCT_APPROX, "bitmap", bucket_composable=True
     ),
-    Agg.FIRST: AggSpec(Agg.FIRST, "extreme", newest=False),
-    Agg.LAST: AggSpec(Agg.LAST, "extreme", newest=True),
-    Agg.TOPN_FREQ: AggSpec(Agg.TOPN_FREQ, "tail"),
+    Agg.FIRST: AggSpec(
+        Agg.FIRST, "extreme", newest=False, bucket_composable=True
+    ),
+    Agg.LAST: AggSpec(
+        Agg.LAST, "extreme", newest=True, bucket_composable=True
+    ),
+    Agg.TOPN_FREQ: AggSpec(Agg.TOPN_FREQ, "tail", bucket_composable=True),
 }
 
 

@@ -39,6 +39,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.aggregates import agg_spec
 from repro.core.expr import (
     BinOp,
     Col,
@@ -143,10 +144,19 @@ class RingPlan:
 
 @dataclasses.dataclass(frozen=True)
 class BucketPlan:
-    """Sizing of the two-level pre-aggregation bucket store."""
+    """Sizing of the two-level pre-aggregation bucket store.
+
+    ``extreme`` / ``tail`` declare which merge-order state families the
+    store persists alongside the stat lanes: FIRST/LAST winners per
+    direction, and the mergeable newest-rows tail TOPN composes from.
+    The planner sets them from the views' RANGE-mode aggregates so
+    layouts without those aggregates pay no memory for the extra arrays.
+    """
 
     num_buckets: int
     bucket_size: int
+    extreme: bool = False
+    tail: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -407,7 +417,18 @@ def plan_layout(
         lanes=primary_lanes,
         ttl=p_ttl,
     )
-    bucket = BucketPlan(num_buckets=int(num_buckets), bucket_size=int(bucket_size))
+    bucket = BucketPlan(
+        num_buckets=int(num_buckets),
+        bucket_size=int(bucket_size),
+        extreme=any(
+            wa.window.mode == "range" and agg_spec(wa.agg).state == "extreme"
+            for wa in waggs.values()
+        ),
+        tail=any(
+            wa.window.mode == "range" and agg_spec(wa.agg).state == "tail"
+            for wa in waggs.values()
+        ),
+    )
 
     rings: List[RingPlan] = []
     for t in sec_names:

@@ -56,7 +56,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import storage as st
-from repro.core.aggregates import LANES, NEG_INF, POS_INF, row_bitmap
+from repro.core.aggregates import (
+    LANES,
+    NEG_INF,
+    POS_INF,
+    TOPN_TAIL,
+    row_bitmap,
+)
 from repro.core.expr import Col, eval_rowlevel
 from repro.core.layout import LaneSlot, LayoutDiff, RingPlan
 from repro.core.online import OnlineState
@@ -530,6 +536,96 @@ def _rebuild_bucket_lane(
     return stats, bitmap
 
 
+_TS_EMPTY_NP = np.int32(-2147483648)
+
+
+def _rebuild_bucket_order(
+    vals: np.ndarray,        # (S, K, C, F) new-ring lane values
+    ts: np.ndarray,          # (S, K, C)
+    cur: np.ndarray,         # (S, K)
+    bucket_ids: np.ndarray,  # (S, K, NB)
+    bsize: int,
+    want_ext: bool,
+    want_tail: bool,
+) -> Dict[str, np.ndarray]:
+    """Merge-order families (extreme winners / newest-rows tail)
+    re-derived from the ring's retained rows.
+
+    The absolute arrival index of ring slot ``j`` is exactly
+    ``cur-1-((cur-1-j) % C)`` — the newest arrival mapping to that slot —
+    so the rebuilt (ts, pos) coordinates equal having persisted the
+    families all along, for every row the ring still retains.
+    """
+    S, K, C = ts.shape
+    written = _written_mask(cur, C)
+    j = np.arange(C, dtype=np.int64)
+    cur64 = cur[..., None].astype(np.int64)
+    pos = cur64 - 1 - ((cur64 - 1 - j) % C)                  # (S, K, C)
+    ts64 = ts.astype(np.int64)
+    rowb = np.where(written, ts64 // bsize, np.int64(-2))
+    match = (
+        rowb[:, :, None, :] == bucket_ids[..., None].astype(np.int64)
+    ) & (bucket_ids[..., None] >= 0)                         # (S, K, NB, C)
+    tsb = np.broadcast_to(ts64[:, :, None, :], match.shape)
+    posb = np.broadcast_to(pos[:, :, None, :], match.shape)
+    sI = np.arange(S)[:, None, None]
+    kI = np.arange(K)[None, :, None]
+    out: Dict[str, np.ndarray] = {}
+    if want_ext:
+        has = match.any(-1)
+        picks, b_ts, b_pos = [], [], []
+        for newest in (False, True):
+            lim = np.int64(-(2 ** 62)) if newest else np.int64(2 ** 62)
+            red = np.max if newest else np.min
+            bt = red(np.where(match, tsb, lim), -1)
+            cand = match & (tsb == bt[..., None])
+            bp = red(np.where(cand, posb, lim), -1)
+            picks.append(np.argmax(cand & (posb == bp[..., None]), -1))
+            b_ts.append(bt)
+            b_pos.append(bp)
+        h2 = np.stack([has, has], -1)
+        xval = np.stack([vals[sI, kI, p] for p in picks], -1)
+        out["xts"] = np.where(
+            h2, np.stack(b_ts, -1), np.int64(_TS_EMPTY_NP)
+        ).astype(np.int32)
+        out["xpos"] = np.where(h2, np.stack(b_pos, -1), 0).astype(np.int32)
+        out["xval"] = np.where(
+            h2[:, :, :, None, :], xval, 0.0
+        ).astype(np.float32)
+        out["xhas"] = h2
+    if want_tail:
+        T, m = int(TOPN_TAIL), min(C, int(TOPN_TAIL))
+        # descending (ts, pos): pos < 2^32, so ts*2^32+pos is the exact
+        # lexicographic encoding; ascending argsort of its negation
+        big = np.iinfo(np.int64).max
+        inv = np.where(match, -(tsb * (2 ** 32) + posb), big)
+        order = np.argsort(inv, axis=-1, kind="stable")[..., :m]
+        valid = np.take_along_axis(inv, order, -1) != big
+        r_ts = np.take_along_axis(tsb, order, -1)
+        r_pos = np.take_along_axis(posb, order, -1)
+        sI4, kI4 = sI[..., None], kI[..., None]
+        r_val = np.moveaxis(vals[sI4, kI4, order], -1, -2)  # (S,K,NB,F,m)
+
+        def pad_t(a, fill):
+            if m == T:
+                return a
+            return np.concatenate(
+                [a, np.full(a.shape[:-1] + (T - m,), fill, a.dtype)], -1
+            )
+
+        out["tts"] = pad_t(
+            np.where(valid, r_ts, np.int64(_TS_EMPTY_NP)).astype(np.int32),
+            _TS_EMPTY_NP,
+        )
+        out["tpos"] = pad_t(np.where(valid, r_pos, 0).astype(np.int32), 0)
+        out["tval"] = pad_t(
+            np.where(valid[:, :, :, None, :], r_val, 0.0).astype(np.float32),
+            np.float32(0.0),
+        )
+        out["tvalid"] = pad_t(valid, False)
+    return out
+
+
 def _migrate_bucket(
     diff: LayoutDiff,
     bagg,
@@ -550,6 +646,23 @@ def _migrate_bucket(
     bucket = np.asarray(bagg.bucket)
     if not sharded:
         stats, bitmap, bucket = stats[None], bitmap[None], bucket[None]
+
+    # merge-order families the NEW plan persists; carry the old arrays
+    # when the old store has them (same remap as stats below)
+    want_ext = getattr(diff.new.bucket, "extreme", False)
+    want_tail = getattr(diff.new.bucket, "tail", False)
+    fam: Dict[str, np.ndarray] = {}
+    fam_src = (want_ext or want_tail) and (
+        (not want_ext or bagg.xts is not None)
+        and (not want_tail or bagg.tts is not None)
+    )
+    if fam_src:
+        names = (("xts", "xpos", "xval", "xhas") if want_ext else ()) + (
+            ("tts", "tpos", "tval", "tvalid") if want_tail else ()
+        )
+        for nm in names:
+            a = np.asarray(getattr(bagg, nm))
+            fam[nm] = a if sharded else a[None]
 
     if NB_n != NB_o:
         if np.any(bucket >= NB_o):
@@ -586,6 +699,21 @@ def _migrate_bucket(
             stats_n[..., :NB_n, :, :],
             bitmap_n[..., :NB_n, :],
         )
+        fam_empty = {
+            "xts": (_TS_EMPTY_NP, 1), "xpos": (np.int32(0), 1),
+            "xval": (np.float32(0.0), 2), "xhas": (False, 1),
+            "tts": (_TS_EMPTY_NP, 1), "tpos": (np.int32(0), 1),
+            "tval": (np.float32(0.0), 2), "tvalid": (False, 1),
+        }
+        for nm, a in fam.items():
+            empty, extra = fam_empty[nm]
+            idx = order.reshape(order.shape + (1,) * extra)
+            a_s = np.take_along_axis(a, idx, 2)
+            a_n = np.full((S, K, NB_n + 1) + a.shape[3:], empty, a.dtype)
+            np.put_along_axis(
+                a_n, tgt.reshape(tgt.shape + (1,) * extra), a_s, 2
+            )
+            fam[nm] = a_n[:, :, :NB_n]
 
     # lane remap / rebuild
     ts_h, vals_h, cur_h = _host_ring(new_ring, sharded)
@@ -639,10 +767,43 @@ def _migrate_bucket(
                         "had aged out)"
                     ),
                 ))
+    # merge-order family outputs: carry (lane-gathered) when every dst
+    # lane exists in the source arrays, else re-derive from the new ring
+    fam_kw: Dict[str, np.ndarray] = {}
+    if want_ext or want_tail:
+        # per-key arrival counter ≡ ring cursor (both count every arrival)
+        fam_kw["seq"] = cur_h.astype(np.int32)
+        lanes_ok = bool(dst_p.lanes) and all(
+            s.key in src_p.lane_keys for s in dst_p.lanes
+        )
+        if fam_src and lanes_ok:
+            li = [src_p.lane_of(s.key) for s in dst_p.lanes]
+            if want_ext:
+                fam_kw["xts"], fam_kw["xpos"] = fam["xts"], fam["xpos"]
+                fam_kw["xhas"] = fam["xhas"]
+                fam_kw["xval"] = fam["xval"][..., li, :]
+            if want_tail:
+                fam_kw["tts"], fam_kw["tpos"] = fam["tts"], fam["tpos"]
+                fam_kw["tvalid"] = fam["tvalid"]
+                fam_kw["tval"] = fam["tval"][..., li, :]
+        else:
+            fam_kw.update(_rebuild_bucket_order(
+                vals_h, ts_h, cur_h, bucket, bsize, want_ext, want_tail
+            ))
+            if ring_lost:
+                report.add_deficit(Deficit(
+                    target="bucket", table=dst_p.table, lanes=None,
+                    reason=(
+                        "primary: merge-order bucket states (extreme/tail)"
+                        " rebuilt from ring-retained rows only (older rows"
+                        " had aged out)"
+                    ),
+                ))
     if not sharded:
         stats_out, bitmap_out, bucket = (
             stats_out[0], bitmap_out[0], bucket[0]
         )
+        fam_kw = {k: v[0] for k, v in fam_kw.items()}
     report.migrated.append(
         f"bucket[{NB_o}->{NB_n} x {bsize}, lanes {stats.shape[-2]}->{F_n}]"
     )
@@ -651,6 +812,10 @@ def _migrate_bucket(
         bitmap=jnp.asarray(np.ascontiguousarray(bitmap_out)),
         bucket=jnp.asarray(np.ascontiguousarray(bucket), jnp.int32),
         size=bsize,
+        **{
+            k: jnp.asarray(np.ascontiguousarray(v))
+            for k, v in fam_kw.items()
+        },
     )
 
 

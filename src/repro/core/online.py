@@ -81,6 +81,8 @@ from repro.core.expr import (
     eval_rowlevel,
 )
 from repro.core.layout import StoreLayout, plan_layout
+from repro.kernels import note_dispatch
+from repro.kernels.ingest.ops import fused_ingest_apply, resolve_ingest_impl
 from repro.obs import get_telemetry
 
 __all__ = ["OnlineState", "OnlineFeatureStore", "QueryProgram"]
@@ -378,9 +380,39 @@ class OnlineFeatureStore:
 
     # -- ingest -----------------------------------------------------------------
 
+    # fused-ingest dispatch knobs (class defaults; override per instance
+    # BEFORE the first ingest, or call _build_fns() afterwards — the
+    # resolved choice is baked into the jitted ingest trace).  ``auto``
+    # picks the Pallas one-pass kernel on TPU, the split XLA oracle
+    # elsewhere; both are bit-identical (tier-1 asserts it).
+    ingest_impl: str = "auto"
+    ingest_interpret: bool = False
+
     def _ingest_pure(self, state: OnlineState, key, ts, lanes) -> OnlineState:
-        ring = st.ring_ingest(state.ring, key, ts, lanes)
-        bagg = pg.bucket_ingest(state.bagg, key, ts, lanes)
+        """Apply one padded batch to the six primary-store state arrays —
+        the fused ingest kernel (ring scatter + bucket pre-agg merge in
+        ONE pass, :mod:`repro.kernels.ingest`) or its split XLA oracle.
+
+        Layouts persisting merge-order state families (extreme/tail)
+        always take the split path: the fused kernel covers the six core
+        arrays only, and the presence of ``bagg.seq`` is a static pytree
+        property, so the branch is resolved at trace time."""
+        if state.bagg.seq is not None:
+            ring = st.ring_ingest(state.ring, key, ts, lanes)
+            bagg = pg.bucket_ingest(state.bagg, key, ts, lanes)
+            return OnlineState(ring=ring, bagg=bagg, sec=state.sec)
+        rts, rvals, cur, bst, bbm, bid = fused_ingest_apply(
+            state.ring.ts, state.ring.vals, state.ring.cursor,
+            state.bagg.stats, state.bagg.bitmap, state.bagg.bucket,
+            key, ts, lanes,
+            bucket_size=state.bagg.size,
+            impl=resolve_ingest_impl(self.ingest_impl),
+            interpret=self.ingest_interpret,
+        )
+        ring = st.RingStore(ts=rts, vals=rvals, cursor=cur)
+        bagg = pg.BucketAgg(
+            stats=bst, bitmap=bbm, bucket=bid, size=state.bagg.size
+        )
         return OnlineState(ring=ring, bagg=bagg, sec=state.sec)
 
     def ingest(self, columns: Dict[str, jnp.ndarray]) -> None:
@@ -464,8 +496,17 @@ class OnlineFeatureStore:
             )
         return key, ts, lanes
 
+    def _ingest_resolved_impl(self) -> str:
+        """Host-side mirror of :meth:`_ingest_pure`'s trace-time branch."""
+        if self.state.bagg.seq is not None:
+            return "xla"
+        return resolve_ingest_impl(self.ingest_impl)
+
     def _ingest_padded(self, key, ts, lanes) -> None:
         key, ts, lanes = self._pad_batch(key, ts, lanes, self.num_keys)
+        # dispatch counting lives here (host side, once per batch) — the
+        # impl branch itself is baked into the jitted trace
+        note_dispatch("fused_ingest", self._ingest_resolved_impl())
         self.state = self._ingest_fn(self.state, key, ts, lanes)
 
     # -- secondary-table ingest ----------------------------------------------
@@ -658,7 +699,26 @@ class OnlineFeatureStore:
         ok = mvalid & (stored == mids)
         ms = state.bagg.stats[key[:, None], slots, lane]   # (Q, M, NUM_STATS)
         mb = state.bagg.bitmap[key[:, None], slots, lane]  # (Q, M)
-        return raw, ms, mb, ok
+        # merge-order families gather their persisted states alongside
+        # (only for the spec that reads them — the arrays exist whenever
+        # the layout planned them, asserted by the caller's family gate)
+        ext = None
+        spec = agg_spec(wa.agg)
+        if spec.state == "extreme":
+            ext = {
+                "ts": state.bagg.xts[key[:, None], slots],       # (Q, M, 2)
+                "pos": state.bagg.xpos[key[:, None], slots],
+                "val": state.bagg.xval[key[:, None], slots, lane],
+                "has": state.bagg.xhas[key[:, None], slots],
+            }
+        elif spec.state == "tail":
+            ext = {
+                "ts": state.bagg.tts[key[:, None], slots],       # (Q, M, T)
+                "pos": state.bagg.tpos[key[:, None], slots],
+                "val": state.bagg.tval[key[:, None], slots, lane],
+                "valid": state.bagg.tvalid[key[:, None], slots],
+            }
+        return raw, ms, mb, ok, ext
 
     def _query_pure(self, state, key, ts_q, req_lanes, join_keys, gkey,
                     use_preagg: bool, wagg_order=None, ljoin_order=None,
@@ -704,20 +764,31 @@ class OnlineFeatureStore:
             # any stored row of the same (ts, stream)
             prim_rank = jnp.int32(len(wa.union))
             acc = spec.lift(r, ts_q, prim_rank, _POS_MAX)
+            # family gate: extreme/tail specs can only compose from
+            # buckets when the layout persisted their state arrays
+            # (static pytree presence, resolved at trace time)
+            family_ok = (
+                spec.state in ("lanes", "bitmap")
+                or (spec.state == "extreme" and state.bagg.xts is not None)
+                or (spec.state == "tail" and state.bagg.tts is not None)
+            )
             use_buckets = (
                 use_preagg
                 and spec.bucket_composable
+                and family_ok
                 and wa.window.mode == "range"
                 and (not wa.union or self._union_preagg.get(wk, False))
             )
             if use_buckets:
-                raw, ms, mb, ok = self._preagg_parts(
+                raw, ms, mb, ok, ext = self._preagg_parts(
                     wa, state, key, ts_q, ts_buf, valid, lane
                 )
                 acc = spec.combine(
                     acc, spec.fold_rows(g, ts_buf, raw, prim_rank)
                 )
-                acc = spec.combine(acc, spec.fold_buckets(ms, mb, ok))
+                acc = spec.combine(
+                    acc, spec.fold_buckets(ms, mb, ok, ext=ext, rank=prim_rank)
+                )
             else:
                 m = self._window_mask(wa, ts_buf, valid, ts_q)
                 acc = spec.combine(
@@ -1059,10 +1130,19 @@ class OnlineFeatureStore:
         )
         for wk in wagg_order:
             wa = self.waggs[wk]
+            spec = agg_spec(wa.agg)
             # host-side mirror of _query_pure's trace-time use_buckets
+            family_ok = (
+                spec.state in ("lanes", "bitmap")
+                or (spec.state == "extreme"
+                    and self.state.bagg.xts is not None)
+                or (spec.state == "tail"
+                    and self.state.bagg.tts is not None)
+            )
             hit = (
                 mode != "naive"
-                and agg_spec(wa.agg).bucket_composable
+                and spec.bucket_composable
+                and family_ok
                 and wa.window.mode == "range"
                 and (not wa.union or self._union_preagg.get(wk, False))
             )

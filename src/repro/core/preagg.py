@@ -29,7 +29,7 @@ buckets' rows; the middle composes losslessly because bucket rows are
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +40,7 @@ from repro.core.aggregates import (
     NEG_INF,
     NUM_STATS,
     POS_INF,
+    TOPN_TAIL,
     row_bitmap,
 )
 
@@ -62,6 +63,9 @@ row_stats = ag.lanes_lift_stack
 stats_identity = ag.lanes_identity_stack
 
 
+_TS_EMPTY = jnp.int32(-2147483648)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class BucketAgg:
@@ -70,39 +74,95 @@ class BucketAgg:
     stats  : (K, NB, F, NUM_STATS) f32  stat-lane states (aggregates.LANES)
     bitmap : (K, NB, F) int32   32-bit linear-counting bitmap per field
     bucket : (K, NB) int32      absolute bucket id held in each slot (-1 empty)
+
+    Merge-order state families (``None`` unless the layout persists them —
+    a view with FIRST/LAST/TOPN_FREQ over a RANGE window):
+
+    seq    : (K,) int32         per-key arrival counter; the stored merge
+                                ``pos`` of a row is its per-key arrival
+                                index (mirrors the ring cursor)
+    xts/xpos/xhas : (K, NB, 2)  extreme winner per direction
+                                (0 = oldest / FIRST, 1 = newest / LAST);
+                                winner row shared across lanes
+    xval   : (K, NB, F, 2)      the winner row's lane values
+    tts/tpos/tvalid : (K, NB, T) newest-first tail of the bucket's rows
+                                by (ts, pos), T = aggregates.TOPN_TAIL
+    tval   : (K, NB, F, T)      the tail rows' lane values
     """
 
     stats: jnp.ndarray
     bitmap: jnp.ndarray
     bucket: jnp.ndarray
     size: int  # bucket width in time units (static)
+    seq: Optional[jnp.ndarray] = None
+    xts: Optional[jnp.ndarray] = None
+    xpos: Optional[jnp.ndarray] = None
+    xval: Optional[jnp.ndarray] = None
+    xhas: Optional[jnp.ndarray] = None
+    tts: Optional[jnp.ndarray] = None
+    tpos: Optional[jnp.ndarray] = None
+    tval: Optional[jnp.ndarray] = None
+    tvalid: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
-        return (self.stats, self.bitmap, self.bucket), (self.size,)
+        return (
+            self.stats, self.bitmap, self.bucket, self.seq,
+            self.xts, self.xpos, self.xval, self.xhas,
+            self.tts, self.tpos, self.tval, self.tvalid,
+        ), (self.size,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, size=aux[0])
+        stats, bitmap, bucket, *rest = children
+        return cls(stats, bitmap, bucket, size=aux[0], seq=rest[0],
+                   xts=rest[1], xpos=rest[2], xval=rest[3], xhas=rest[4],
+                   tts=rest[5], tpos=rest[6], tval=rest[7], tvalid=rest[8])
 
     @property
     def num_buckets(self) -> int:
         return self.bucket.shape[1]
 
 
-def bucket_init(num_keys: int, num_buckets: int, width: int, size: int) -> BucketAgg:
+def bucket_init(
+    num_keys: int, num_buckets: int, width: int, size: int,
+    *, extreme: bool = False, tail: bool = False,
+) -> BucketAgg:
+    kw = {}
+    if extreme or tail:
+        kw["seq"] = jnp.zeros((num_keys,), jnp.int32)
+    if extreme:
+        kw["xts"] = jnp.full((num_keys, num_buckets, 2), _TS_EMPTY)
+        kw["xpos"] = jnp.zeros((num_keys, num_buckets, 2), jnp.int32)
+        kw["xval"] = jnp.zeros(
+            (num_keys, num_buckets, width, 2), jnp.float32
+        )
+        kw["xhas"] = jnp.zeros((num_keys, num_buckets, 2), bool)
+    if tail:
+        kw["tts"] = jnp.full((num_keys, num_buckets, TOPN_TAIL), _TS_EMPTY)
+        kw["tpos"] = jnp.zeros((num_keys, num_buckets, TOPN_TAIL), jnp.int32)
+        kw["tval"] = jnp.zeros(
+            (num_keys, num_buckets, width, TOPN_TAIL), jnp.float32
+        )
+        kw["tvalid"] = jnp.zeros((num_keys, num_buckets, TOPN_TAIL), bool)
     return BucketAgg(
         stats=stats_identity((num_keys, num_buckets, width)),
         bitmap=jnp.zeros((num_keys, num_buckets, width), jnp.int32),
         bucket=jnp.full((num_keys, num_buckets), jnp.int32(-1)),
         size=size,
+        **kw,
     )
 
 
 def bucket_init_plan(plan, num_keys: int, width: int) -> BucketAgg:
     """Initialize a bucket store straight from a declarative
     :class:`~repro.core.layout.BucketPlan` — the store consumes the plan
-    instead of re-deriving its sizing."""
-    return bucket_init(num_keys, plan.num_buckets, width, plan.bucket_size)
+    instead of re-deriving its sizing (including which merge-order state
+    families it persists)."""
+    return bucket_init(
+        num_keys, plan.num_buckets, width, plan.bucket_size,
+        extreme=getattr(plan, "extreme", False),
+        tail=getattr(plan, "tail", False),
+    )
 
 
 def _segment_or_scan(bm: jnp.ndarray, new_seg: jnp.ndarray) -> jnp.ndarray:
@@ -210,4 +270,114 @@ def bucket_ingest(
     bitmap = bitmap.at[k_v, s_v].set(gathered | rep_bm, mode="drop")
 
     bucket_ids = agg.bucket.at[k_v, s_v].set(rep_bucket, mode="drop")
-    return BucketAgg(stats=stats, bitmap=bitmap, bucket=bucket_ids, size=agg.size)
+
+    # --- merge-order state families (extreme / tail) -----------------------
+    # Presence is a static pytree property, so plain python gating is fine
+    # under jit.  Both families key row identity on (ts, pos) where pos is
+    # the per-key arrival index: rows are sorted (key, ts) and arrive in
+    # batch order, so within a key run pos = seq[key] + rank-in-run.
+    seq = agg.seq
+    xts, xpos, xval, xhas = agg.xts, agg.xpos, agg.xval, agg.xhas
+    tts, tpos, tval, tvalid = agg.tts, agg.tpos, agg.tval, agg.tvalid
+    if seq is not None:
+        idx = jnp.arange(n, dtype=jnp.int32)
+        new_key = jnp.concatenate([jnp.array([True]), key[1:] != key[:-1]])
+        run_start = jax.lax.cummax(jnp.where(new_key, idx, 0))
+        pos = seq.at[key].get(mode="fill", fill_value=0) + (idx - run_start)
+        start_rows = jnp.nonzero(new_seg, size=n, fill_value=0)[0]
+
+    if xts is not None:
+        # within a segment ts and pos both ascend, so the lex-oldest row is
+        # the segment's first row and the lex-newest its last
+        c_rows = jnp.stack([start_rows, end_rows], axis=-1)   # (N, 2)
+        c_ts = ts[c_rows]
+        c_pos = pos[c_rows]
+        c_val = vals[c_rows].transpose(0, 2, 1)               # (N, F, 2)
+
+        xts = xts.at[k_st, rep_slot].set(
+            jnp.full((n, 2), _TS_EMPTY), mode="drop")
+        xpos = xpos.at[k_st, rep_slot].set(
+            jnp.zeros((n, 2), jnp.int32), mode="drop")
+        xval = xval.at[k_st, rep_slot].set(
+            jnp.zeros((n, width, 2), jnp.float32), mode="drop")
+        xhas = xhas.at[k_st, rep_slot].set(
+            jnp.zeros((n, 2), bool), mode="drop")
+
+        g_ts = xts.at[k_v, s_v].get(mode="fill", fill_value=_TS_EMPTY)
+        g_pos = xpos.at[k_v, s_v].get(mode="fill", fill_value=0)
+        g_val = xval.at[k_v, s_v].get(mode="fill", fill_value=0.0)
+        g_has = xhas.at[k_v, s_v].get(mode="fill", fill_value=False)
+
+        older = (c_ts < g_ts) | ((c_ts == g_ts) & (c_pos < g_pos))
+        newer = (c_ts > g_ts) | ((c_ts == g_ts) & (c_pos > g_pos))
+        want = jnp.stack([older[:, 0], newer[:, 1]], axis=-1)
+        take = ~g_has | want                                  # (N, 2)
+
+        xts = xts.at[k_v, s_v].set(
+            jnp.where(take, c_ts, g_ts), mode="drop")
+        xpos = xpos.at[k_v, s_v].set(
+            jnp.where(take, c_pos, g_pos), mode="drop")
+        xval = xval.at[k_v, s_v].set(
+            jnp.where(take[:, None, :], c_val, g_val), mode="drop")
+        xhas = xhas.at[k_v, s_v].set(jnp.ones((n, 2), bool), mode="drop")
+
+    if tts is not None:
+        T = tts.shape[-1]
+        # newest-first candidate rows of each segment (row order is
+        # (ts, pos) ascending, so counting back from end_rows is exact)
+        t_rows = end_rows[:, None] - jnp.arange(T, dtype=jnp.int32)[None, :]
+        in_seg = t_rows >= start_rows[:, None]                # (N, T)
+        t_rc = jnp.clip(t_rows, 0, n - 1)
+        ct_ts = jnp.where(in_seg, ts[t_rc], _TS_EMPTY)
+        ct_pos = jnp.where(in_seg, pos[t_rc], _TS_EMPTY)
+        ct_val = jnp.where(
+            in_seg[:, None, :], vals[t_rc].transpose(0, 2, 1), 0.0)
+
+        tts = tts.at[k_st, rep_slot].set(
+            jnp.full((n, T), _TS_EMPTY), mode="drop")
+        tpos = tpos.at[k_st, rep_slot].set(
+            jnp.zeros((n, T), jnp.int32), mode="drop")
+        tval = tval.at[k_st, rep_slot].set(
+            jnp.zeros((n, width, T), jnp.float32), mode="drop")
+        tvalid = tvalid.at[k_st, rep_slot].set(
+            jnp.zeros((n, T), bool), mode="drop")
+
+        gt_ts = tts.at[k_v, s_v].get(mode="fill", fill_value=_TS_EMPTY)
+        gt_pos = tpos.at[k_v, s_v].get(mode="fill", fill_value=0)
+        gt_val = tval.at[k_v, s_v].get(mode="fill", fill_value=0.0)
+        gt_valid = tvalid.at[k_v, s_v].get(mode="fill", fill_value=False)
+
+        m_ts = jnp.concatenate(
+            [ct_ts, jnp.where(gt_valid, gt_ts, _TS_EMPTY)], axis=1)
+        m_pos = jnp.concatenate(
+            [ct_pos, jnp.where(gt_valid, gt_pos, _TS_EMPTY)], axis=1)
+        m_val = jnp.concatenate([ct_val, gt_val], axis=2)     # (N, F, 2T)
+        m_valid = jnp.concatenate([in_seg, gt_valid], axis=1)
+
+        # LSD stable descending sort by (ts, pos): pos pass, then ts pass
+        o1 = jnp.argsort(~m_pos, axis=1, stable=True)
+        o2 = jnp.argsort(
+            ~jnp.take_along_axis(m_ts, o1, axis=1), axis=1, stable=True)
+        perm = jnp.take_along_axis(o1, o2, axis=1)
+
+        s_ts = jnp.take_along_axis(m_ts, perm, axis=1)[:, :T]
+        s_pos = jnp.take_along_axis(m_pos, perm, axis=1)[:, :T]
+        s_valid = jnp.take_along_axis(m_valid, perm, axis=1)[:, :T]
+        s_val = jnp.take_along_axis(
+            m_val, perm[:, None, :], axis=2)[:, :, :T]
+
+        tts = tts.at[k_v, s_v].set(s_ts, mode="drop")
+        tpos = tpos.at[k_v, s_v].set(
+            jnp.where(s_valid, s_pos, 0), mode="drop")
+        tval = tval.at[k_v, s_v].set(
+            jnp.where(s_valid[:, None, :], s_val, 0.0), mode="drop")
+        tvalid = tvalid.at[k_v, s_v].set(s_valid, mode="drop")
+
+    if seq is not None:
+        seq = seq.at[key].add(jnp.ones_like(key), mode="drop")
+
+    return BucketAgg(
+        stats=stats, bitmap=bitmap, bucket=bucket_ids, size=agg.size,
+        seq=seq, xts=xts, xpos=xpos, xval=xval, xhas=xhas,
+        tts=tts, tpos=tpos, tval=tval, tvalid=tvalid,
+    )

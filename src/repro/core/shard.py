@@ -79,6 +79,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.hashing import KeyPermutation
 from repro.core.layout import StoreLayout, plan_layout
 from repro.core.online import OnlineFeatureStore, OnlineState
+from repro.kernels import note_dispatch
 from repro.kernels.route.ops import route_rank
 
 __all__ = [
@@ -370,6 +371,7 @@ class ShardedOnlineStore(OnlineFeatureStore):
         )
         t = self._route_rows(plan, ts_h, pad="repeat")
         l = self._route_rows(plan, np.asarray(lanes), pad="sentinel")
+        note_dispatch("fused_ingest", self._ingest_resolved_impl())
         self.state = self._ingest_fn(
             self.state, self._put(k), self._put(t), self._put(l)
         )

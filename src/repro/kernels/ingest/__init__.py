@@ -1,0 +1,4 @@
+# Fused ingest kernel: ring scatter (cursor advance + lane writes) and
+# bucket pre-agg state update in ONE pass over the batch.  See ops.py for
+# the dispatcher, ingest.py for the Pallas kernel, ref.py for the XLA
+# oracle (the exact split ring_ingest + bucket_ingest sequence it fuses).

@@ -18,20 +18,20 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import note_dispatch, vmem_row_budget
 from repro.kernels.route.ref import route_rank_ref
 from repro.kernels.route.route import ROUTE_LANE, route_rank_pallas
 
 __all__ = ["route_rank"]
 
-# beyond this the (rows, 128) id tile and its cumsums still fit VMEM with
-# lots of headroom; serving batches are orders of magnitude smaller, so
-# the cap exists only to keep an accidental huge call off the kernel
-_ROUTE_PALLAS_MAX_ROWS = 1 << 20
+# The route kernel holds the whole batch resident: the (rows, 128) id
+# tile, its within-row cumsum, the across-row running totals, and the
+# mask temporary — 4 live i32 arrays.  Unlike the fold kernel it does not
+# stream tiles, so residency IS the cap; serving batches sit orders of
+# magnitude below it.
+_ROUTE_PALLAS_MAX_ROWS = ROUTE_LANE * vmem_row_budget(4)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_shards", "impl", "interpret")
-)
 def route_rank(
     shard: jnp.ndarray,  # (N,) int32 shard ids in [0, num_shards)
     *,
@@ -41,13 +41,30 @@ def route_rank(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(rank (N,) int32, counts (S,) int32): rank of each row within its
     shard in batch order, and rows per shard."""
-    n = shard.shape[0]
     if impl == "auto":
         impl = (
             "pallas"
-            if jax.default_backend() == "tpu" and n <= _ROUTE_PALLAS_MAX_ROWS
+            if jax.default_backend() == "tpu"
+            and shard.shape[0] <= _ROUTE_PALLAS_MAX_ROWS
             else "xla"
         )
+    note_dispatch("route_rank", impl)
+    return _route_rank(
+        shard, num_shards=num_shards, impl=impl, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_shards", "impl", "interpret")
+)
+def _route_rank(
+    shard: jnp.ndarray,
+    *,
+    num_shards: int,
+    impl: str,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n = shard.shape[0]
     if impl == "xla":
         return route_rank_ref(shard, num_shards)
     # lane-major 2-D tiling; padding gets the inert id S (claimed by no

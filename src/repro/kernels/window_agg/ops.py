@@ -17,11 +17,12 @@
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import note_dispatch, vmem_row_budget
 from repro.kernels.window_agg.ref import (
     fold_identity,
     fold_levels_ref,
@@ -34,17 +35,24 @@ from repro.kernels.window_agg.window_agg import (
     window_stats_pallas,
 )
 
-__all__ = ["window_stats", "fold_levels"]
+__all__ = ["window_stats", "fold_levels", "FOLD_TILE_ROWS"]
 
-# beyond this many rows the stacked levels outgrow a single core's VMEM
-# budget; fall back to the (identically-formulated) XLA path
-_FOLD_PALLAS_MAX_ROWS = 1 << 17
+# Rows each fold grid step keeps VMEM-resident.  Live (TR, 128) arrays in
+# the kernel body: the pipelined x and seg input blocks (×2 each for the
+# double buffer), the cur/src scratch tiles, and ~6 body temporaries
+# (iotas, shift concats, mask, combine) → 12.  The kernel STREAMS tiles,
+# so this sizes the tile — there is no whole-input row cap any more.
+FOLD_TILE_ROWS = vmem_row_budget(12)
+
+
+def _pow2ceil(v: int) -> int:
+    return 1 << (max(v, 1) - 1).bit_length()
 
 
 @functools.partial(
     jax.jit, static_argnames=("windows", "bucket_size", "impl", "interpret")
 )
-def window_stats(
+def _window_stats(
     ring_ts: jnp.ndarray,
     ring_lanes: jnp.ndarray,
     bagg_stats: jnp.ndarray,
@@ -74,7 +82,46 @@ def window_stats(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("op", "impl", "interpret"))
+def window_stats(
+    ring_ts: jnp.ndarray,
+    ring_lanes: jnp.ndarray,
+    bagg_stats: jnp.ndarray,
+    bagg_bucket: jnp.ndarray,
+    q_key: jnp.ndarray,
+    q_ts: jnp.ndarray,
+    q_lanes: jnp.ndarray,
+    *,
+    windows: Sequence[int],
+    bucket_size: int,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    note_dispatch("window_stats", impl)
+    return _window_stats(
+        ring_ts, ring_lanes, bagg_stats, bagg_bucket,
+        q_key, q_ts, q_lanes,
+        windows=tuple(windows), bucket_size=bucket_size,
+        impl=impl, interpret=interpret,
+    )
+
+
+def _resolve_fold_impl(n: int, backend: str, impl: str = "auto") -> str:
+    """``impl="auto"`` policy for ``fold_levels``.
+
+    The grid-tiled kernel streams row tiles through VMEM, so the policy is
+    backend-only: Pallas on TPU at ANY size (the old 2^17-row VMEM cap is
+    gone), the identically-formulated XLA reference elsewhere.  ``n`` stays
+    a parameter so the policy remains a function of the call, not a global
+    — and so tests can pin the no-cap contract at 2^17±1 and 10^7 rows.
+    """
+    del n  # no size cutoff: tiling makes every size VMEM-feasible
+    if impl == "auto":
+        return "pallas" if backend == "tpu" else "xla"
+    return impl
+
+
 def fold_levels(
     x: jnp.ndarray,    # (N,) f32 (min/max) or int32 (or)
     seg: jnp.ndarray,  # (N,) int32 segment-start index per row
@@ -82,30 +129,52 @@ def fold_levels(
     op: str,
     impl: str = "auto",
     interpret: bool = False,
+    tile_rows: Optional[int] = None,
 ) -> jnp.ndarray:
     """Doubling levels of the segmented combine: (KL, N).
 
     Level k row i = op over rows [max(i - 2^k + 1, seg_i), i].  KL =
     floor(log2(N)) + 1, enough for any in-segment range query via binary
     decomposition (see ``windows.segmented_windowed_fold``).
+
+    ``tile_rows`` overrides the grid tile height (pow2 multiple of 8) —
+    tests force small tiles to exercise multi-tile boundary carries in
+    interpret mode without 10^6-row inputs.
     """
+    impl = _resolve_fold_impl(x.shape[0], jax.default_backend(), impl)
+    note_dispatch("fold_levels", impl)
+    return _fold_levels(
+        x, seg, op=op, impl=impl, interpret=interpret,
+        tile_rows=FOLD_TILE_ROWS if tile_rows is None else tile_rows,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op", "impl", "interpret", "tile_rows")
+)
+def _fold_levels(
+    x: jnp.ndarray,
+    seg: jnp.ndarray,
+    *,
+    op: str,
+    impl: str,
+    interpret: bool,
+    tile_rows: int,
+) -> jnp.ndarray:
     n = x.shape[0]
     levels = fold_num_levels(n)
-    if impl == "auto":
-        impl = (
-            "pallas"
-            if jax.default_backend() == "tpu" and n <= _FOLD_PALLAS_MAX_ROWS
-            else "xla"
-        )
     if impl == "xla":
         return fold_levels_ref(x, seg, op)
 
-    # pad the flat rows out to whole (8, 128) f32 tiles; padded rows start
-    # their own segments (seg = own index) so they never leak backwards,
-    # and real rows never look forward — the pad is inert.
+    # pad the flat rows out to whole grid tiles; padded rows start their
+    # own segments (seg = own index) so they never leak backwards, and
+    # real rows never look forward — the pad is inert.  Single-tile inputs
+    # shrink the tile to the pow2 cover of the rows instead of padding all
+    # the way up to the streaming tile height.
     lane = _FOLD_LANE
     rows = -(-n // lane)
-    rows += (-rows) % 8
+    tr = min(tile_rows, max(_pow2ceil(rows), 8))
+    rows = -(-rows // tr) * tr
     m = rows * lane
     ident = fold_identity(op, x.dtype)
     xp = jnp.full((m,), ident, x.dtype).at[:n].set(x)
@@ -115,6 +184,7 @@ def fold_levels(
         segp.reshape(rows, lane),
         op=op,
         levels=levels,
+        tile_rows=tr,
         interpret=interpret,
     )
     return out.reshape(levels, m)[:, :n]

@@ -185,50 +185,142 @@ def _flat_shift(a: jnp.ndarray, d: int, fill) -> jnp.ndarray:
     return a
 
 
-def _fold_levels_kernel(x_ref, seg_ref, out_ref, *, op: str, levels: int):
-    """All doubling levels of the segmented combine, VMEM-resident.
+def _fold_levels_kernel(
+    x_ref, seg_ref, out_ref, cur_ref, src_ref, rsem, wsem,
+    *, op: str, levels: int, tile_rows: int,
+):
+    """Grid-tiled doubling levels of the segmented combine.
 
-    x/seg are the (R, 128) row-major reshape of the (N,) inputs; level k of
-    the output holds op over [max(i - 2^k + 1, seg_i), i] per flat row i.
-    One static shifted combine per level — the whole scan is log2(N)
-    vector ops over the resident tile, no HBM round-trips between levels.
+    The row axis is tiled over the grid: grid step ``t`` owns flat rows
+    ``[t*TR, (t+1)*TR)``.  Only the active tile is VMEM-resident — the
+    (TR, 128) x/seg input blocks stream HBM→VMEM through the BlockSpec
+    pipeline (double-buffered across steps), while the (levels, R, 128)
+    output stays in HBM (``memory_space=ANY``) and is written one
+    (TR, 128) tile per level by an explicit DMA.
+
+    The inter-tile boundary combine rides the sequential TPU grid: level
+    ``k`` of every earlier tile is already in the HBM output when step
+    ``t`` runs, so the shifted source for distance ``2^k`` is fetched
+    back from ``out[k]`` by a second DMA.  Three static cases per level
+    (the shift distance is a python constant):
+
+    * ``2^k < 128`` — a lane shift whose carry row is the last row of
+      tile ``t-1``: one 1-row DMA;
+    * ``128 <= 2^k < TR*128`` — an exact row shift by ``2^k/128`` rows
+      straddling tiles ``t-1``/``t``: DMA the straddle rows, concat with
+      the resident tile;
+    * ``2^k >= TR*128`` — the source is exactly tile ``t - 2^k/(TR*128)``
+      (both powers of two): DMA the whole tile.
+
+    Every fetch is guarded by ``pl.when`` on the source tile existing;
+    elements whose true source precedes the array (idx - 2^k < 0) are
+    masked to the identity by the segment guard (seg >= 0 always), so
+    skipped DMAs can never leak scratch garbage into a live value.
     """
-    x = x_ref[...]
-    seg = seg_ref[...]
-    ident = _fold_ident(op, x.dtype)
+    t = pl.program_id(0)
+    TR = tile_rows
+    ident = _fold_ident(op, x_ref.dtype)
     f = _fold_combine(op)
-    row = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
-    lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    idx = row * _FOLD_LANE + lane
-    cur = x
-    out_ref[0] = cur
-    for k in range(levels - 1):
-        half = 1 << k
-        shifted = jnp.where(
-            idx - half >= seg, _flat_shift(cur, half, ident), ident
+    seg = seg_ref[...]
+    row = jax.lax.broadcasted_iota(jnp.int32, (TR, _FOLD_LANE), 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (TR, _FOLD_LANE), 1)
+    idx = (t * TR + row) * _FOLD_LANE + lane
+    cur = x_ref[...]
+    for k in range(levels):
+        # publish level k of this tile; later steps read it back from HBM
+        cur_ref[...] = cur
+        put = pltpu.make_async_copy(
+            cur_ref, out_ref.at[k, pl.ds(t * TR, TR)], wsem
         )
-        cur = f(cur, shifted)
-        out_ref[k + 1] = cur
+        put.start()
+        put.wait()
+        if k == levels - 1:
+            break
+        half = 1 << k
+        if half < _FOLD_LANE:
+            # lane shift; carry row = out[k] row t*TR - 1 (tile t-1)
+            @pl.when(t > 0)
+            def _fetch_carry():
+                get = pltpu.make_async_copy(
+                    out_ref.at[k, pl.ds(t * TR - 1, 1)],
+                    src_ref.at[pl.ds(0, 1)],
+                    rsem,
+                )
+                get.start()
+                get.wait()
+
+            prev = jnp.concatenate([src_ref[0:1], cur[:-1]], axis=0)
+            shifted = jnp.concatenate(
+                [prev[:, _FOLD_LANE - half:], cur[:, : _FOLD_LANE - half]],
+                axis=1,
+            )
+        elif (rshift := half // _FOLD_LANE) < TR:
+            # row shift straddling tile t-1: fetch its last rshift rows
+            @pl.when(t > 0)
+            def _fetch_straddle():
+                get = pltpu.make_async_copy(
+                    out_ref.at[k, pl.ds(t * TR - rshift, rshift)],
+                    src_ref.at[pl.ds(0, rshift)],
+                    rsem,
+                )
+                get.start()
+                get.wait()
+
+            shifted = jnp.concatenate(
+                [src_ref[0:rshift], cur[: TR - rshift]], axis=0
+            )
+        else:
+            # whole-tile shift: the source is exactly tile t - q
+            q = rshift // TR
+
+            @pl.when(t >= q)
+            def _fetch_tile():
+                get = pltpu.make_async_copy(
+                    out_ref.at[k, pl.ds((t - q) * TR, TR)], src_ref, rsem
+                )
+                get.start()
+                get.wait()
+
+            shifted = src_ref[...]
+        cur = f(cur, jnp.where(idx - half >= seg, shifted, ident))
 
 
 def fold_levels_pallas(
-    x2: jnp.ndarray,    # (R, 128) padded row-major values
+    x2: jnp.ndarray,    # (R, 128) padded row-major values, R % tile_rows == 0
     seg2: jnp.ndarray,  # (R, 128) int32 padded segment starts
     *,
     op: str,
     levels: int,
+    tile_rows: int,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Returns (levels, R, 128) doubling-fold levels."""
+    """Returns (levels, R, 128) doubling-fold levels (grid-tiled rows)."""
     R = x2.shape[0]
-    kernel = functools.partial(_fold_levels_kernel, op=op, levels=levels)
+    if R % tile_rows or tile_rows % 8 or tile_rows & (tile_rows - 1):
+        raise ValueError(
+            f"fold tile_rows must be a pow2 multiple of 8 dividing R "
+            f"(got tile_rows={tile_rows}, R={R})"
+        )
+    kernel = functools.partial(
+        _fold_levels_kernel, op=op, levels=levels, tile_rows=tile_rows
+    )
     return pl.pallas_call(
         kernel,
-        out_shape=jax.ShapeDtypeStruct((levels, R, _FOLD_LANE), x2.dtype),
+        grid=(R // tile_rows,),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.VMEM),
-            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec((tile_rows, _FOLD_LANE), lambda t: (t, 0)),
+            pl.BlockSpec((tile_rows, _FOLD_LANE), lambda t: (t, 0)),
         ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((levels, R, _FOLD_LANE), x2.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_rows, _FOLD_LANE), x2.dtype),
+            pltpu.VMEM((tile_rows, _FOLD_LANE), x2.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
         interpret=interpret,
     )(x2, seg2)

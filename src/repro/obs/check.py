@@ -39,6 +39,7 @@ EXPECTED_METRICS: Dict[str, Tuple[str, str, Tuple[str, ...]]] = {
     "query_compile_seconds": ("histogram", "s", ("program", "mode")),
     "preagg_hits_total": ("counter", "1", ("agg",)),
     "preagg_fallback_total": ("counter", "1", ("agg",)),
+    "kernel_dispatch_total": ("counter", "1", ("kernel", "impl")),
     "ingest_freshness_seconds": ("histogram", "s", ("table",)),
     "ingest_rows_total": ("counter", "1", ("table",)),
     "ring_occupancy_ratio": ("gauge", "1", ("table", "placement")),

@@ -45,7 +45,13 @@ import numpy as np
 
 from repro.core import preagg as pg
 from repro.core import storage as st
-from repro.core.aggregates import LANES, NEG_INF, POS_INF, row_bitmap
+from repro.core.aggregates import (
+    LANES,
+    NEG_INF,
+    POS_INF,
+    TOPN_TAIL,
+    row_bitmap,
+)
 from repro.core.expr import (
     collect_last_joins,
     collect_window_aggs,
@@ -428,8 +434,17 @@ class BackfillSource:
             lane_js = list(range(len(dst_p.lanes))) or [0]
         else:
             lane_js = [dst_p.lane_of(k) for k in lane_keys]
+        # merge-order families rebuild whole-array (winner rows are
+        # lane-shared), so their value gathers need every lane evaluated
+        want_ext = getattr(diff.new.bucket, "extreme", False)
+        want_tail = getattr(diff.new.bucket, "tail", False)
+        eval_js = (
+            (list(range(len(dst_p.lanes))) or [0])
+            if (want_ext or want_tail)
+            else lane_js
+        )
         lanes = self._lane_values(
-            dst_p, cols, lane_js=[j for j in lane_js if dst_p.lanes]
+            dst_p, cols, lane_js=[j for j in eval_js if dst_p.lanes]
         )
         K = dst_p.ring_keys
 
@@ -476,14 +491,87 @@ class BackfillSource:
                 np.asarray(row_bitmap(jnp.asarray(v)), np.int32),
             )
             bitmap[..., j] = bm
+        # merge-order families, rebuilt exactly from the full history:
+        # pos is the per-(shard, local-key) cumcount in canonical stream
+        # order — the same arrival-order identification _derive_ring's
+        # exact replay relies on
+        fam_kw: Dict[str, np.ndarray] = {}
+        if want_ext or want_tail:
+            F = max(len(dst_p.lanes), 1)
+            n_rows = int(ts.shape[0])
+            gkey = s_all * np.int64(K) + l_all
+            o_g = np.argsort(gkey, kind="stable")
+            go = gkey[o_g]
+            startg = np.ones(n_rows, bool)
+            startg[1:] = go[1:] != go[:-1]
+            gid = np.cumsum(startg) - 1
+            firstg = np.nonzero(startg)[0]
+            pos = np.empty(n_rows, np.int64)
+            pos[o_g] = np.arange(n_rows) - (
+                firstg[gid] if n_rows else np.zeros(0, np.int64)
+            )
+            seq = np.zeros((S, K), np.int64)
+            np.add.at(seq, (s_all, l_all), 1)
+            fam_kw["seq"] = seq.astype(np.int32)
+            comb = ts.astype(np.int64) * (2 ** 32) + pos
+            si_a, li_a, bi_a = s_all[live], l_all[live], slot_all[live]
+            comb_l, pos_l, ts_l = comb[live], pos[live], ts[live]
+            vals_l = lanes[live].astype(np.float32)  # (M, F)
+            big = np.int64(2 ** 62)
+        if want_ext:
+            xts = np.full((S, K, NB, 2), _TS_MIN, np.int32)
+            xpos = np.zeros((S, K, NB, 2), np.int32)
+            xval = np.zeros((S, K, NB, F, 2), np.float32)
+            xhas = np.zeros((S, K, NB, 2), bool)
+            for d, (red, lim) in enumerate(
+                ((np.minimum, big), (np.maximum, -big))
+            ):
+                w = np.full((S, K, NB), lim, np.int64)
+                red.at(w, (si_a, li_a, bi_a), comb_l)
+                hit = comb_l == w[si_a, li_a, bi_a]
+                sh, lh, bh = si_a[hit], li_a[hit], bi_a[hit]
+                xts[sh, lh, bh, d] = ts_l[hit]
+                xpos[sh, lh, bh, d] = pos_l[hit]
+                xval[sh, lh, bh, :, d] = vals_l[hit]
+                xhas[sh, lh, bh, d] = True
+            fam_kw.update(xts=xts, xpos=xpos, xval=xval, xhas=xhas)
+        if want_tail:
+            T = int(TOPN_TAIL)
+            tts = np.full((S, K, NB, T), _TS_MIN, np.int32)
+            tpos = np.zeros((S, K, NB, T), np.int32)
+            tval = np.zeros((S, K, NB, F, T), np.float32)
+            tvalid = np.zeros((S, K, NB, T), bool)
+            cell = (si_a * np.int64(K) + li_a) * np.int64(NB) + bi_a
+            o_t = np.lexsort((-comb_l, cell))  # per cell, newest first
+            co = cell[o_t]
+            startc = np.ones(co.size, bool)
+            startc[1:] = co[1:] != co[:-1]
+            cid = np.cumsum(startc) - 1
+            firstc = np.nonzero(startc)[0]
+            rank = np.arange(co.size) - (
+                firstc[cid] if co.size else np.zeros(0, np.int64)
+            )
+            keep = rank < T
+            rows_k, rk = o_t[keep], rank[keep]
+            sk, lk, bk = si_a[rows_k], li_a[rows_k], bi_a[rows_k]
+            tts[sk, lk, bk, rk] = ts_l[rows_k]
+            tpos[sk, lk, bk, rk] = pos_l[rows_k]
+            tval[sk, lk, bk, :, rk] = vals_l[rows_k]
+            tvalid[sk, lk, bk, rk] = True
+            fam_kw.update(tts=tts, tpos=tpos, tval=tval, tvalid=tvalid)
         bucket32 = bucket.astype(np.int32)
         if not sharded:
             stats, bitmap, bucket32 = stats[0], bitmap[0], bucket32[0]
+            fam_kw = {k: v[0] for k, v in fam_kw.items()}
         return pg.BucketAgg(
             stats=jnp.asarray(np.ascontiguousarray(stats)),
             bitmap=jnp.asarray(np.ascontiguousarray(bitmap)),
             bucket=jnp.asarray(np.ascontiguousarray(bucket32)),
             size=bsize,
+            **{
+                k: jnp.asarray(np.ascontiguousarray(v))
+                for k, v in fam_kw.items()
+            },
         )
 
     # -- the splice ---------------------------------------------------------

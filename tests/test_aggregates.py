@@ -24,6 +24,7 @@ from repro.core import (
     range_window,
     w_first,
     w_last,
+    w_sum,
     w_topn_freq,
 )
 from repro.core.aggregates import (
@@ -198,9 +199,12 @@ def test_registry_covers_every_agg_and_union_flags_match():
     assert tuple(a for a in Agg if AGG_SPECS[a].union_composable) == tuple(
         sorted(UNION_AGGS, key=list(Agg).index)
     )
-    # bucket-composable states are exactly what the bucket store persists
+    # every state family is bucket-composable: lanes/bitmap persist in the
+    # core stat arrays, extreme/tail in the merge-order state arrays the
+    # layout plans alongside (BucketPlan.extreme / .tail)
     for agg, spec in AGG_SPECS.items():
-        assert spec.bucket_composable == (spec.state in ("lanes", "bitmap")), agg
+        assert spec.bucket_composable, agg
+        assert spec.state in ("lanes", "bitmap", "extreme", "tail"), agg
 
 
 # ---------------------------------------------------------------------------
@@ -267,6 +271,122 @@ def test_first_topn_union_exact(mode, num_shards):
     # offline/online/sharded agreement must be *exact*, not tolerance-based
     for f, err in rep.per_feature.items():
         assert err == 0.0, f"{f}: max abs err {err} (expected exact)"
+
+
+PRIMARY_VIEW = FeatureView(
+    "primary_exact", DB.primary, {
+        "first_r": w_first(Col("amount"), range_window(500, bucket=64)),
+        "last_r": w_last(Col("amount"), range_window(500, bucket=64)),
+        "top1_r": w_topn_freq(
+            Col("amount"), range_window(400, bucket=64), n=0
+        ),
+        "top2_r": w_topn_freq(
+            Col("amount"), range_window(400, bucket=64), n=1
+        ),
+    },
+    database=DB,
+)
+
+
+@pytest.mark.parametrize("mode", ["naive", "preagg"])
+@pytest.mark.parametrize("num_shards", [None, 4])
+def test_first_topn_primary_bucket_exact(mode, num_shards):
+    """FIRST/LAST/TOPN over a plain (non-union) RANGE window compose from
+    the persisted merge-order bucket families on the pre-agg path —
+    exactly, matching the offline oracle row for row."""
+    tx, _, k = _union_workload(seed=31)
+    rep = verify_view(
+        PRIMARY_VIEW, tx, num_keys=k, capacity=256, num_buckets=64,
+        bucket_size=64, mode=mode, num_shards=num_shards,
+    )
+    assert rep.passed, rep.summary() + f" per-feature: {rep.per_feature}"
+    for f, err in rep.per_feature.items():
+        assert err == 0.0, f"{f}: max abs err {err} (expected exact)"
+
+
+def _evo_view(with_families):
+    feats = {"s": w_sum(Col("amount"), range_window(500, bucket=64))}
+    if with_families:
+        feats["first_r"] = w_first(
+            Col("amount"), range_window(500, bucket=64)
+        )
+        feats["top1_r"] = w_topn_freq(
+            Col("amount"), range_window(400, bucket=64), n=0
+        )
+    return FeatureView("evo", DB.primary, feats, database=DB)
+
+
+@pytest.mark.parametrize("num_shards", [None, 4])
+def test_merge_order_states_through_evolution(num_shards):
+    """Adding FIRST/TOPN to a live lanes-only plane plans the merge-order
+    bucket families mid-flight: the hot deploy rebuilds them from the
+    ring-retained history, and a subsequent capacity re-lay carries them —
+    both ending bit-identical to a cold rebuild + replay."""
+    from repro.core import ScenarioPlane
+
+    tx, _, k = _union_workload(seed=17)
+    o = np.lexsort((tx["ts"], tx["acct"]))
+    stream = {c: np.asarray(v)[o] for c, v in tx.items()}
+    kw = dict(
+        num_keys=k, num_shards=num_shards, capacity=256, num_buckets=64,
+        bucket_size=64,
+    )
+
+    plane = ScenarioPlane([_evo_view(False)], **kw)
+    assert plane.store.state.bagg.seq is None  # lanes-only: no families
+    plane.ingest(stream)
+
+    rep1 = plane.evolve([_evo_view(True)])  # families appear mid-flight
+    assert rep1.exact, rep1.summary()
+    bagg = plane.store.state.bagg
+    assert bagg.seq is not None and bagg.xts is not None
+    assert bagg.tts is not None
+
+    rep2 = plane.evolve([_evo_view(True)], capacity=384)  # carry path
+    assert rep2.exact, rep2.summary()
+
+    cold = ScenarioPlane([_evo_view(True)], **{**kw, "capacity": 384})
+    cold.ingest(stream)
+
+    q = {c: v[-16:] for c, v in stream.items()}
+    for mode in ("preagg", "naive"):
+        got = plane.query("evo", dict(q), mode=mode)
+        want = cold.query("evo", dict(q), mode=mode)
+        for f in ("first_r", "top1_r"):
+            np.testing.assert_array_equal(
+                np.asarray(got[f]), np.asarray(want[f]),
+                err_msg=f"{mode} {f}",
+            )
+        np.testing.assert_allclose(
+            np.asarray(got["s"]), np.asarray(want["s"]), rtol=1e-6
+        )
+
+    # the family state itself matches the cold rebuild wherever observable
+    # (fields of absent entries are don't-cares)
+    hb, cb = plane.store.state.bagg, cold.store.state.bagg
+    np.testing.assert_array_equal(np.asarray(hb.seq), np.asarray(cb.seq))
+    has = np.asarray(cb.xhas)
+    np.testing.assert_array_equal(np.asarray(hb.xhas), has)
+    for d in (0, 1):
+        m = has[..., d]
+        for nm in ("xts", "xpos"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(hb, nm))[..., d][m],
+                np.asarray(getattr(cb, nm))[..., d][m], err_msg=nm,
+            )
+        np.testing.assert_array_equal(
+            np.asarray(hb.xval)[..., d][m], np.asarray(cb.xval)[..., d][m]
+        )
+    valid = np.asarray(cb.tvalid)
+    np.testing.assert_array_equal(np.asarray(hb.tvalid), valid)
+    for nm in ("tts", "tpos"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(hb, nm))[valid],
+            np.asarray(getattr(cb, nm))[valid], err_msg=nm,
+        )
+    hv = np.moveaxis(np.asarray(hb.tval), -2, -1)  # (.., T, F) for masking
+    cv = np.moveaxis(np.asarray(cb.tval), -2, -1)
+    np.testing.assert_array_equal(hv[valid], cv[valid], err_msg="tval")
 
 
 def test_first_union_brute_force():

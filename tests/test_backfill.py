@@ -27,7 +27,9 @@ from repro.core import (
     Signature,
     range_window,
     w_count,
+    w_first,
     w_sum,
+    w_topn_freq,
 )
 from repro.core.layout import plan_layout
 from repro.data.synthetic import MULTITABLE_DB, multitable_stream
@@ -201,6 +203,61 @@ def test_refused_hash_lane_backfill_bit_exact(tabs):
     cold_q = cold.query("merchant_mix", probe)
     for f, v in hot_q.items():
         np.testing.assert_array_equal(np.asarray(v), np.asarray(cold_q[f]))
+
+
+def order_view() -> FeatureView:
+    """A view whose bucket state is the merge-order families (FIRST/TOPN
+    over range windows) — deployed onto a warm plane whose rings have
+    already aged out history, the families can only be rebuilt exactly
+    from offline history."""
+    w1h = range_window(3600, bucket=64)
+    return FeatureView(
+        name="order_mix",
+        features={
+            "amt_first_1h": w_first(Col("amount"), w1h),
+            "amt_top_1h": w_topn_freq(Col("amount"), w1h, n=0),
+        },
+        database=MULTITABLE_DB,
+    )
+
+
+@pytest.mark.parametrize("shards", [None, 4])
+def test_merge_order_family_backfill_bit_exact(tabs, shards):
+    views = multi_scenario_views()
+    target = views[:2] + [order_view()]
+
+    # without a source: the families are rebuilt from ring-retained rows
+    # only — a bucket deficit, not silence
+    plane = ScenarioPlane(views[:2], num_shards=shards, **KW)
+    warm(plane, tabs)
+    report = plane.evolve(target, capacity=GROWN_CAP)
+    assert not report.exact
+    assert any(d.target == "bucket" for d in report.deficits), (
+        report.deficits
+    )
+
+    # with the bridge: full-history re-derivation, bit-exact vs cold
+    plane2 = ScenarioPlane(views[:2], num_shards=shards, **KW)
+    warm(plane2, tabs)
+    src = BackfillSource(MULTITABLE_DB, tabs)
+    report2 = plane2.evolve(target, backfill=src, capacity=GROWN_CAP)
+    assert report2.exact, report2.notes
+    assert report2.backfilled
+
+    cold = ScenarioPlane(
+        target, num_shards=shards, **dict(KW, capacity=GROWN_CAP)
+    )
+    warm(cold, tabs)
+    assert states_equal(plane2, cold), "backfilled state != rebuild+replay"
+
+    probe = {c: v[:16] for c, v in tabs["transactions"].items()}
+    for mode in ("preagg", "naive"):
+        hot_q = plane2.query("order_mix", probe, mode=mode)
+        cold_q = cold.query("order_mix", probe, mode=mode)
+        for f, v in hot_q.items():
+            np.testing.assert_array_equal(
+                np.asarray(v), np.asarray(cold_q[f]), err_msg=f"{mode} {f}"
+            )
 
 
 # ---------------------------------------------------------------------------

@@ -239,6 +239,67 @@ def test_fold_levels_kernel_matches_ref(N, op):
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
 
 
+@pytest.mark.parametrize(
+    "N,tile_rows",
+    [
+        ((1 << 17) - 100, 512),  # just under the old VMEM cap, 2 tiles
+        ((1 << 17) + 1, 512),    # first size the old dispatcher refused
+        ((1 << 17) + 300, None), # non-pow2 straddle, default (single) tile
+        (1 << 17, 1024),         # exact old cap, tile == row count
+    ],
+)
+def test_fold_levels_tiled_straddles_old_cap(N, tile_rows):
+    """The grid-tiled kernel is exact right across the old 2^17 cutoff.
+
+    Forced-small ``tile_rows`` drives the multi-tile boundary carries
+    (lane-carry, row-straddle, whole-tile DMA) in interpret mode without
+    needing 10^7-row inputs; the ``None`` case covers the single-tile
+    shrink path on a non-pow2 size.
+    """
+    import zlib
+
+    rng = np.random.default_rng(zlib.crc32(f"straddle-{N}".encode()) % 2**31)
+    key = np.sort(rng.integers(0, 13, N)).astype(np.int32)
+    seg = _seg_starts(key)
+    x = jnp.asarray(rng.normal(size=N).astype(np.float32))
+    ref = fold_levels_ref(x, seg, "min")
+    pal = fold_levels(x, seg, op="min", impl="pallas", interpret=True,
+                      tile_rows=tile_rows)
+    assert pal.shape == (fold_num_levels(N), N)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_fold_levels_single_and_multi_tile_edges():
+    """Tile-edge shapes: exactly one tile, one row over, tiny tiles."""
+    import zlib
+
+    for N, tr in [(8 * 128, 8),        # rows == tile_rows exactly
+                  (8 * 128 + 1, 8),    # one element spills a new tile
+                  (128, 8),            # single row, single tile
+                  (3 * 128, 16)]:      # rows < tile_rows -> tile shrinks
+        rng = np.random.default_rng(zlib.crc32(f"edge-{N}-{tr}".encode()))
+        key = np.sort(rng.integers(0, 3, N)).astype(np.int32)
+        seg = _seg_starts(key)
+        x = jnp.asarray(rng.integers(-2**31, 2**31 - 1, N), jnp.int32)
+        ref = fold_levels_ref(x, seg, "or")
+        pal = fold_levels(x, seg, op="or", impl="pallas", interpret=True,
+                          tile_rows=tr)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_fold_levels_auto_has_no_size_cap():
+    """impl="auto" resolves to Pallas on TPU at ANY size — the old
+    ``_FOLD_PALLAS_MAX_ROWS`` fallback band (2^17..10^7) is gone."""
+    from repro.kernels.window_agg.ops import _resolve_fold_impl
+
+    for n in [1, 1 << 17, (1 << 17) + 1, 10**6, 10**7]:
+        assert _resolve_fold_impl(n, "tpu") == "pallas"
+        assert _resolve_fold_impl(n, "cpu") == "xla"
+    # explicit impl always wins
+    assert _resolve_fold_impl(10**7, "cpu", "pallas") == "pallas"
+    assert _resolve_fold_impl(100, "tpu", "xla") == "xla"
+
+
 def test_fold_levels_windowed_query_vs_bruteforce():
     """Levels + the two-gather idempotent query == brute-force window min."""
     from repro.core.windows import (

@@ -18,8 +18,11 @@ from repro.core import (
     range_window,
     rows_window,
     w_count,
+    w_first,
+    w_last,
     w_mean,
     w_sum,
+    w_topn_freq,
 )
 from repro.data.synthetic import FRAUD_SCHEMA
 from repro.obs import (
@@ -253,6 +256,47 @@ def test_preagg_hit_and_fallback_counters():
     assert hits.value(agg="sum") == 1
     assert falls.value(agg="count") == 1
     assert hits.value(agg="count") == 0
+
+
+def test_first_topn_preagg_hit_not_fallback():
+    """FIRST/LAST/TOPN over range windows compose from the merge-order
+    bucket families — the pre-agg path answers them with ZERO fallbacks
+    (the counter this used to light up)."""
+    tel = Telemetry()
+    view = FeatureView(
+        "mo", FRAUD_SCHEMA,
+        {
+            "f": w_first(AMT, range_window(600, bucket=64)),
+            "l": w_last(AMT, range_window(600, bucket=64)),
+            "t0": w_topn_freq(Col("mcc"), range_window(600, bucket=64), n=0),
+        },
+    )
+    with use_telemetry(tel):
+        svc = FeatureService.build("mo", view, num_keys=32, capacity=64)
+        svc.request(
+            {
+                "card": np.arange(4, dtype=np.int32),
+                "ts": np.full(4, 10_000),
+                "amount": np.ones(4, np.float32),
+                "mcc": np.zeros(4, np.int64),
+                "device": np.zeros(4, np.int64),
+                "geo": np.zeros(4, np.int64),
+            }
+        )
+    hits = tel.metrics.counter("preagg_hits_total", "", "1", labels=("agg",))
+    falls = tel.metrics.counter(
+        "preagg_fallback_total", "", "1", labels=("agg",)
+    )
+    for agg in ("first", "last", "topn_freq"):
+        assert hits.value(agg=agg) == 1, agg
+        assert falls.value(agg=agg) == 0, agg
+    # every ingest dispatch is counted by resolved implementation; the
+    # merge-order families route ingest down the split XLA path on any
+    # backend (the fused kernel covers only the six core arrays)
+    kd = tel.metrics.counter(
+        "kernel_dispatch_total", "", "1", labels=("kernel", "impl")
+    )
+    assert kd.value(kernel="fused_ingest", impl="xla") >= 1
 
 
 def test_compile_time_captured_once_per_trace():
